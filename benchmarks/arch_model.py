@@ -1,0 +1,125 @@
+"""Analytic baseline models: NVIDIA A100, Duality Cache, SIMDRAM.
+
+The paper measured the A100 with NSight (500-launch averages) and obtained
+DC/SIMDRAM runtimes from those papers' authors; neither raw source is
+available here, so these are roofline-style analytic models with documented
+per-kernel efficiency factors taken from the paper's own qualitative analysis
+(§VII-A/B/C: fir is bound by unaligned accesses; Tensor Cores reach high
+utilization only on large aligned GEMMs; DC pays warp-coordination overhead
+for unaligned loads and has no reduction tree; SIMDRAM pays DRAM latencies
+per bit-op but has massive column parallelism).  Reproduced ratios are
+reported NEXT TO the paper's claimed ratios in EXPERIMENTS.md — same-ballpark
+is the goal, exact equality is impossible without their traces.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+# ---------------------------------------------------------------------------
+# A100 (iso-area, iso-bandwidth: 826 mm² @7nm, 1866 GB/s HBM)
+# ---------------------------------------------------------------------------
+
+A100 = {
+    "hbm_bw": 1866e9,          # B/s (paper: same DRAM bandwidth as PIMSAB)
+    "int8_tc": 624e12,         # Tensor Core OPS
+    "int4_tc": 1248e12,
+    "int32_simt": 19.5e12,     # CUDA-core integer OPS
+    "l2_bytes": 40 * 2**20,
+    "sm_clock": 1.41e9,
+    "launch_us": 5.0,          # per-kernel launch/driver overhead
+    "idle_w": 110.0,           # static+uncore power under load, W
+    "dyn_j_per_gop_simt": 0.050,  # ~50 pJ/int-op incl. fetch/reg/L2 traffic
+    "dyn_j_per_gop_tc": 0.003,    # ~3 pJ/op on the Tensor Core datapath
+    "dram_j_per_gb": 0.080,    # ~10 pJ/bit HBM2e access energy
+}
+
+# Per-kernel efficiency factors, from the paper's measured behaviours.
+A100_EFF = {
+    # (compute_eff, bw_eff, engine)
+    "vecadd": (0.85, 0.88, "simt"),   # streaming, near-peak BW
+    "fir":    (0.60, 0.11, "simt"),   # sliding window → unaligned loads defeat
+                                      # coalescing (§VII-A: "prevents the GPU
+                                      # from fully utilizing memory bandwidth")
+    "gemv":   (0.70, 0.80, "simt"),   # BW-bound streaming of the matrix
+    "gemm":   (0.50, 0.85, "tc4"),    # int4 TC but N=32 tiles underfill (§VII-A:
+                                      # "almost the same performance as A100")
+    "conv2d": (0.012, 0.70, "tc8"),   # 9×9 spatial, batch 2: ~160 output
+                                      # positions → a handful of CTAs; the TC
+                                      # array is >98% idle on such shapes
+    "resnet18": (0.20, 0.70, "tc8"),  # mixed small layers + epilogues; batch-1
+                                      # inference is further launch-bound
+}
+
+
+def a100_time_energy(name: str, ops: float, bytes_moved: float, launches: int = 1) -> Dict:
+    ce, be, engine = A100_EFF[name]
+    peak = {"simt": A100["int32_simt"], "tc8": A100["int8_tc"], "tc4": A100["int4_tc"]}[engine]
+    t_compute = ops / (peak * ce)
+    t_mem = bytes_moved / (A100["hbm_bw"] * be)
+    t = max(t_compute, t_mem) + launches * A100["launch_us"] * 1e-6
+    dyn = (
+        ops / 1e9 * (A100["dyn_j_per_gop_tc"] if engine.startswith("tc") else A100["dyn_j_per_gop_simt"])
+        + bytes_moved / 1e9 * A100["dram_j_per_gb"]
+    )
+    e = dyn + A100["idle_w"] * t
+    return {"time_s": t, "energy_j": e, "bound": "mem" if t_mem > t_compute else "compute"}
+
+
+# ---------------------------------------------------------------------------
+# Duality Cache (ISCA'19): 1.14M bit-serial PEs @ 2.6 GHz, GPU-style SIMT
+# programming, no H-tree, no cross-CRAM shift.
+# ---------------------------------------------------------------------------
+
+DC = {
+    "pes": 1_140_000,
+    "clock": 2.6e9,
+    # fp32 bit-serial op costs (DC paper, transposed SRAM):
+    "fp32_add": 376, "fp32_mul": 1460, "int_add": 33, "cmp": 32,
+    # overhead factors from §VII-B observations:
+    "pack_overhead": {"backprop": 2.2, "dwt2d": 3.0, "gausselim": 5.5,
+                      "hotspot": 2.4, "hotspot3d": 2.6},
+    "dram_bw": 1866e9 / 2,  # DC rides a CPU LLC: lower external bandwidth
+}
+
+
+def dc_time(name: str, elems: float, flops_per_elem: float) -> float:
+    """Warp-style execution: elems/PEs waves, each paying bit-serial fp32
+    costs plus the measured packing/coordination overhead, serialized against
+    the (halved — LLC-attached) DRAM streaming of fp32 operands.  DC has no
+    H-tree / cross-CRAM shift, so packing overhead also hits the memory
+    phase (unaligned gathers)."""
+    waves = math.ceil(elems / DC["pes"])
+    cyc_per = flops_per_elem * (0.6 * DC["fp32_add"] + 0.4 * DC["fp32_mul"])
+    over = DC["pack_overhead"].get(name, 2.0)
+    t_compute = waves * cyc_per * over / DC["clock"]
+    # fp32 in+in+out; unaligned gathers cost a milder bandwidth penalty
+    t_dram = elems * 12 * 1.25 / DC["dram_bw"]
+    return t_compute + t_dram
+
+
+# ---------------------------------------------------------------------------
+# SIMDRAM (ASPLOS'21): 1-bank in-DRAM bit-serial (triple-row activation).
+# ---------------------------------------------------------------------------
+
+SIMDRAM = {
+    "columns": 65_536,          # one bank's bitlines
+    "t_rc_ns": 45.0,            # row-cycle time per AAP (activate-activate-
+                                # precharge) bulk step
+    # effective AAPs per 1-bit MAC with bulk MAJ ops and carry-save
+    # accumulation amortized across the row (SIMDRAM §5 op library):
+    "aaps_per_1bit_mac": 1.6,
+    "aaps_per_bit_add": 5,
+}
+
+
+def simdram_time(total_ops: float, prec: int, op: str = "mac") -> float:
+    waves = math.ceil(total_ops / SIMDRAM["columns"])
+    if op == "mac" and prec == 1:
+        steps = SIMDRAM["aaps_per_1bit_mac"]
+    elif op == "mac":
+        steps = prec * prec * 1.3 + prec * SIMDRAM["aaps_per_bit_add"]
+    else:
+        steps = prec * SIMDRAM["aaps_per_bit_add"]
+    return waves * steps * SIMDRAM["t_rc_ns"] * 1e-9

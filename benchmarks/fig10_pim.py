@@ -1,0 +1,108 @@
+"""Fig. 10: comparison with prior PIM systems.
+
+(a) PIMSAB-D (30 tiles, throughput-matched) vs Duality Cache on Rodinia;
+(b) PIMSAB-S (1 tile, PE-matched) vs SIMDRAM 1-bank on binarized DNNs.
+
+The paper obtained DC/SIMDRAM raw runtimes from those papers' authors; here
+both baselines are the analytic models in arch_model.py (documented
+constants), and PIMSAB-D/-S times come from our simulator on equivalent
+workload skeletons.  Paper claims: 3.7× (DC), 3.88× (SIMDRAM) geomean.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from benchmarks.arch_model import dc_time, simdram_time
+from benchmarks.pimsab_run import run_workload
+from repro.core.machine import PIMSAB_D, PIMSAB_S
+from repro.core.compiler.tensor_dsl import Loop, Ref, Workload
+
+# Rodinia kernels as (elements, flops/elem, fp32-equivalent bit-serial
+# precision) — fp32 bit-serial mul ≈ 24×26 mantissa cycles handled via an
+# equivalent integer-precision pair in our DSL (the simulator is integer).
+RODINIA = {
+    "backprop": dict(n=65_536 * 16, flops=4, kind="map"),
+    "dwt2d": dict(n=1024 * 1024, flops=6, kind="stencil"),
+    "gausselim": dict(n=256 * 256 * 128, flops=2, kind="map"),
+    "hotspot": dict(n=1024 * 1024 * 8, flops=5, kind="stencil"),
+    "hotspot3d": dict(n=512 * 512 * 8 * 4, flops=7, kind="stencil"),
+}
+
+FP32_EQ_PREC = 24  # mantissa width: dominant bit-serial cost of fp32 mul/add
+
+
+def _rodinia_workload(name: str, spec: Dict) -> Workload:
+    if spec["kind"] == "map":
+        return Workload(
+            name=name,
+            loops=(Loop("i", spec["n"], "data"),),
+            out=Ref("y", ("i",), prec=FP32_EQ_PREC),
+            ins=(Ref("a", ("i",), FP32_EQ_PREC), Ref("b", ("i",), FP32_EQ_PREC)),
+            op="map_mul",
+            acc_prec=2 * FP32_EQ_PREC,
+        )
+    return Workload(
+        name=name,
+        loops=(Loop("i", spec["n"], "data"), Loop("t", spec["flops"], "reduce")),
+        out=Ref("y", ("i",), prec=FP32_EQ_PREC),
+        ins=(
+            Ref("x", ("i",), FP32_EQ_PREC, stencil=spec["flops"]),
+            Ref("h", ("t",), FP32_EQ_PREC, is_const=True, stencil=spec["flops"]),
+        ),
+        op="stencil_mac",
+        acc_prec=2 * FP32_EQ_PREC,
+    )
+
+
+# Binarized networks (SIMDRAM comparison): total 1-bit MACs per inference.
+BINARIZED = {
+    "lenet": dict(macs=0.4e6, layers=4),
+    "vgg13": dict(macs=11.3e9, layers=13),
+    "vgg16": dict(macs=15.5e9, layers=16),
+}
+
+
+def _binarized_workload(name: str, spec: Dict) -> Workload:
+    # model the network as one big 1-bit GEMM with its total MAC count
+    k = 1024
+    m = max(256, int(spec["macs"] / k))
+    return Workload(
+        name=name,
+        loops=(Loop("x", m, "data"), Loop("k", k, "reduce")),
+        out=Ref("y", ("x",), prec=16),
+        ins=(Ref("a", ("x", "k"), 1), Ref("b", ("k",), 1)),
+        op="mac",
+        acc_prec=16,
+    )
+
+
+def run() -> List[Dict]:
+    rows = []
+    ratios_dc = []
+    for name, spec in RODINIA.items():
+        ours = run_workload(_rodinia_workload(name, spec), PIMSAB_D)["time_s"]
+        theirs = dc_time(name, spec["n"], spec["flops"])
+        ratios_dc.append(theirs / ours)
+        rows.append({"cmp": "duality-cache", "bench": name, "pimsab_d_s": ours,
+                     "dc_s": theirs, "speedup": theirs / ours})
+    gdc = math.exp(sum(math.log(r) for r in ratios_dc) / len(ratios_dc))
+    rows.append({"cmp": "duality-cache", "bench": "geomean", "speedup": gdc, "paper": 3.7})
+
+    ratios_sd = []
+    for name, spec in BINARIZED.items():
+        # per-layer SRAM↔DRAM activation turnaround (dominates LeNet — §VII-C)
+        ours = run_workload(_binarized_workload(name, spec), PIMSAB_S)["time_s"]
+        ours += spec["layers"] * 2e-6
+        theirs = simdram_time(spec["macs"], prec=1, op="mac") + spec["layers"] * 5e-6
+        ratios_sd.append(theirs / ours)
+        rows.append({"cmp": "simdram", "bench": name, "pimsab_s_s": ours,
+                     "simdram_s": theirs, "speedup": theirs / ours})
+    gsd = math.exp(sum(math.log(r) for r in ratios_sd) / len(ratios_sd))
+    rows.append({"cmp": "simdram", "bench": "geomean", "speedup": gsd, "paper": 3.88})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print({k: (f"{v:.3g}" if isinstance(v, float) else v) for k, v in r.items()})

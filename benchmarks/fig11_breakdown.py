@@ -1,0 +1,36 @@
+"""Fig. 11: per-benchmark time and energy breakdowns.
+
+Paper expectations: vecadd/gemv DRAM-dominated, fir ~60% DRAM, gemm/conv2d
+dominated by on-chip network traffic, resnet18 more compute-heavy than a
+standalone conv (elementwise layers at higher precision + inter-CRAM
+reduction under-utilization).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks import workloads
+from benchmarks.pimsab_run import run_many, run_workload
+
+
+def run() -> List[Dict]:
+    rows = []
+    for name, mk in workloads.MICROBENCHES.items():
+        r = run_workload(mk())
+        rows.append({
+            "bench": name,
+            "time_breakdown": {k: round(v, 3) for k, v in r["cycle_breakdown"].items()},
+            "energy_breakdown": {k: round(v, 3) for k, v in r["energy_breakdown"].items()},
+        })
+    r = run_many(workloads.resnet18_workloads())
+    rows.append({
+        "bench": "resnet18",
+        "time_breakdown": {k: round(v, 3) for k, v in r["cycle_breakdown"].items()},
+        "energy_breakdown": {},
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,60 @@
+"""Fig. 12: performance sensitivity to hardware parameters.
+
+(a) CRAM geometry at constant on-chip capacity (more/fewer PEs);
+(b) tiles vs CRAMs-per-tile at constant PE count;
+(c) DRAM bandwidth via mesh columns (controllers live on the top row).
+
+Paper findings to reproduce directionally: (a) 4× more PEs ⇒ only ~+2.6%
+(compute is <20% of time), fewer ⇒ ~−5.4%; (b) more tiles hurt ~8.2%, larger
+tiles ~+1.5%; (c) DRAM-bound kernels (vecadd, gemv) scale ~linearly with
+bandwidth, conv2d is flat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List
+
+from benchmarks import workloads
+from benchmarks.pimsab_run import run_workload
+from repro.core.machine import PIMSAB
+
+
+def _geomean_speedup(cfg) -> Dict[str, float]:
+    out = {}
+    for name, mk in workloads.MICROBENCHES.items():
+        base = run_workload(mk())["time_s"]
+        new = run_workload(mk(), cfg)["time_s"]
+        out[name] = base / new
+    out["geomean"] = math.exp(sum(math.log(v) for v in out.values()) / len(out))
+    return out
+
+
+def run() -> List[Dict]:
+    rows = []
+    # (a) CRAM geometry, constant capacity (rows×cols×count = const)
+    more_pes = dataclasses.replace(PIMSAB, cram_rows=128, cram_cols=128)  # 4× CRAM count
+    more_pes = dataclasses.replace(more_pes, crams_per_tile=1024)
+    fewer_pes = dataclasses.replace(PIMSAB, cram_rows=512, cram_cols=512, crams_per_tile=64)
+    rows.append({"config": "cram128x128_4xPEs", **_geomean_speedup(more_pes), "paper": "+2.6%"})
+    rows.append({"config": "cram512x512_quarterPEs", **_geomean_speedup(fewer_pes), "paper": "-5.4%"})
+    # (b) tiles vs CRAMs/tile at constant PEs
+    more_tiles = dataclasses.replace(PIMSAB, mesh_cols=24, mesh_rows=10, crams_per_tile=128)
+    fewer_tiles = dataclasses.replace(PIMSAB, mesh_cols=6, mesh_rows=10, crams_per_tile=512)
+    rows.append({"config": "240tiles_128crams", **_geomean_speedup(more_tiles), "paper": "-8.2%"})
+    rows.append({"config": "60tiles_512crams", **_geomean_speedup(fewer_tiles), "paper": "+1.5%"})
+    # (c) memory bandwidth via mesh columns
+    for cols in (6, 24):
+        cfg = dataclasses.replace(
+            PIMSAB, mesh_cols=cols,
+            mesh_rows=round(120 / cols),
+            dram_bw_bits=int(PIMSAB.dram_bw_bits * cols / 12),
+        )
+        rows.append({"config": f"meshcols{cols}_bw{cols/12:.1f}x", **_geomean_speedup(cfg),
+                     "paper": "membound ~linear"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print({k: (round(v, 3) if isinstance(v, float) else v) for k, v in r.items()})

@@ -1,0 +1,54 @@
+"""Fig. 13: sensitivity to workload size (×0.5 / ×2) and input precision
+(int4..int8).
+
+Paper: limited-reuse kernels scale ~linearly with size; DRAM-bound kernels
+(vecadd, gemv) are precision-flat between int5–int8 (DRAM layout aligns to a
+power of two) while compute/network-heavy kernels (fir, gemm, conv2d) scale
+~linearly with precision thanks to adaptive precision.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks import workloads
+from benchmarks.pimsab_run import run_workload
+
+
+def run() -> List[Dict]:
+    rows = []
+    # size sweep
+    sizes = {
+        "vecadd": lambda f: workloads.vecadd(n=int(15_728_640 * f)),
+        "fir": lambda f: workloads.fir(n=int(7_833_600 * f)),
+        "gemv": lambda f: workloads.gemv(m=int(61_440 * f)),
+        "gemm": lambda f: workloads.gemm(m=int(61_440 * f)),
+        "conv2d": lambda f: workloads.conv2d(cin=int(256 * f)),
+    }
+    for name, mk in sizes.items():
+        base = run_workload(mk(1.0))["time_s"]
+        rows.append({
+            "sweep": "size", "bench": name,
+            "x0.5": run_workload(mk(0.5))["time_s"] / base,
+            "x1": 1.0,
+            "x2": run_workload(mk(2.0))["time_s"] / base,
+        })
+    # precision sweep (int4..int8)
+    prec_mk = {
+        "vecadd": lambda p: workloads.vecadd(prec=p),
+        "gemv": lambda p: workloads.gemv(prec=p),
+        "gemm": lambda p: workloads.gemm(prec=p),
+        "conv2d": lambda p: workloads.conv2d(prec=p),
+        "fir": lambda p: workloads.fir(prec=2 * p),
+    }
+    for name, mk in prec_mk.items():
+        base = run_workload(mk(8))["time_s"]
+        row = {"sweep": "precision", "bench": name}
+        for p in (4, 5, 6, 7, 8):
+            row[f"int{p}"] = run_workload(mk(p))["time_s"] / base
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print({k: (round(v, 3) if isinstance(v, float) else v) for k, v in r.items()})

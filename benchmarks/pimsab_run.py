@@ -1,0 +1,57 @@
+"""Shared helper: compile a workload, simulate it on a PIMSAB config, return
+time/energy/breakdowns."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.compiler.codegen import compile_workload
+from repro.core.compiler.tensor_dsl import Workload
+from repro.core.machine import PIMSAB, PimsabConfig
+from repro.core.simulator import Simulator
+
+# Iso-area static power (§VI-B: "the static energy is normalized indirectly
+# to A100 through having the same area footprint and DRAM bandwidth") —
+# PIMSAB's die leaks like the A100's at the same 22nm-scaled area.
+PIMSAB_STATIC_W = 60.0
+
+
+def run_workload(w: Workload, cfg: PimsabConfig = PIMSAB, hand_tuned: bool = False) -> Dict:
+    if hand_tuned:
+        # hand-tuned kernels prefetch DRAM bursts and overlap the broadcast
+        # receive with compute (the Fig. 14 gap the compiler leaves on the
+        # table with its conservative synchronization)
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, dram_latency_cycles=0)
+    cp = compile_workload(w, cfg, hand_tuned=hand_tuned)
+    sim = Simulator(cfg)
+    res = sim.run(cp.program)
+    res.energy.pj["static"] = res.seconds(cfg) * PIMSAB_STATIC_W * (cfg.num_tiles / 120) * 1e12
+    return {
+        "name": w.name,
+        "time_s": res.seconds(cfg),
+        "cycles": res.total_cycles,
+        "cycle_breakdown": res.breakdown(),
+        "energy_j": res.energy.total_j,
+        "energy_breakdown": res.energy.breakdown(),
+        "mapping": cp.mapping.to_json(),
+        "instrs": res.instrs,
+    }
+
+
+def run_many(pairs: List[Tuple[Workload, int]], cfg: PimsabConfig = PIMSAB) -> Dict:
+    """Run a layer list (workload, repeats); sum time/energy."""
+    total_t, total_e = 0.0, 0.0
+    cyc = {}
+    for w, reps in pairs:
+        r = run_workload(w, cfg)
+        total_t += r["time_s"] * reps
+        total_e += r["energy_j"] * reps
+        for k, v in r["cycle_breakdown"].items():
+            cyc[k] = cyc.get(k, 0.0) + v * r["cycles"] * reps
+    tot = sum(cyc.values()) or 1.0
+    return {
+        "time_s": total_t,
+        "energy_j": total_e,
+        "cycle_breakdown": {k: v / tot for k, v in cyc.items()},
+    }

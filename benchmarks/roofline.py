@@ -1,0 +1,82 @@
+"""Roofline table: reads experiments/dryrun/*.json and renders §Roofline.
+
+Per (arch × shape × mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS (useful-compute ratio), and a one-line
+what-would-move-it note.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+MOVE_NOTES = {
+    "compute": "fewer HLO FLOPs: triangular attention scheduling / int8 bit-slice matmuls / drop remat recompute",
+    "memory": "fewer HBM bytes: chunked CE, int8 weights (bit-slice serving), fused dequant, larger per-step arithmetic intensity",
+    "collective": "cheaper collectives: keep reductions on the intra-pod axis (H-tree rule), overlap via systolic collective-matmul, int8 gradient compression",
+}
+
+
+def load(variant: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        v = rec.get("variant", "baseline")
+        if variant is None and v != "baseline":
+            continue
+        if variant is not None and v != variant:
+            continue
+        rows.append(rec)
+    return rows
+
+
+def table(rows: List[Dict]) -> List[Dict]:
+    out = []
+    for rec in rows:
+        base = {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"]}
+        if rec["status"] != "ok":
+            out.append({**base, "status": rec["status"],
+                        "note": rec.get("reason", rec.get("error", ""))[:90]})
+            continue
+        rl = rec["roofline"]
+        out.append({
+            **base,
+            "status": "ok",
+            "compute_s": rl["compute_s"],
+            "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"],
+            "dominant": rl["dominant"],
+            "model_flops_ratio": round(rl["useful_ratio"], 3),
+            "roofline_fraction": round(
+                max(rl["compute_s"], 1e-30) / max(rl["compute_s"], rl["memory_s"], rl["collective_s"]), 3
+            ),
+            "note": MOVE_NOTES[rl["dominant"]],
+        })
+    return out
+
+
+def render(rows: List[Dict]) -> str:
+    lines = [
+        f"{'arch':22s} {'shape':12s} {'mesh':11s} {'dom':10s} "
+        f"{'compute_s':>11s} {'memory_s':>11s} {'collect_s':>11s} {'useful':>7s} {'roof%':>6s}"
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:11s} {r['status']}: {r.get('note','')}")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:11s} {r['dominant']:10s} "
+            f"{r['compute_s']:11.3e} {r['memory_s']:11.3e} {r['collective_s']:11.3e} "
+            f"{r['model_flops_ratio']:7.3f} {r['roofline_fraction']:6.3f}"
+        )
+    return "\n".join(lines)
+
+
+def run() -> List[Dict]:
+    return table(load())
+
+
+if __name__ == "__main__":
+    print(render(run()))

@@ -1,0 +1,118 @@
+"""The paper's Table III benchmarks as tensor-DSL workloads."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core.compiler.tensor_dsl import Loop, Ref, Workload
+
+
+def vecadd(n: int = 15_728_640, prec: int = 8) -> Workload:
+    return Workload(
+        name="vecadd",
+        loops=(Loop("i", n, "data"),),
+        out=Ref("c", ("i",), prec=prec + 1),
+        ins=(Ref("a", ("i",), prec), Ref("b", ("i",), prec)),
+        op="map_add",
+        acc_prec=prec + 1,
+    )
+
+
+def fir(n: int = 7_833_600, taps: int = 32, prec: int = 16) -> Workload:
+    return Workload(
+        name="fir",
+        loops=(Loop("i", n, "data"), Loop("t", taps, "reduce")),
+        out=Ref("y", ("i",), prec=16),
+        ins=(
+            Ref("x", ("i",), prec, stencil=taps),
+            Ref("h", ("t",), prec, is_const=True, stencil=taps),
+        ),
+        op="stencil_mac",
+        acc_prec=16,
+    )
+
+
+def gemv(m: int = 61_440, k: int = 2048, prec: int = 8) -> Workload:
+    return Workload(
+        name="gemv",
+        loops=(Loop("x", m, "data"), Loop("k", k, "reduce")),
+        out=Ref("y", ("x",), prec=32),
+        ins=(Ref("a", ("x", "k"), prec), Ref("v", ("k",), prec)),
+        op="mac",
+        acc_prec=32,
+    )
+
+
+def gemm(m: int = 61_440, n: int = 32, k: int = 2048, prec: int = 4, acc: int = 16) -> Workload:
+    return Workload(
+        name="gemm",
+        loops=(Loop("x", m, "data"), Loop("y", n, "data"), Loop("k", k, "reduce")),
+        out=Ref("c", ("x", "y"), prec=acc),
+        ins=(Ref("a", ("x", "k"), prec), Ref("b", ("k", "y"), prec)),
+        op="mac",
+        acc_prec=acc,
+    )
+
+
+def conv2d(
+    hw: int = 9, cin: int = 256, n: int = 2, cout: int = 256, kk: int = 3, prec: int = 8
+) -> Workload:
+    m = hw * hw * n  # output positions (same-padded)
+    red = kk * kk * cin
+    return Workload(
+        name="conv2d",
+        loops=(Loop("p", m, "data"), Loop("co", cout, "data"), Loop("k", red, "reduce")),
+        out=Ref("o", ("p", "co"), prec=32),
+        ins=(Ref("im", ("p", "k"), prec), Ref("w", ("k", "co"), prec)),
+        op="mac",
+        acc_prec=32,
+    )
+
+
+def relu(n: int, prec: int = 8) -> Workload:
+    return Workload(
+        name="relu",
+        loops=(Loop("i", n, "data"),),
+        out=Ref("y", ("i",), prec=prec),
+        ins=(Ref("x", ("i",), prec), Ref("z", ("i",), prec, is_const=True)),
+        op="relu",
+        acc_prec=prec,
+    )
+
+
+# ResNet-18 @224×224, quantized int8 (MxNet model zoo) — per-layer im2col GEMMs.
+# (name, out_positions M, out_channels N, reduction K, repeats)
+RESNET18_LAYERS: List[Tuple[str, int, int, int, int]] = [
+    ("conv1_7x7s2", 112 * 112, 64, 7 * 7 * 3, 1),
+    ("layer1_3x3", 56 * 56, 64, 3 * 3 * 64, 4),
+    ("layer2_ds", 28 * 28, 128, 1 * 1 * 64, 1),
+    ("layer2_3x3a", 28 * 28, 128, 3 * 3 * 64, 1),
+    ("layer2_3x3", 28 * 28, 128, 3 * 3 * 128, 3),
+    ("layer3_ds", 14 * 14, 256, 1 * 1 * 128, 1),
+    ("layer3_3x3a", 14 * 14, 256, 3 * 3 * 128, 1),
+    ("layer3_3x3", 14 * 14, 256, 3 * 3 * 256, 3),
+    ("layer4_ds", 7 * 7, 512, 1 * 1 * 256, 1),
+    ("layer4_3x3a", 7 * 7, 512, 3 * 3 * 256, 1),
+    ("layer4_3x3", 7 * 7, 512, 3 * 3 * 512, 3),
+    ("fc", 1, 1000, 512, 1),
+]
+
+
+def resnet18_workloads() -> List[Tuple[Workload, int]]:
+    out = []
+    for name, m, n, k, reps in RESNET18_LAYERS:
+        w = dataclasses.replace(
+            gemm(m=m, n=n, k=k, prec=8, acc=32), name=f"resnet18/{name}"
+        )
+        out.append((w, reps))
+        out.append((relu(m * n, 8), reps))  # elementwise follow-up (higher prec, §VII-D)
+    return out
+
+
+MICROBENCHES = {
+    "vecadd": vecadd,
+    "fir": fir,
+    "gemv": gemv,
+    "gemm": gemm,
+    "conv2d": conv2d,
+}

@@ -1,0 +1,104 @@
+"""Render the data-driven sections of EXPERIMENTS.md from experiments/dryrun
+JSONs + the benchmark driver outputs.  Usage:
+
+    PYTHONPATH=src:. python scripts/render_experiments.py > experiments/tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+sys.path.insert(0, str(ROOT / "src"))
+
+from benchmarks import roofline  # noqa: E402
+
+
+def dryrun_section() -> str:
+    rows = roofline.load()
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    err = [r for r in rows if r["status"] == "error"]
+    lines = ["## §Dry-run", ""]
+    lines.append(
+        f"{len(ok)} cells lowered+compiled OK, {len(skipped)} documented skips "
+        f"(long_500k × full-attention archs), {len(err)} errors."
+    )
+    lines.append("")
+    lines.append(
+        "| arch | shape | mesh | status | peak GiB/dev (analytic) | corrected costs | collectives seen |"
+    )
+    lines.append("|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "ok":
+            mem = r["memory"]["analytic"]["analytic_peak_per_device"] / 2**30
+            corr = "yes" if "scan_correction" in r.get("cost", {}) and r["cost"]["scan_correction"].get("corrected", True) else "raw"
+            colls = ",".join(f"{k}×{v}" for k, v in sorted(r["collectives"]["counts"].items()))
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok ({r['compile_s']}s) "
+                f"| {mem:.2f} | {corr} | {colls or '—'} |"
+            )
+        else:
+            note = r.get("reason", r.get("error", ""))[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | — | — | {note} |")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    rows = [r for r in roofline.run() if r["mesh"] == "pod16x16"]
+    lines = ["## §Roofline (single-pod 16×16, per device per step; corrected costs)", ""]
+    lines.append(
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL/HLO flops | roofline frac | what moves the dominant term |"
+    )
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']} | — | — | {r.get('note','')[:70]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** | {r['model_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} | {r['note'][:80]} |"
+        )
+    return "\n".join(lines)
+
+
+def variants_section() -> str:
+    lines = ["## §Perf — variant measurements (hypothesis → change → before/after)", ""]
+    by_cell = {}
+    for f in sorted((ROOT / "experiments" / "dryrun").glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec["status"] != "ok":
+            continue
+        key = (rec["arch"], rec["shape"], rec["mesh"])
+        by_cell.setdefault(key, {})[rec.get("variant", "baseline")] = rec
+    lines.append("| cell | variant | compute_s | memory_s | collective_s | Δ dominant vs baseline |")
+    lines.append("|---|---|---|---|---|---|")
+    for key, variants in sorted(by_cell.items()):
+        if len(variants) < 2:
+            continue
+        base = variants.get("baseline")
+        for name, rec in sorted(variants.items()):
+            rl = rec["roofline"]
+            delta = ""
+            if base is not None and name != "baseline":
+                dom = base["roofline"]["dominant"]
+                b, v = base["roofline"][f"{dom}_s"], rl[f"{dom}_s"]
+                if b > 0:
+                    delta = f"{dom}: {v/b:.2f}×"
+            lines.append(
+                f"| {'/'.join(key)} | {name} | {rl['compute_s']:.3e} | {rl['memory_s']:.3e} "
+                f"| {rl['collective_s']:.3e} | {delta} |"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(dryrun_section())
+    print()
+    print(roofline_section())
+    print()
+    print(variants_section())

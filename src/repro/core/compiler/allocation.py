@@ -1,0 +1,113 @@
+"""CRAM buffer allocation + the three bit-serial-aware optimizations (§V-C).
+
+* adaptive precision — a-bit × b-bit product needs a+b bits; accumulating k
+  values adds ⌈log₂k⌉; overrides the program's declared i32 accumulators.
+* bit-level lifetime — a multiply feeding an accumulate keeps only a
+  half-width live window (Fig. 8a): the i-th product bit is final after i
+  cycles and is folded into the accumulator immediately.
+* fragmented allocation — operands may straddle non-contiguous free wordline
+  ranges (Fig. 8b); the allocator is first-fit over a free set and splits
+  buffers when no contiguous range exists.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+def adaptive_precision(pa: int, pb: int, k: int = 1, op: str = "mac") -> int:
+    """Minimum result precision (§V-C): mul → a+b; k-term accumulate → +⌈log₂k⌉."""
+    if op in ("map_add", "add"):
+        base = max(pa, pb) + 1
+    elif op in ("map_mul", "mul", "mac", "stencil_mac"):
+        base = pa + pb
+    elif op in ("relu", "maxpool", "copy"):
+        base = max(pa, pb)
+    else:
+        raise ValueError(op)
+    if op in ("mac", "stencil_mac") and k > 1:
+        base += math.ceil(math.log2(k))
+    return base
+
+
+def mul_live_window(p_mul: int) -> int:
+    """Half-width live window for mul-feeding-add (Fig. 8a)."""
+    return p_mul - p_mul // 2
+
+
+@dataclass
+class BufferReq:
+    name: str
+    wordlines: int           # after adaptive precision + lifetime
+    naive_wordlines: int     # the program-declared cost (for reporting)
+
+
+@dataclass
+class Allocation:
+    ranges: Dict[str, List[Tuple[int, int]]] = field(default_factory=dict)
+    used: int = 0
+    capacity: int = 256
+    feasible: bool = True
+    fragmented: bool = False
+    savings: Dict[str, int] = field(default_factory=dict)
+
+    def to_json(self):
+        return {
+            "ranges": self.ranges, "used": self.used, "capacity": self.capacity,
+            "feasible": self.feasible, "fragmented": self.fragmented,
+            "savings": self.savings,
+        }
+
+
+class WordlineAllocator:
+    """First-fit allocator over the 256 wordlines with explicit free-set and
+    fragment splitting."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self.free: List[Tuple[int, int]] = [(0, capacity)]  # [start, end)
+
+    def alloc(self, n: int) -> Optional[List[Tuple[int, int]]]:
+        # contiguous first
+        for i, (s, e) in enumerate(self.free):
+            if e - s >= n:
+                self.free[i] = (s + n, e)
+                if self.free[i][0] == self.free[i][1]:
+                    self.free.pop(i)
+                return [(s, s + n)]
+        # fragmented: gather pieces (divisible bit-serial operands, Fig. 8b)
+        total = sum(e - s for s, e in self.free)
+        if total < n:
+            return None
+        got: List[Tuple[int, int]] = []
+        need = n
+        while need > 0:
+            s, e = self.free.pop(0)
+            take = min(e - s, need)
+            got.append((s, s + take))
+            if take < e - s:
+                self.free.insert(0, (s + take, e))
+            need -= take
+        return got
+
+    def free_wordlines(self) -> int:
+        return sum(e - s for s, e in self.free)
+
+
+def allocate(
+    reqs: List[BufferReq], capacity: int = 256
+) -> Allocation:
+    alloc = Allocation(capacity=capacity)
+    wa = WordlineAllocator(capacity)
+    for r in sorted(reqs, key=lambda r: -r.wordlines):
+        got = wa.alloc(r.wordlines)
+        if got is None:
+            alloc.feasible = False
+            alloc.ranges[r.name] = []
+            continue
+        alloc.ranges[r.name] = got
+        alloc.fragmented |= len(got) > 1
+        alloc.used += r.wordlines
+        alloc.savings[r.name] = r.naive_wordlines - r.wordlines
+    return alloc

@@ -1,0 +1,134 @@
+"""Code generation: lower a distributed Mapping to the PIMSAB ISA (§V-D).
+
+The emitted stream is the per-tile SIMD program (every tile executes it on
+its own data slice; the simulator charges DRAM/NoC instructions with
+chip-total bits).  Schedules are conservative/synchronous — data-transfer
+phases serialize against compute, matching the paper's compiler (the Fig. 14
+hand-tuned gap comes exactly from this).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+from repro.core import isa
+from repro.core.compiler.allocation import mul_live_window
+from repro.core.compiler.distribute import Mapping, distribute
+from repro.core.compiler.tensor_dsl import Workload
+from repro.core.machine import PimsabConfig
+
+
+@dataclass
+class CompiledProgram:
+    program: List[isa.Instr]
+    mapping: Mapping
+
+    def __iter__(self):
+        return iter(self.program)
+
+
+def _addr(mapping: Mapping, name: str) -> int:
+    rng = mapping.allocation.ranges.get(name)
+    return rng[0][0] if rng else 0
+
+
+def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -> CompiledProgram:
+    m = distribute(w, cfg)
+    prog: List[isa.Instr] = []
+    pa = w.ins[0].prec
+    pb = w.ins[1].prec if len(w.ins) > 1 else pa
+    d = w.total_out_elems()
+    k = w.reduce_extent()
+    elems_per_step = m.tiles_used * m.lanes_used // m.reduce_split
+    a_addr, b_addr = _addr(m, "in_a"), _addr(m, "in_b")
+    out_addr = _addr(m, "out") or _addr(m, "acc")
+    tmp_addr = _addr(m, "mul_tmp")
+
+    # DRAM totals come from the mapping's reuse-aware model; each loop
+    # iteration moves its even share so emitted traffic == analytic traffic.
+    a_total = m.dram_split.get("a", 0.0)
+    b_total = m.dram_split.get("b", 0.0)
+    out_total = m.dram_split.get("out", 0.0)
+
+    if w.op in ("map_add", "map_mul", "relu"):
+        for step in range(m.serial_iters):
+            prog.append(isa.DramLoad(dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters), prec=pa))
+            if len(w.ins) > 1 and not w.ins[1].is_const:
+                prog.append(isa.DramLoad(dram_addr=0, cram_addr=b_addr, bits=int(b_total / m.serial_iters), prec=pb))
+            if w.op == "map_add":
+                prog.append(isa.Add(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, src2=b_addr, prec2=pb))
+            elif w.op == "map_mul":
+                prog.append(isa.Mul(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, src2=b_addr, prec2=pb))
+            else:  # relu: cmp against zero + predicated copy
+                prog.append(isa.CmpGE(dst=tmp_addr or 200, src1=a_addr, prec1=pa, src2=a_addr, prec2=pa))
+                prog.append(isa.SetMask(src=tmp_addr or 200))
+                prog.append(isa.Copy(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, pred=isa.Pred.MASK))
+            prog.append(isa.DramStore(dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters), prec=m.out_prec))
+
+    elif w.op == "mac":
+        p_mul = pa + pb
+        window = mul_live_window(p_mul)
+        k_lane = k // m.reduce_split
+        n_chunks = max(1, k_lane // m.k_chunk)
+        n_phases = m.serial_iters * n_chunks
+        for step in range(m.serial_iters):
+            for kc in range(n_chunks):
+                # data-parallel operand slice for this chunk
+                prog.append(isa.DramLoad(
+                    dram_addr=0, cram_addr=a_addr,
+                    bits=int(a_total / n_phases), prec=pa,
+                ))
+                if not w.ins[1].is_const:
+                    # shared operand: one DRAM load, systolic NoC broadcast,
+                    # H-tree shuffle-distribution to CRAMs (§III-B) — one
+                    # pipelined instruction; receive still serializes against
+                    # compute (the conservative §V sync the paper describes)
+                    prog.append(isa.DramLoad(
+                        dram_addr=0, cram_addr=b_addr,
+                        bits=int(b_total / n_phases), prec=pb,
+                        shf=isa.ShufflePattern.STRIDE,
+                        bcast_tiles=m.tiles_used,
+                    ))
+                for j in range(m.k_chunk):
+                    if w.ins[1].is_const:
+                        prog.append(isa.MulConst(
+                            dst=tmp_addr, prec_dst=window, src1=a_addr + j * pa, prec1=pa,
+                            reg=j % cfg.rf_regs,
+                        ))
+                    else:
+                        prog.append(isa.Mul(
+                            dst=tmp_addr, prec_dst=window, src1=a_addr + j * pa, prec1=pa,
+                            src2=b_addr + j * pb, prec2=pb,
+                        ))
+                    prog.append(isa.Add(
+                        dst=out_addr, prec_dst=m.out_prec, src1=out_addr, prec1=m.out_prec,
+                        src2=tmp_addr, prec2=p_mul,
+                    ))
+            if m.reduce_split > 1:
+                prog.append(isa.ReduceIntra(dst=out_addr, src=out_addr, prec=m.out_prec, size=min(m.reduce_split, cfg.cram_cols)))
+                if m.reduce_split > cfg.cram_cols:
+                    prog.append(isa.ReduceHTree(dst=out_addr, src=out_addr, prec=m.out_prec))
+            prog.append(isa.DramStore(
+                dram_addr=0, cram_addr=out_addr,
+                bits=int(out_total / m.serial_iters), prec=m.out_prec,
+            ))
+
+    elif w.op == "stencil_mac":
+        taps = max(r.stencil for r in w.ins)
+        # filter coefficients live in the RF (constants): mul_const path
+        for j in range(min(taps, cfg.rf_regs)):
+            prog.append(isa.RfLoad(reg=j, value=2 * j + 1))
+        for step in range(m.serial_iters):
+            prog.append(isa.DramLoad(dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters), prec=pa))
+            for j in range(taps):
+                if j:
+                    # slide the window one lane: cross-CRAM shift (§III-B)
+                    prog.append(isa.Shift(dst=a_addr, src=a_addr, prec=pa, amount=1))
+                prog.append(isa.MulConst(dst=tmp_addr, prec_dst=pa + pb, src1=a_addr, prec1=pa, reg=j % cfg.rf_regs))
+                prog.append(isa.Add(dst=out_addr, prec_dst=m.out_prec, src1=out_addr, prec1=m.out_prec, src2=tmp_addr, prec2=pa + pb))
+            prog.append(isa.DramStore(dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters), prec=m.out_prec))
+    else:
+        raise ValueError(w.op)
+
+    return CompiledProgram(prog, m)

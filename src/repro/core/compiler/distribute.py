@@ -1,0 +1,216 @@
+"""Parallelism distribution (§V-B): exhaustive search over tilings.
+
+Inter-tile: only *data-parallel* loops map across tiles (partial sums never
+cross tiles — the H-tree makes intra-tile reduction cheap, the NoC makes
+inter-tile reduction expensive).  Intra-tile: data loops map to the
+256 CRAMs × 256 bitlines; reduction loops either run serially per lane
+(accumulate in place) or split across lanes/CRAMs and fold through the
+intra-CRAM tree + H-tree.
+
+Each exploration point is checked against the two §V-B constraints
+(parallel degree ≤ lanes; CRAM buffer ≤ 256 wordlines after the §V-C
+optimizations) and scored by the two objectives in order: compute-resource
+occupancy, then DRAM traffic.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.machine import PimsabConfig
+from repro.core.compiler.tensor_dsl import Workload
+from repro.core.compiler.allocation import (
+    Allocation,
+    BufferReq,
+    adaptive_precision,
+    allocate,
+    mul_live_window,
+)
+
+
+@dataclass
+class Mapping:
+    workload: Workload
+    tiles_used: int
+    lanes_used: int           # bitlines busy per tile
+    serial_iters: int         # output chunks executed serially
+    k_chunk: int              # reduction chunk resident per serial step
+    reduce_split: int         # lanes the reduction is split across (1 = none)
+    out_prec: int             # adaptive-precision accumulator width
+    allocation: Allocation = field(default=None)
+    dram_bits: float = 0.0
+    dram_split: Dict[str, float] = field(default_factory=dict)  # a/b/out bits
+    occupancy: float = 0.0
+    notes: List[str] = field(default_factory=list)
+
+    def to_json(self):
+        return {
+            "workload": self.workload.name,
+            "tiles_used": self.tiles_used,
+            "lanes_used": self.lanes_used,
+            "serial_iters": self.serial_iters,
+            "k_chunk": self.k_chunk,
+            "reduce_split": self.reduce_split,
+            "out_prec": self.out_prec,
+            "occupancy": self.occupancy,
+            "dram_bits": self.dram_bits,
+            "allocation": self.allocation.to_json() if self.allocation else None,
+            "notes": self.notes,
+        }
+
+
+def _buffer_reqs(w: Workload, k_chunk: int, out_prec: int, use_lifetime: bool = True) -> List[BufferReq]:
+    """Per-bitline wordline requirements for one serial step (Fig. 7 model)."""
+    reqs: List[BufferReq] = []
+    pa = w.ins[0].prec
+    pb = w.ins[1].prec if len(w.ins) > 1 else pa
+    if w.op in ("map_add", "map_mul", "relu", "maxpool"):
+        reqs.append(BufferReq("in_a", pa, pa))
+        if len(w.ins) > 1 and not w.ins[1].is_const:
+            reqs.append(BufferReq("in_b", pb, pb))
+        reqs.append(BufferReq("out", out_prec, w.acc_prec))
+    elif w.op == "stencil_mac":
+        # the window slides via cross-CRAM lane shifts (§III-B) — only the
+        # current element + a shifting copy are resident; taps live in the RF
+        reqs.append(BufferReq("in_a", 2 * pa, 2 * pa))
+        reqs.append(BufferReq("acc", out_prec, w.acc_prec))
+        p_mul = pa + pb
+        window = mul_live_window(p_mul) if use_lifetime else p_mul
+        reqs.append(BufferReq("mul_tmp", window, p_mul))
+    elif w.op == "mac":
+        reqs.append(BufferReq("in_a", k_chunk * pa, k_chunk * pa))
+        if not w.ins[1].is_const:
+            reqs.append(BufferReq("in_b", k_chunk * pb, k_chunk * pb))
+        reqs.append(BufferReq("acc", out_prec, w.acc_prec))
+        p_mul = pa + pb
+        window = mul_live_window(p_mul) if use_lifetime else p_mul
+        reqs.append(BufferReq("mul_tmp", window, p_mul))
+    else:
+        raise ValueError(w.op)
+    return reqs
+
+
+def _dram_bits(w: Workload, cfg: PimsabConfig, tiles: int, bcast_b: bool) -> Dict[str, float]:
+    """Total chip DRAM traffic (bits) with reuse: broadcast operands loaded
+    once; data-parallel operands loaded once per element; out stored once.
+    Returns the per-stream split {a, b, out}."""
+    d = w.total_out_elems()
+    k = w.reduce_extent()
+    pa = w.ins[0].prec
+    split = {"a": 0.0, "b": 0.0, "out": float(d * w.out.prec)}
+    if w.op in ("map_add", "map_mul", "relu", "maxpool"):
+        split["a"] = d * pa
+        if len(w.ins) > 1 and not w.ins[1].is_const:
+            split["b"] = d * w.ins[1].prec
+    elif w.op == "stencil_mac":
+        split["a"] = d * pa  # each element loaded once; taps slide via shifts
+    else:
+        split["a"] = d * k * pa / max(_reuse_a(w), 1)  # loaded once per use÷reuse
+        if len(w.ins) > 1 and not w.ins[1].is_const:
+            pb = w.ins[1].prec
+            # b is the shared operand: one DRAM load + on-chip broadcast
+            split["b"] = k * pb * _reuse_b(w) if not bcast_b else k * pb * _b_width(w)
+    return split
+
+
+def _reuse_b(w: Workload) -> int:
+    return 1
+
+
+def _b_width(w: Workload) -> int:
+    """Distinct b columns (e.g. gemm N): b tensor is k×N loaded once."""
+    b_idx = {n.split(".")[0] for n in w.ins[1].index} if len(w.ins) > 1 else set()
+    width = 1
+    for l in w.data_loops:
+        if l.name.split(".")[0] in b_idx:
+            width *= l.extent
+    return width
+
+
+def _reuse_a(w: Workload) -> int:
+    """How many outputs reuse one `a` element (e.g. gemm: N columns)."""
+    a_idx = set(w.ins[0].index)
+    reuse = 1
+    for l in w.data_loops:
+        base = l.name.split(".")[0]
+        if base not in {n.split(".")[0] for n in a_idx}:
+            reuse *= l.extent
+    return reuse
+
+
+def _b_tiles(w: Workload) -> int:
+    """Distinct b-slices (broadcast granularity)."""
+    return 1
+
+
+def distribute(w: Workload, cfg: PimsabConfig) -> Mapping:
+    lanes = cfg.pes_per_tile  # 65536 bitlines per tile
+    d = w.total_out_elems()
+    k = w.reduce_extent()
+    pa = w.ins[0].prec
+    pb = w.ins[1].prec if len(w.ins) > 1 else pa
+
+    best: Optional[Mapping] = None
+    # --- exhaustive exploration (small space, §V-B) -----------------------
+    tile_options = [t for t in range(1, cfg.num_tiles + 1)]
+    for tiles in tile_options:
+        per_tile = -(-d // tiles)
+        for reduce_split in ([1] if w.op not in ("mac",) or k == 1 else [1, 16, 256]):
+            if k % reduce_split:
+                continue
+            lanes_needed = per_tile * reduce_split
+            lanes_used = min(lanes, lanes_needed)
+            serial = -(-lanes_needed // lanes)
+            k_per_lane = k // reduce_split
+            for k_chunk in _k_chunk_options(w, k_per_lane):
+                out_prec = adaptive_precision(pa, pb, k, w.op)
+                out_prec = min(out_prec, w.acc_prec)
+                reqs = _buffer_reqs(w, k_chunk, out_prec)
+                alloc = allocate(reqs, cfg.cram_rows)
+                if not alloc.feasible:
+                    continue
+                occ = (tiles * lanes_used) / (cfg.num_tiles * lanes)
+                dram = _dram_bits(w, cfg, tiles, bcast_b=True)
+                m = Mapping(
+                    workload=w, tiles_used=tiles, lanes_used=lanes_used,
+                    serial_iters=serial, k_chunk=k_chunk,
+                    reduce_split=reduce_split, out_prec=out_prec,
+                    allocation=alloc, dram_bits=sum(dram.values()),
+                    dram_split=dram, occupancy=occ,
+                )
+                if best is None or _better(m, best):
+                    best = m
+    if best is None:
+        raise RuntimeError(
+            f"{w.name}: no feasible parallelism distribution — the developer "
+            "must supply a more conservative loop organization (§V-A feedback)"
+        )
+    if best.reduce_split > 1:
+        best.notes.append(f"reduction split {best.reduce_split}x across lanes, folded via intra-CRAM tree + H-tree")
+    naive = sum(r.naive_wordlines for r in _buffer_reqs(w, best.k_chunk, w.acc_prec, use_lifetime=False))
+    opt = sum(r.wordlines for r in _buffer_reqs(w, best.k_chunk, best.out_prec))
+    best.notes.append(f"wordlines {naive}->{opt} after adaptive precision + bit-level lifetime")
+    return best
+
+
+def _k_chunk_options(w: Workload, k_per_lane: int) -> List[int]:
+    if w.op not in ("mac", "stencil_mac") or k_per_lane <= 1:
+        return [1]
+    divs = [d for d in range(1, min(k_per_lane, 64) + 1) if k_per_lane % d == 0]
+    return divs or [1]
+
+
+def _phases(m: Mapping) -> int:
+    k_lane = max(1, m.workload.reduce_extent() // m.reduce_split)
+    return m.serial_iters * max(1, k_lane // m.k_chunk)
+
+
+def _better(a: Mapping, b: Mapping) -> bool:
+    """Primary: occupancy; secondary: DRAM traffic; tertiary: fewer transfer
+    phases (each phase pays DRAM burst latency + broadcast serialization)."""
+    if abs(a.occupancy - b.occupancy) > 1e-9:
+        return a.occupancy > b.occupancy
+    if abs(a.dram_bits - b.dram_bits) > 1:
+        return a.dram_bits < b.dram_bits
+    return _phases(a) < _phases(b)

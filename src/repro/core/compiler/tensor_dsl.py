@@ -1,0 +1,105 @@
+"""Tensor-expression DSL (§V-A) — the TVM-style front end, reduced to the
+algebra the paper evaluates: elementwise maps, MAC reductions (gemv/gemm/
+conv via im2col), and stencils (fir).
+
+A Workload is loops + tensor refs + one op kind.  Scheduling = loop
+organization: ``split`` and ``reorder`` produce new loop lists; binding to
+hardware levels is the *compiler's* job (distribute.py), with the user's loop
+order acting as the hint (§V: developers control organization/layout, the
+compiler controls parallelism distribution + buffers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Loop:
+    name: str
+    extent: int
+    kind: str = "data"  # "data" | "reduce"
+
+
+@dataclass(frozen=True)
+class Ref:
+    """Tensor reference: which loops index it, at what precision (bits)."""
+    name: str
+    index: Tuple[str, ...]  # loop names, row-major
+    prec: int = 8
+    is_const: bool = False  # scalar/constant operand → RF + mul_const path
+    const_value: Optional[int] = None
+    stencil: int = 0        # fir/conv taps indexed via shifted loads
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    loops: Tuple[Loop, ...]
+    out: Ref
+    ins: Tuple[Ref, ...]
+    op: str  # "map_add" | "map_mul" | "mac" | "stencil_mac" | "relu" | "maxpool"
+    acc_prec: int = 32  # the *program's* accumulator precision (pre-adaptive)
+
+    def loop(self, name: str) -> Loop:
+        for l in self.loops:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    @property
+    def data_loops(self) -> List[Loop]:
+        return [l for l in self.loops if l.kind == "data"]
+
+    @property
+    def reduce_loops(self) -> List[Loop]:
+        return [l for l in self.loops if l.kind == "reduce"]
+
+    def total_out_elems(self) -> int:
+        n = 1
+        for l in self.data_loops:
+            n *= l.extent
+        return n
+
+    def reduce_extent(self) -> int:
+        n = 1
+        for l in self.reduce_loops:
+            n *= l.extent
+        return n
+
+
+# ---------------------------------------------------------------------------
+# schedule primitives
+# ---------------------------------------------------------------------------
+
+
+def split(w: Workload, name: str, factor: int) -> Workload:
+    """loop → (name.o, name.i) with extents (extent/factor, factor)."""
+    new_loops: List[Loop] = []
+    for l in w.loops:
+        if l.name == name:
+            assert l.extent % factor == 0, (l, factor)
+            new_loops.append(Loop(f"{name}.o", l.extent // factor, l.kind))
+            new_loops.append(Loop(f"{name}.i", factor, l.kind))
+        else:
+            new_loops.append(l)
+
+    def fix(r: Ref) -> Ref:
+        if name in r.index:
+            idx = []
+            for n in r.index:
+                if n == name:
+                    idx += [f"{name}.o", f"{name}.i"]
+                else:
+                    idx.append(n)
+            return replace(r, index=tuple(idx))
+        return r
+
+    return replace(w, loops=tuple(new_loops), out=fix(w.out), ins=tuple(fix(r) for r in w.ins))
+
+
+def reorder(w: Workload, order: Sequence[str]) -> Workload:
+    by_name = {l.name: l for l in w.loops}
+    assert set(order) == set(by_name), (order, list(by_name))
+    return replace(w, loops=tuple(by_name[n] for n in order))

@@ -1,0 +1,205 @@
+"""Functional bit-serial CRAM: a (wordlines × bitlines) bit array + one PE per
+bitline, executing the Neural-Cache-style bit-serial algorithms exactly.
+
+Every method returns the cycle count it consumed (== micro-ops issued): one
+``pe_step`` across the bitline vector per cycle, exactly how the hardware
+walks wordlines.  timing.py mirrors these counts analytically; tests assert
+the functional results equal plain integer arithmetic AND that cycles match
+the paper's formulas (add: P+1, mul: ~b·(a+2), mul_const: set-bits·(a+2)).
+
+Layout: transposed.  An operand of precision P at wordline base `addr`
+occupies rows [addr, addr+P), LSB first, two's complement, one element per
+bitline.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.pe import pe_step
+
+
+class Cram:
+    def __init__(self, rows: int = 256, cols: int = 256):
+        self.rows, self.cols = rows, cols
+        self.bits = np.zeros((rows, cols), np.uint8)
+        self.carry = np.zeros(cols, np.uint8)
+        self.mask = np.ones(cols, np.uint8)
+
+    # ---- transposed I/O (the DRAM-controller transpose unit) -------------
+
+    def write(self, addr: int, values: np.ndarray, prec: int) -> None:
+        v = np.asarray(values, np.int64) & ((1 << prec) - 1)
+        n = min(len(v), self.cols)
+        for i in range(prec):
+            self.bits[addr + i, :n] = (v[:n] >> i) & 1
+
+    def read(self, addr: int, prec: int, signed: bool = True, n: Optional[int] = None) -> np.ndarray:
+        n = self.cols if n is None else n
+        acc = np.zeros(n, np.int64)
+        for i in range(prec):
+            acc |= self.bits[addr + i, :n].astype(np.int64) << i
+        if signed:
+            sign = (acc >> (prec - 1)) & 1
+            acc = acc - (sign << prec)
+        return acc
+
+    # ---- helpers ----------------------------------------------------------
+
+    def _bit(self, base: int, i: int, prec: int, signed: bool = True) -> np.ndarray:
+        """i-th bit of the operand at `base` with sign extension beyond prec."""
+        if i < prec:
+            return self.bits[base + i]
+        return self.bits[base + prec - 1] if signed else np.zeros(self.cols, np.uint8)
+
+    # ---- compute (each returns cycles) ------------------------------------
+
+    def copy(self, dst: int, src: int, prec: int) -> int:
+        for i in range(prec):
+            self.bits[dst + i] = self.bits[src + i]
+        return prec
+
+    def logical(self, dst: int, a: int, b: int, prec: int, op: str) -> int:
+        for i in range(prec):
+            r, self.carry = pe_step(self.bits[a + i], self.bits[b + i], self.carry, self.mask, op)
+            self.bits[dst + i] = r
+        return prec
+
+    def set_mask(self, src: int) -> int:
+        self.mask = self.bits[src].copy()
+        return 1
+
+    def add(
+        self, dst: int, a: int, b: int, pa: int, pb: int, pd: int,
+        cen: bool = False, cst: bool = True, pred: str = "none", negate_b: bool = False,
+    ) -> int:
+        """dst[pd] = a[pa] + b[pb] (ripple, one bit per cycle).  cen/cst are
+        the bit-slicing carry-enable/carry-store fields; negate_b gives sub."""
+        carry = self.carry if cen else (np.ones(self.cols, np.uint8) if negate_b else np.zeros(self.cols, np.uint8))
+        cycles = 0
+        for i in range(pd):
+            abit = self._bit(a, i, pa)
+            bbit = self._bit(b, i, pb)
+            if negate_b:
+                bbit = 1 - bbit
+            old = self.bits[dst + i]
+            r, carry = pe_step(abit, bbit, carry, self.mask, "add", pred, old)
+            self.bits[dst + i] = r
+            cycles += 1
+        if cst:
+            self.carry = carry.astype(np.uint8)
+        # pd == max(pa,pb)+1 for a full add, so the loop count IS the paper's
+        # P+1 formula; bit-sliced chunks (smaller pd) cost pd as well.
+        return cycles
+
+    def sub(self, dst: int, a: int, b: int, pa: int, pb: int, pd: int) -> int:
+        return self.add(dst, a, b, pa, pb, pd, negate_b=True)
+
+    def cmp_ge(self, dst: int, a: int, b: int, prec: int) -> int:
+        """dst (1 bit) = (a >= b), via the sign of a - b."""
+        scratch = dst + 1  # callers reserve prec+1 rows at dst
+        carry = np.ones(self.cols, np.uint8)
+        sign = np.zeros(self.cols, np.uint8)
+        for i in range(prec + 1):
+            abit = self._bit(a, i, prec)
+            bbit = 1 - self._bit(b, i, prec)
+            sign, carry = pe_step(abit, bbit, carry, self.mask, "add")
+        self.bits[dst] = 1 - sign
+        del scratch
+        return prec + 2
+
+    def mul(self, dst: int, a: int, b: int, pa: int, pb: int, pd: int) -> int:
+        """Signed shift-add multiply (predicated adds — Neural Cache §4.3).
+
+        cycles ≈ Σ_j (pa + 2): per partial product one set_mask + a ripple add
+        of `a` (sign-extended) into dst at offset j, predicated on bit j of b.
+        The top bit of b has negative weight (two's complement) → subtract.
+        """
+        cycles = 0
+        for i in range(pd):
+            self.bits[dst + i] = 0
+        saved_mask = self.mask.copy()
+        for j in range(min(pb, pd)):
+            self.mask = self.bits[b + j]
+            cycles += 1  # set_mask
+            negate = j == pb - 1  # negative weight of the sign bit
+            carry = np.ones(self.cols, np.uint8) if negate else np.zeros(self.cols, np.uint8)
+            for i in range(pd - j):
+                abit = self._bit(a, i, pa)
+                if negate:
+                    abit = 1 - abit
+                old = self.bits[dst + j + i]
+                r, carry = pe_step(abit, old, carry, self.mask, "add", "mask", old)
+                self.bits[dst + j + i] = r
+                cycles += 1
+            cycles += 1  # carry commit
+        self.mask = saved_mask
+        return cycles
+
+    def mul_const(self, dst: int, a: int, const: int, pa: int, pd: int) -> int:
+        """dst = a * const with zero-bit skipping: only set bits of |const|
+        issue a ripple add (paper: z·(a+2) cycles)."""
+        cycles = 0
+        for i in range(pd):
+            self.bits[dst + i] = 0
+        neg = const < 0
+        c = -const if neg else const
+        j = 0
+        while c:
+            if c & 1:
+                carry = np.zeros(self.cols, np.uint8)
+                for i in range(pd - j):
+                    abit = self._bit(a, i, pa)
+                    old = self.bits[dst + j + i]
+                    r, carry = pe_step(abit, old, carry, self.mask, "add")
+                    self.bits[dst + j + i] = r
+                    cycles += 1
+                cycles += 2  # micro-op setup + carry commit
+            c >>= 1
+            j += 1
+        if neg:  # negate the result: invert + add 1
+            carry = np.ones(self.cols, np.uint8)
+            zero = np.zeros(self.cols, np.uint8)
+            for i in range(pd):
+                r, carry = pe_step(1 - self.bits[dst + i], zero, carry, self.mask, "add")
+                self.bits[dst + i] = r
+                cycles += 1
+        return cycles
+
+    def shift_lanes(self, dst: int, src: int, prec: int, amount: int) -> int:
+        """Cross-bitline shift: lane c receives lane c-amount (one wordline
+        per cycle over the PE-to-PE connections)."""
+        for i in range(prec):
+            row = self.bits[src + i]
+            out = np.zeros_like(row)
+            if amount >= 0:
+                out[amount:] = row[: self.cols - amount]
+            else:
+                out[:amount] = row[-amount:]
+            self.bits[dst + i] = out
+        return prec
+
+    def reduce_intra(self, dst: int, src: int, prec: int, size: int) -> int:
+        """Tree-reduce `size` lanes into lane 0 (log2 stages of shift+add).
+
+        Values are sign-extended to the final precision prec+log2(size) up
+        front, then every stage is a fixed-width add (the paper's cost model
+        instead grows precision per stage — timing.py follows the paper; the
+        delta is a few cycles and the results are bit-exact).
+        Needs 2·(prec+log2 size) free wordlines at dst."""
+        assert size & (size - 1) == 0
+        cycles = 0
+        stages = int(np.log2(size))
+        pf = prec + stages
+        if src != dst:
+            cycles += self.copy(dst, src, prec)
+        for i in range(prec, pf):  # sign-extend in place
+            self.bits[dst + i] = self.bits[dst + prec - 1]
+            cycles += 1
+        scratch = dst + pf
+        for s in range(stages):
+            # partner lanes sit 2^s apart; shift them down and add pairwise
+            cycles += self.shift_lanes(scratch, dst, pf, -(1 << s))
+            cycles += self.add(dst, dst, scratch, pf, pf, pf)
+        return cycles

@@ -1,0 +1,45 @@
+"""Intra-tile static H-tree network model (§III-A, §IV-B).
+
+256 CRAMs are leaves of a binary H-tree (8 levels); switches are buffered
+5-port crossbars configured per communication pattern.  Functional reduction
+order (pairwise, adjacent-first) matches kernels/htree_reduce.py and
+dist/collectives.htree_allreduce — one summation order across all three
+layers, so numerics agree everywhere.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import numpy as np
+
+from repro.core.machine import PimsabConfig
+from repro.core import timing
+
+
+def levels(cfg: PimsabConfig) -> int:
+    return int(math.log2(cfg.crams_per_tile))
+
+
+def reduce_cycles(cfg: PimsabConfig, prec: int) -> int:
+    return timing.cycles_htree_reduce(cfg, prec)
+
+
+def bcast_cycles(cfg: PimsabConfig, bits: int) -> int:
+    return timing.cycles_htree_bcast(cfg, bits)
+
+
+def reduce_functional(values: List[np.ndarray]) -> np.ndarray:
+    """Pairwise tree sum of per-CRAM vectors (H-tree order)."""
+    vals = [np.asarray(v, np.int64) for v in values]
+    n = len(vals)
+    assert n & (n - 1) == 0, n
+    while len(vals) > 1:
+        vals = [vals[i] + vals[i + 1] for i in range(0, len(vals), 2)]
+    return vals[0]
+
+
+def reconfig_cycles(cfg: PimsabConfig) -> int:
+    """Switch reconfiguration on a new communication pattern (rare; 2
+    config bits per output port, loaded down the tree)."""
+    return levels(cfg) + 2

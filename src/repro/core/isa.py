@@ -1,0 +1,206 @@
+"""The PIMSAB ISA (§IV-A) as typed instructions.
+
+Programs are lists of instructions; each carries the tile set it is issued to
+(the per-tile instruction controller broadcasts micro-ops to that tile's
+CRAMs, which execute in SIMD lock-step).
+
+Addresses are *wordline* indices inside a CRAM (data is transposed: an
+operand of precision P at bitline b occupies wordlines [addr, addr+P) of
+column b).  ``size`` is the number of bitlines involved across the tile.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple, Union
+
+
+class Pred(enum.Enum):
+    NONE = "none"
+    MASK = "mask"    # predicate on the PE mask latch
+    CARRY = "carry"  # predicate on the PE carry latch
+
+
+class ShufflePattern(enum.Enum):
+    """`shf` field of load_bcast / tile_bcast (§IV-B shuffle logic)."""
+    NONE = "none"            # contiguous
+    REPLICATE = "replicate"  # scalar duplicated on every bitline
+    STRIDE = "stride"        # element e → CRAM e, duplicated across bitlines
+    INTERLEAVE = "interleave"
+
+
+@dataclass(frozen=True)
+class Instr:
+    tiles: Tuple[int, ...] = ()  # empty = all tiles
+
+
+# --- compute -------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Compute(Instr):
+    dst: int = 0
+    prec_dst: int = 8
+    src1: int = 0
+    prec1: int = 8
+    src2: Optional[int] = None
+    prec2: int = 8
+    pred: Pred = Pred.NONE
+    size: Optional[int] = None  # bitlines involved (None = all)
+
+
+@dataclass(frozen=True)
+class Add(Compute):
+    cen: bool = False  # use stored carry as carry-in (bit-slicing)
+    cst: bool = False  # store carry-out (bit-slicing)
+
+
+@dataclass(frozen=True)
+class Sub(Compute):
+    pass
+
+
+@dataclass(frozen=True)
+class Mul(Compute):
+    pass
+
+
+@dataclass(frozen=True)
+class Logical(Compute):
+    op: str = "and"  # and | or | xor | not
+
+
+@dataclass(frozen=True)
+class Copy(Compute):
+    pass
+
+
+@dataclass(frozen=True)
+class CmpGE(Compute):
+    """dst(1 bit) = src1 >= src2 — used for ReLU/pooling predication."""
+
+
+@dataclass(frozen=True)
+class SetMask(Instr):
+    """Copy a wordline into the PE mask latches (§IV-A)."""
+    src: int = 0
+
+
+@dataclass(frozen=True)
+class ReduceIntra(Instr):
+    """Tree-reduce the `size` bitlines of each CRAM to bitline 0 (log2 steps
+    of cross-bitline shift + add)."""
+    dst: int = 0
+    src: int = 0
+    prec: int = 8
+    size: int = 256
+
+
+@dataclass(frozen=True)
+class ReduceHTree(Instr):
+    """Reduce across the CRAMs of a tile over the H-tree into one CRAM."""
+    dst: int = 0
+    src: int = 0
+    prec: int = 8
+
+
+@dataclass(frozen=True)
+class Shift(Instr):
+    """Cross-bitline (and cross-CRAM via the ring) shift by `amount` lanes."""
+    dst: int = 0
+    src: int = 0
+    prec: int = 8
+    amount: int = 1
+
+
+# --- RF / constants -------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RfLoad(Instr):
+    reg: int = 0
+    value: int = 0
+
+
+@dataclass(frozen=True)
+class MulConst(Compute):
+    """dst = src1 * RF[reg] with zero-bit skipping (§IV-B)."""
+    reg: int = 0
+
+
+@dataclass(frozen=True)
+class AddConst(Compute):
+    reg: int = 0
+
+
+# --- data transfer --------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DramLoad(Instr):
+    dram_addr: int = 0
+    cram_addr: int = 0
+    bits: int = 0              # payload size
+    prec: int = 8
+    tr: bool = True            # run through the transpose unit
+    shf: ShufflePattern = ShufflePattern.NONE
+    bcast_tiles: int = 1       # >1: systolic broadcast to this many tiles
+
+
+@dataclass(frozen=True)
+class DramStore(Instr):
+    dram_addr: int = 0
+    cram_addr: int = 0
+    bits: int = 0
+    prec: int = 8
+    tr: bool = True
+
+
+@dataclass(frozen=True)
+class TileBcast(Instr):
+    """One tile broadcasts a CRAM region to `n_dest` tiles (systolic)."""
+    src_tile: int = 0
+    n_dest: int = 1
+    bits: int = 0
+    shf: ShufflePattern = ShufflePattern.NONE
+
+
+@dataclass(frozen=True)
+class TileSend(Instr):
+    """Point-to-point tile→tile transfer (blocks receiver until data lands)."""
+    src_tile: int = 0
+    dst_tile: int = 0
+    bits: int = 0
+
+
+@dataclass(frozen=True)
+class CramBcast(Instr):
+    """One CRAM broadcasts to all CRAMs in its tile over the H-tree."""
+    src_cram: int = 0
+    bits: int = 0
+    shf: ShufflePattern = ShufflePattern.NONE
+
+
+@dataclass(frozen=True)
+class CramCopy(Instr):
+    src_cram: int = 0
+    dst_cram: int = 0
+    bits: int = 0
+
+
+# --- sync -----------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Signal(Instr):
+    src_tile: int = 0
+    dst_tile: int = 0
+
+
+@dataclass(frozen=True)
+class Wait(Instr):
+    tile: int = 0
+    src_tile: int = 0
+
+
+Program = Sequence[Instr]

@@ -1,0 +1,45 @@
+"""2D-mesh NoC model: X-Y wormhole routing, DRAM controllers on the top row
+(§III-A), systolic broadcast (§III-B)."""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+from repro.core.machine import PimsabConfig
+from repro.core import timing
+
+
+def tile_xy(cfg: PimsabConfig, tile: int) -> Tuple[int, int]:
+    return tile % cfg.mesh_cols, tile // cfg.mesh_cols
+
+
+def hops(cfg: PimsabConfig, src: int, dst: int) -> int:
+    sx, sy = tile_xy(cfg, src)
+    dx, dy = tile_xy(cfg, dst)
+    return abs(sx - dx) + abs(sy - dy)
+
+
+def dram_hops(cfg: PimsabConfig, tile: int) -> int:
+    """Distance to the nearest top-row memory controller (same column)."""
+    _, y = tile_xy(cfg, tile)
+    return y
+
+
+def avg_dram_hops(cfg: PimsabConfig) -> float:
+    return sum(dram_hops(cfg, t) for t in range(cfg.num_tiles)) / cfg.num_tiles
+
+
+def p2p_cycles(cfg: PimsabConfig, src: int, dst: int, bits: int) -> int:
+    return timing.cycles_noc_p2p(cfg, bits, hops(cfg, src, dst))
+
+
+def systolic_bcast_cycles(cfg: PimsabConfig, bits: int, n_dest: int) -> int:
+    return timing.cycles_noc_systolic_bcast(cfg, bits, n_dest)
+
+
+def naive_bcast_cycles(cfg: PimsabConfig, src: int, dests: List[int], bits: int) -> int:
+    return timing.cycles_noc_naive_bcast(cfg, bits, [hops(cfg, src, d) for d in dests])
+
+
+def bisection_bits_per_cycle(cfg: PimsabConfig) -> int:
+    return cfg.mesh_cols * cfg.t2t_bw_bits

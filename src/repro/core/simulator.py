@@ -1,0 +1,190 @@
+"""PIMSAB simulator: executes ISA programs.
+
+Two coupled modes, selected per run:
+
+* ``timing``     (always on) — analytic cycle & energy accounting per
+  instruction using core.timing / core.energy / core.noc; produces the
+  Fig-11-style per-category breakdowns at full machine scale.
+* ``functional`` (small machines / tests) — bit-exact execution on
+  core.cram.Cram state, lazily allocating CRAMs as instructions touch them.
+
+The timing model charges each *tile's* instruction stream; tiles run the same
+SIMD program (the compiler emits one stream, §III-A), so chip time = one
+tile's serial time + serialized DRAM/NoC phases where the program says so.
+Compute/transfer overlap is modeled by the compiler emitting explicit phases
+(synchronous conservative schedule — matches the paper's compiler, Fig. 14
+discussion, which also serializes receive-vs-compute).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import isa, noc, timing
+from repro.core.cram import Cram
+from repro.core.energy import EnergyLedger
+from repro.core.machine import PimsabConfig
+
+
+@dataclass
+class SimResult:
+    cycles: Dict[str, float] = field(default_factory=lambda: {
+        "compute": 0.0, "dram": 0.0, "noc": 0.0, "htree": 0.0, "sync": 0.0,
+    })
+    energy: EnergyLedger = field(default_factory=EnergyLedger)
+    instrs: int = 0
+
+    @property
+    def total_cycles(self) -> float:
+        return sum(self.cycles.values())
+
+    def seconds(self, cfg: PimsabConfig) -> float:
+        return timing.seconds(cfg, self.total_cycles)
+
+    def breakdown(self) -> Dict[str, float]:
+        t = max(self.total_cycles, 1e-30)
+        return {k: v / t for k, v in self.cycles.items()}
+
+
+class Simulator:
+    def __init__(self, cfg: PimsabConfig, functional: bool = False):
+        self.cfg = cfg
+        self.functional = functional
+        self.crams: Dict[tuple, Cram] = {}  # (tile, cram) -> Cram, lazy
+        self.rf: Dict[tuple, int] = {}      # (tile, reg) -> value
+        self.res = SimResult()
+
+    # -- functional state access (tests drive these) -----------------------
+    def cram(self, tile: int = 0, idx: int = 0) -> Cram:
+        key = (tile, idx)
+        if key not in self.crams:
+            self.crams[key] = Cram(self.cfg.cram_rows, self.cfg.cram_cols)
+        return self.crams[key]
+
+    def _tiles(self, ins: isa.Instr) -> List[int]:
+        return list(ins.tiles) if ins.tiles else list(range(self.cfg.num_tiles))
+
+    # -- execution ----------------------------------------------------------
+    def run(self, program) -> SimResult:
+        for ins in program:
+            self.step(ins)
+        return self.res
+
+    def step(self, ins: isa.Instr) -> None:
+        cfg, res = self.cfg, self.res
+        res.instrs += 1
+        tiles = self._tiles(ins)
+        res.energy.controller(1, len(tiles))
+
+        if isinstance(ins, isa.Add) or isinstance(ins, isa.Sub):
+            c = timing.cycles_add(ins.prec1, ins.prec2)
+            self._compute(ins, c)
+            if self.functional:
+                for t in tiles:
+                    cr = self.cram(t, 0)
+                    if isinstance(ins, isa.Sub):
+                        cr.sub(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
+                    else:
+                        cr.add(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2,
+                               ins.prec_dst, cen=ins.cen, cst=ins.cst, pred=ins.pred.value)
+        elif isinstance(ins, isa.MulConst):
+            z_cycles = timing.cycles_mul_const(ins.prec1, self.rf.get((tiles[0], ins.reg), 1))
+            self._compute(ins, z_cycles)
+            res.energy.rf(len(tiles))
+            if self.functional:
+                for t in tiles:
+                    self.cram(t, 0).mul_const(
+                        ins.dst, ins.src1, self.rf[(t, ins.reg)], ins.prec1, ins.prec_dst
+                    )
+        elif isinstance(ins, isa.Mul):
+            c = timing.cycles_mul(ins.prec1, ins.prec2)
+            self._compute(ins, c)
+            if self.functional:
+                for t in tiles:
+                    self.cram(t, 0).mul(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
+        elif isinstance(ins, isa.Logical):
+            self._compute(ins, timing.cycles_logical(ins.prec1, ins.prec2))
+            if self.functional:
+                for t in tiles:
+                    self.cram(t, 0).logical(ins.dst, ins.src1, ins.src2, ins.prec1, ins.op)
+        elif isinstance(ins, isa.Copy):
+            self._compute(ins, timing.cycles_copy(ins.prec1))
+            if self.functional:
+                for t in tiles:
+                    self.cram(t, 0).copy(ins.dst, ins.src1, ins.prec1)
+        elif isinstance(ins, isa.CmpGE):
+            self._compute(ins, ins.prec1 + 2)
+            if self.functional:
+                for t in tiles:
+                    self.cram(t, 0).cmp_ge(ins.dst, ins.src1, ins.src2, ins.prec1)
+        elif isinstance(ins, isa.SetMask):
+            self._compute(ins, 1)
+            if self.functional:
+                for t in tiles:
+                    self.cram(t, 0).set_mask(ins.src)
+        elif isinstance(ins, isa.ReduceIntra):
+            self._compute(ins, timing.cycles_reduce_intra(ins.prec, ins.size))
+            if self.functional:
+                for t in tiles:
+                    self.cram(t, 0).reduce_intra(ins.dst, ins.src, ins.prec, ins.size)
+        elif isinstance(ins, isa.ReduceHTree):
+            c = timing.cycles_htree_reduce(cfg, ins.prec)
+            res.cycles["htree"] += c
+            bits = cfg.crams_per_tile * cfg.cram_cols * ins.prec
+            res.energy.htree(bits * len(tiles))
+        elif isinstance(ins, isa.Shift):
+            self._compute(ins, timing.cycles_cram_shift(cfg, ins.prec, abs(ins.amount)))
+            if self.functional:
+                for t in tiles:
+                    self.cram(t, 0).shift_lanes(ins.dst, ins.src, ins.prec, ins.amount)
+        elif isinstance(ins, isa.RfLoad):
+            res.cycles["compute"] += 1
+            res.energy.rf(len(tiles))
+            for t in tiles:
+                self.rf[(t, ins.reg)] = ins.value
+        elif isinstance(ins, isa.DramLoad):
+            stream = timing.cycles_dram(cfg, ins.bits) - cfg.dram_latency_cycles
+            if ins.bcast_tiles > 1:
+                # broadcast path is a pipeline: DRAM → systolic NoC ring →
+                # per-tile H-tree (each tile's shuffle slice = bits/tiles);
+                # the slowest stage bounds throughput, + burst latency fill
+                noc_c = noc.systolic_bcast_cycles(cfg, ins.bits, ins.bcast_tiles)
+                tree_c = timing.cycles_htree_bcast(cfg, ins.bits // max(ins.bcast_tiles, 1))
+                c = max(stream, noc_c, tree_c) + cfg.dram_latency_cycles
+                res.energy.noc(ins.bits, ins.bcast_tiles)
+                res.energy.htree(ins.bits)
+                res.cycles["noc"] += c - stream - cfg.dram_latency_cycles
+                res.cycles["dram"] += stream + cfg.dram_latency_cycles
+            else:
+                res.cycles["dram"] += stream + cfg.dram_latency_cycles
+            res.energy.dram(ins.bits, transpose=ins.tr)
+            res.energy.noc(ins.bits, noc.avg_dram_hops(cfg))
+        elif isinstance(ins, isa.DramStore):
+            res.cycles["dram"] += timing.cycles_dram(cfg, ins.bits)
+            res.energy.dram(ins.bits, transpose=ins.tr)
+            res.energy.noc(ins.bits, noc.avg_dram_hops(cfg))
+        elif isinstance(ins, isa.TileBcast):
+            c = noc.systolic_bcast_cycles(cfg, ins.bits, ins.n_dest)
+            res.cycles["noc"] += c
+            res.energy.noc(ins.bits, ins.n_dest)
+        elif isinstance(ins, isa.TileSend):
+            res.cycles["noc"] += noc.p2p_cycles(cfg, ins.src_tile, ins.dst_tile, ins.bits)
+            res.energy.noc(ins.bits, noc.hops(cfg, ins.src_tile, ins.dst_tile))
+        elif isinstance(ins, isa.CramBcast):
+            res.cycles["htree"] += timing.cycles_htree_bcast(cfg, ins.bits)
+            res.energy.htree(ins.bits)
+        elif isinstance(ins, isa.CramCopy):
+            res.cycles["htree"] += math.ceil(ins.bits / cfg.c2c_bw_bits)
+            res.energy.htree(ins.bits, levels=2)
+        elif isinstance(ins, (isa.Signal, isa.Wait)):
+            res.cycles["sync"] += 2
+        else:
+            raise ValueError(f"unhandled instruction {ins}")
+
+    def _compute(self, ins, cycles: float) -> None:
+        self.res.cycles["compute"] += cycles
+        active = self.cfg.crams_per_tile * len(self._tiles(ins))
+        self.res.energy.compute(cycles, active)

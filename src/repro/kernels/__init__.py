@@ -1,0 +1,7 @@
+from repro.kernels.ops import (  # noqa: F401
+    bitslice_matmul,
+    htree_reduce,
+    quantized_matmul,
+    rglru_scan,
+    zero_slice_pairs,
+)

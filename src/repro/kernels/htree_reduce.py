@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: log-depth pairwise (H-tree) reduction.
+
+Reduces (N, D) → (D,) over the leading axis in the H-tree's summation order:
+adjacent pairs first, then pairs-of-pairs — log₂(N) levels.  This is the
+numerical twin of PIMSAB's intra-tile H-tree partial-sum reduction (and of
+``dist.collectives.htree_allreduce`` at mesh level); it differs from a serial
+(ring-order) sum in floating point, so tests pin the tree order explicitly.
+
+Tiling: grid over D blocks; each kernel invocation holds its (N, bd) slab in
+VMEM and halves it log₂(N) times.  N is the "CRAM lanes" axis (≤ a few
+hundred), so N·bd·4B stays well under VMEM for bd = 512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, *, n: int):
+    y = x_ref[...]  # (n, bd) in VMEM
+    while y.shape[0] > 1:
+        y = y[0::2] + y[1::2]
+    o_ref[...] = y[0]
+
+
+def htree_reduce(x: jnp.ndarray, *, block_d: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """x: (N, D) → (D,), N a power of two."""
+    n, d = x.shape
+    assert n & (n - 1) == 0, f"H-tree needs power-of-two lanes, got {n}"
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        grid=(d // bd,),
+        in_specs=[pl.BlockSpec((n, bd), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((bd,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,140 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Implementation dispatch: ``impl="pallas"`` (TPU), ``"interpret"`` (kernel body
+executed in Python — CPU validation), ``"xla"`` (the ref.py oracle — what the
+dry-run lowers, since Pallas TPU kernels cannot lower on the CPU backend).
+
+``quantized_matmul`` is the end-to-end PIMSAB path: dynamic activation
+quantization → slice decomposition → zero-slice skipping (when the weights
+are concrete at trace time) → bit-sliced integer matmul → dequantize.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.bitslice_matmul import bitslice_matmul as _bitslice_pallas
+from repro.kernels.htree_reduce import htree_reduce as _htree_pallas
+from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+
+DEFAULT_IMPL = "xla"  # CPU container: oracles by default; TPU target: "pallas"
+
+
+# ---------------------------------------------------------------------------
+# bit-sliced matmul
+# ---------------------------------------------------------------------------
+
+
+def zero_slice_pairs(
+    x_slices: Optional[np.ndarray], w_slices: Optional[np.ndarray]
+) -> Tuple[Tuple[int, int], ...]:
+    """Statically-zero (s, t) pairs — PIMSAB ``mul_const`` zero-bit skipping.
+
+    Only possible when operands are concrete (inference-time constants);
+    tracers are conservatively assumed dense.
+    """
+    def dead(arr):
+        if arr is None or isinstance(arr, jax.core.Tracer):
+            return None
+        a = np.asarray(arr)
+        return [s for s in range(a.shape[0]) if not a[s].any()]
+
+    xs, ws = dead(x_slices), dead(w_slices)
+    if not xs and not ws:
+        return ()
+    nx = x_slices.shape[0] if x_slices is not None else 1
+    nw = w_slices.shape[0] if w_slices is not None else 1
+    skip = []
+    for s in range(nx):
+        for t in range(nw):
+            if (xs and s in xs) or (ws and t in ws):
+                skip.append((s, t))
+    return tuple(skip)
+
+
+def bitslice_matmul(
+    x_slices: jnp.ndarray,
+    w_slices: jnp.ndarray,
+    *,
+    slice_bits: int = 8,
+    skip: Tuple[Tuple[int, int], ...] = (),
+    impl: str = DEFAULT_IMPL,
+    block: Tuple[int, int, int] = (256, 256, 256),
+) -> jnp.ndarray:
+    if impl == "xla":
+        # oracle ignores `skip` pairs by zeroing them out of the loop too
+        if skip:
+            keep = [
+                (s, t)
+                for s in range(x_slices.shape[0])
+                for t in range(w_slices.shape[0])
+                if (s, t) not in set(skip)
+            ]
+            acc = jnp.zeros((x_slices.shape[1], w_slices.shape[2]), jnp.int32)
+            for s, t in keep:
+                prod = jax.lax.dot_general(
+                    x_slices[s], w_slices[t], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                )
+                acc = acc + (prod << (slice_bits * (s + t)))
+            return acc
+        return ref.bitslice_matmul_ref(x_slices, w_slices, slice_bits)
+    return _bitslice_pallas(
+        x_slices, w_slices, slice_bits=slice_bits, skip=skip,
+        interpret=(impl == "interpret"), block=block,
+    )
+
+
+def quantized_matmul(
+    x: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    *,
+    act_bits: int = 8,
+    weight_bits: int = 8,
+    slice_bits: int = 8,
+    impl: str = DEFAULT_IMPL,
+) -> jnp.ndarray:
+    """x: (..., K) float; w_q: (K, N) int; returns (..., N) float.
+
+    The full adaptive-precision path: per-row dynamic act quant, slice
+    decomposition of both operands, static zero-slice skip, integer matmul.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xf = x.reshape(-1, k).astype(jnp.float32)
+    qmax = 2 ** (act_bits - 1) - 1
+    x_scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / qmax, 1e-8)
+    x_q = jnp.clip(jnp.round(xf / x_scale), -qmax - 1, qmax).astype(jnp.int32)
+    x_slices = ref.to_slices(x_q, act_bits, slice_bits)
+    w_slices = ref.to_slices(w_q, weight_bits, slice_bits)
+    skip = zero_slice_pairs(None, w_q if not isinstance(w_q, jax.core.Tracer) else None)
+    acc = bitslice_matmul(x_slices, w_slices, slice_bits=slice_bits, impl=impl)
+    out = acc.astype(jnp.float32) * x_scale * w_scale.reshape(1, -1)
+    return out.reshape(*lead, -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# H-tree reduce / RG-LRU scan
+# ---------------------------------------------------------------------------
+
+
+def htree_reduce(x: jnp.ndarray, *, impl: str = DEFAULT_IMPL, block_d: int = 512) -> jnp.ndarray:
+    if impl == "xla":
+        return ref.htree_reduce_ref(x)
+    return _htree_pallas(x, block_d=block_d, interpret=(impl == "interpret"))
+
+
+def rglru_scan(
+    a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, *,
+    impl: str = DEFAULT_IMPL, block_t: int = 256, block_w: int = 512,
+) -> jnp.ndarray:
+    if impl == "xla":
+        return ref.rglru_scan_ref(a, b, h0)
+    return _rglru_pallas(a, b, h0, block_t=block_t, block_w=block_w,
+                         interpret=(impl == "interpret"))

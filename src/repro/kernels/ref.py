@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are also the implementations the dry-run lowers (Pallas TPU kernels
+cannot lower on the CPU backend; interpret=True validates the kernel bodies
+against these oracles in tests).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# bit-slice decomposition (the PIMSAB transpose-unit analogue)
+# ---------------------------------------------------------------------------
+
+
+def slice_range(bits: int, slice_bits: int = 8) -> Tuple[int, int]:
+    """Exactly-representable range of the balanced signed-digit decomposition:
+    every digit lies in [-2^(sb-1), 2^(sb-1)-1] (fits the MXU's int8 path)."""
+    n = -(-bits // slice_bits)
+    w = sum(1 << (slice_bits * s) for s in range(n))
+    half = 1 << (slice_bits - 1)
+    return -half * w, (half - 1) * w
+
+
+def to_slices(x: jnp.ndarray, bits: int, slice_bits: int = 8) -> jnp.ndarray:
+    """Balanced signed-digit radix-2^slice_bits decomposition, low-to-high.
+
+    Returns (n_slices, *x.shape) int8 with every digit in [-2^(sb-1),
+    2^(sb-1)-1] so each slice is a legal signed MXU operand:
+        x == Σ_s slices[s] · 2^(slice_bits·s)    (exact within slice_range).
+    Values outside slice_range(bits) are clamped (quantizers in this repo
+    clamp to it up front, so the clamp never fires in practice).
+    """
+    n = -(-bits // slice_bits)
+    lo, hi = slice_range(bits, slice_bits)
+    rem = jnp.clip(x.astype(jnp.int32), lo, hi)
+    half = 1 << (slice_bits - 1)
+    mask = (1 << slice_bits) - 1
+    out = []
+    for s in range(n):
+        if s == n - 1:
+            digit = rem  # in [-half, half-1] by construction of slice_range
+        else:
+            digit = jnp.bitwise_and(rem + half, mask) - half
+            rem = (rem - digit) >> slice_bits
+        out.append(digit)
+    return jnp.stack([d.astype(jnp.int8) for d in out])
+
+
+def from_slices(slices: jnp.ndarray, slice_bits: int = 8) -> jnp.ndarray:
+    acc = jnp.zeros(slices.shape[1:], jnp.int32)
+    for s in range(slices.shape[0]):
+        acc = acc + (slices[s].astype(jnp.int32) << (slice_bits * s))
+    return acc
+
+
+def bitslice_matmul_ref(
+    x_slices: jnp.ndarray, w_slices: jnp.ndarray, slice_bits: int = 8
+) -> jnp.ndarray:
+    """(Sx, M, K) int8 × (Sw, K, N) int8 → (M, N) int32.
+
+    out = Σ_{s,t} (x_s @ w_t) << (slice_bits·(s+t)) — PIMSAB bit-slicing:
+    every slice-pair product is an independent int8 MXU pass (the paper's
+    parallel narrow ops), recombined with shifts (the carry chain).
+    """
+    sx, m, k = x_slices.shape
+    sw, k2, n = w_slices.shape
+    assert k == k2
+    acc = jnp.zeros((m, n), jnp.int32)
+    for s in range(sx):
+        for t in range(sw):
+            # int8 inputs must widen before the shift: int32 accumulate
+            prod = jax.lax.dot_general(
+                x_slices[s],
+                w_slices[t],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            acc = acc + (prod << (slice_bits * (s + t)))
+    return acc
+
+
+def int_matmul_wide_ref(x: jnp.ndarray, w: jnp.ndarray, x_bits: int, w_bits: int) -> jnp.ndarray:
+    """Direct wide-int oracle: (M,K) × (K,N) in int32."""
+    return jax.lax.dot_general(
+        x.astype(jnp.int32), w.astype(jnp.int32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# H-tree reduction
+# ---------------------------------------------------------------------------
+
+
+def htree_reduce_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise log-depth tree sum over the leading axis (N power of two).
+
+    Numerically identical to the H-tree hardware order: adjacent pairs first.
+    """
+    n = x.shape[0]
+    assert n & (n - 1) == 0, n
+    y = x
+    while y.shape[0] > 1:
+        y = y[0::2] + y[1::2]
+    return y[0]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear scan
+# ---------------------------------------------------------------------------
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: (B, T, W) fp32."""
+
+    def comb(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    _, hs = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return hs

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: RG-LRU linear recurrence  h_t = a_t · h_{t-1} + b_t.
+
+The decode/long-context hot loop of the RecurrentGemma blocks.  The weakness
+of the XLA lowering is that ``associative_scan`` materializes every tree level
+in HBM (O(T·W·log T) traffic); this kernel streams (a, b) chunks through VMEM
+once — O(T·W) — carrying h in a VMEM scratch across sequential grid steps
+(TPU grid iteration order is sequential, last axis fastest, which Pallas
+guarantees; interpret mode preserves it).
+
+Grid: (B, W/bw, T/bt); h-scratch (bw,) persists across the T axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, bt: int):
+    t_step = pl.program_id(2)
+
+    @pl.when(t_step == 0)
+    def _init():
+        h_ref[...] = h0_ref[0]
+
+    h = h_ref[...]
+    out = jnp.zeros_like(b_ref[0])
+
+    def body(i, carry):
+        h, out = carry
+        h = a_ref[0, i] * h + b_ref[0, i]
+        out = jax.lax.dynamic_update_index_in_dim(out, h, i, 0)
+        return h, out
+
+    h, out = jax.lax.fori_loop(0, bt, body, (h, out))
+    o_ref[0] = out
+    h_ref[...] = h
+
+
+def rglru_scan(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    h0: jnp.ndarray,
+    *,
+    block_t: int = 256,
+    block_w: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """a, b: (B, T, W) fp32; h0: (B, W).  Returns hs: (B, T, W)."""
+    bsz, t, w = a.shape
+    bt, bw = min(block_t, t), min(block_w, w)
+    assert t % bt == 0 and w % bw == 0, (t, w, bt, bw)
+    grid = (bsz, w // bw, t // bt)  # T innermost: h carries across chunks
+    return pl.pallas_call(
+        functools.partial(_kernel, bt=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bw), lambda i, j, k: (i, k, j)),
+            pl.BlockSpec((1, bt, bw), lambda i, j, k: (i, k, j)),
+            pl.BlockSpec((1, bw), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bw), lambda i, j, k: (i, k, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, t, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bw,), a.dtype)],
+        interpret=interpret,
+    )(a, b, h0)

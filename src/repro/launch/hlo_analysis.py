@@ -1,0 +1,169 @@
+"""Parse compiled (partitioned, per-device) HLO text for collective traffic,
+and derive the three roofline terms.
+
+cost_analysis() reports per-device FLOPs and bytes; collective bytes are NOT
+in cost_analysis, so we scan the HLO for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops and sum their *operand*
+sizes.  In the partitioned module operand shapes are per-device; operands are
+printed by name only, so operand bytes are reconstructed from the printed
+output shape + op semantics + replica-group size:
+
+  all-reduce:        operand == output
+  all-gather:        operand == output / group
+  reduce-scatter:    operand == output × group
+  all-to-all:        operand == output
+  collective-permute operand == output
+
+The estimated wire time additionally applies ring-algorithm factors
+(all-reduce moves 2(g-1)/g × payload per chip; gather/scatter (g-1)/g).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9\[\],{}\s/#*_-]+?\)?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+    re.IGNORECASE,
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    operand_bytes: Dict[str, int] = field(default_factory=dict)
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def to_json(self) -> Dict:
+        return {
+            "counts": self.counts,
+            "operand_bytes": self.operand_bytes,
+            "wire_bytes": {k: float(v) for k, v in self.wire_bytes.items()},
+            "total_operand_bytes": self.total_operand_bytes,
+            "total_wire_bytes": float(self.total_wire_bytes),
+        }
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # iota [groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    return 2  # collective-permute etc: near-neighbour
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op").lower()
+        out_bytes = _shape_bytes(m.group("shape"))
+        g = _group_size(line)
+        if op == "all-gather":
+            operand = out_bytes // max(g, 1)
+            wire = out_bytes * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            operand = out_bytes * g
+            wire = operand * (g - 1) / max(g, 1)
+        elif op == "all-reduce":
+            operand = out_bytes
+            wire = 2 * out_bytes * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            operand = out_bytes
+            wire = out_bytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            operand = out_bytes
+            wire = out_bytes
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.operand_bytes[op] = stats.operand_bytes.get(op, 0) + operand
+        stats.wire_bytes[op] = stats.wire_bytes.get(op, 0) + wire
+    return stats
+
+
+@dataclass
+class Roofline:
+    """Per-device, per-step roofline terms (seconds)."""
+
+    flops: float
+    hbm_bytes: float
+    collective_operand_bytes: float
+    collective_wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(
+    per_device_flops: float,
+    per_device_bytes: float,
+    coll: CollectiveStats,
+    model_flops_per_device: float = 0.0,
+    links: int = 3,
+) -> Roofline:
+    compute_s = per_device_flops / PEAK_FLOPS_BF16
+    memory_s = per_device_bytes / HBM_BW
+    collective_s = coll.total_wire_bytes / (links * ICI_BW_PER_LINK)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_per_device / per_device_flops if per_device_flops else 0.0
+    return Roofline(
+        flops=per_device_flops,
+        hbm_bytes=per_device_bytes,
+        collective_operand_bytes=float(coll.total_operand_bytes),
+        collective_wire_bytes=float(coll.total_wire_bytes),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops_per_device,
+        useful_ratio=useful,
+    )

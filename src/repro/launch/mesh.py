@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+A function, not a module-level constant — importing this module never touches
+jax device state.  Single pod: 16×16 = 256 chips ("data","model"); multi-pod:
+2×16×16 = 512 chips ("pod","data","model").  The "model" axis is the intra-pod
+H-tree analogue (reductions stay local); "pod" carries only data-parallel
+traffic (PIMSAB's inter-tile rule: no cross-tile partial-sum reduction).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever the current host offers (smoke tests / examples on CPU)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW_PER_LINK = 50e9  # B/s per link (~ per-direction)

@@ -1,0 +1,97 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape × step) cell —
+weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist.sharding import MeshRules, cache_entry_spec, param_specs
+from repro.models.runtime import RunFlags, DEFAULT_FLAGS
+
+
+def _sds(shape, dtype, rules: Optional[MeshRules], spec: Optional[P]):
+    if rules is None or spec is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(rules.mesh, spec))
+
+
+def batch_specs(
+    cfg: ModelConfig, cell: ShapeCell, rules: Optional[MeshRules] = None, with_labels: bool = True
+) -> Dict[str, Any]:
+    """The token batch (+ frontend stub embeddings) for train/prefill."""
+    b, s = cell.global_batch, cell.seq_len
+    axes = rules.batch_axes(b) if rules else None
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {
+        "tokens": _sds((b, s), jnp.int32, rules, P(axes, None) if rules else None)
+    }
+    if with_labels:
+        out["labels"] = _sds((b, s), jnp.int32, rules, P(axes, None) if rules else None)
+    if cfg.is_encdec:
+        out["enc_embeds"] = _sds(
+            (b, cfg.enc_seq_len, cfg.d_model), dt, rules, P(axes, None, None) if rules else None
+        )
+    if cfg.frontend == "vision":
+        out["patch_embeds"] = _sds(
+            (b, cfg.n_patches, cfg.d_model), dt, rules, P(axes, None, None) if rules else None
+        )
+    return out
+
+
+def sharded_tree(shapes: Any, specs: Any, rules: Optional[MeshRules]) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    if rules is None:
+        return shapes
+    return jax.tree_util.tree_map(
+        lambda sh, sp: jax.ShapeDtypeStruct(
+            sh.shape, sh.dtype, sharding=NamedSharding(rules.mesh, sp)
+        ),
+        shapes,
+        specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def input_specs(
+    cfg: ModelConfig,
+    cell: ShapeCell,
+    rules: Optional[MeshRules] = None,
+    flags: RunFlags = DEFAULT_FLAGS,
+) -> Dict[str, Any]:
+    """All inputs for the cell's step function, as (sharded) SDS trees.
+
+    train  → {"state": ..., "batch": ...}               for train_step
+    prefill→ {"params": ..., "batch": ...}              for prefill
+    decode → {"params": ..., "cache": ..., "tokens":..} for decode_step
+    """
+    from repro.serve.engine import cache_specs, serve_params_shape
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.steps import train_state_shape, train_state_specs
+    from repro.models.transformer import cache_shape
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig()
+        sshapes = train_state_shape(cfg, opt_cfg)
+        sspecs = train_state_specs(cfg, rules, opt_cfg, flags) if rules else None
+        state = sharded_tree(sshapes, sspecs, rules)
+        return {"state": state, "batch": batch_specs(cfg, cell, rules, with_labels=True)}
+
+    pshapes = serve_params_shape(cfg, flags)
+    pspecs = param_specs(pshapes, cfg, rules) if rules else None
+    params = sharded_tree(pshapes, pspecs, rules)
+    if cell.kind == "prefill":
+        return {"params": params, "batch": batch_specs(cfg, cell, rules, with_labels=False)}
+
+    # decode: one new token against a cache of seq_len
+    b = cell.global_batch
+    cshapes = cache_shape(cfg, b, cell.seq_len, flags)
+    cspecs = cache_specs(cfg, b, cell.seq_len, rules, flags) if rules else None
+    cache = sharded_tree(cshapes, cspecs, rules)
+    axes = rules.batch_axes(b) if rules else None
+    tokens = _sds((b, 1), jnp.int32, rules, P(axes, None) if rules else None)
+    return {"params": params, "cache": cache, "tokens": tokens}

@@ -1,0 +1,182 @@
+"""Shared model building blocks: norms, RoPE, and the (optionally bit-plane
+quantized) linear layer.
+
+The quantized path is the TPU-native form of PIMSAB's bit-serial-aware
+computation: integer tensors are decomposed into ``slice_bits``-wide slices
+(radix-2**slice_bits bit-slicing — the MXU int8 path plays the role of the
+paper's 1-bit PE array), plane-pair matmuls run with int32 accumulation, and
+results are recombined with shifts.  Adaptive precision = fewer slices;
+``mul_const`` zero-bit skipping = statically dropping all-zero weight slices.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized (bit-sliced) linear — PIMSAB adaptive precision on the MXU
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight(w: jnp.ndarray, bits: int = 8) -> Params:
+    """Symmetric per-output-channel int quantization of a (..., d_in, d_out)
+    weight (leading axes: scan-group stacking)."""
+    wf = w.astype(jnp.float32)
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(wf), axis=-2, keepdims=True) / qmax  # (..., 1, d_out)
+    scale = jnp.maximum(scale, 1e-8)
+    w_q = jnp.clip(jnp.round(wf / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return {"w_q": w_q, "w_scale": scale.astype(jnp.float32)}
+
+
+def _dynamic_act_quant(x: jnp.ndarray, bits: int):
+    qmax = 2 ** (bits - 1) - 1
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-8)
+    x_q = jnp.clip(jnp.round(xf / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return x_q, scale
+
+
+def int_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
+    """int8 × int8 → int32 matmul (one bit-slice plane-pair pass on the MXU)."""
+    return jax.lax.dot_general(
+        x_q,
+        w_q,
+        (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def quant_linear(p: Params, x: jnp.ndarray, act_bits: int = 8) -> jnp.ndarray:
+    """Bit-sliced integer linear: dynamic act quant + int32 accumulation.
+
+    With act_bits ≤ 8 and weight_bits ≤ 8 this is a single plane-pair pass;
+    the general case (kernels/bitslice_matmul) splits wider operands into
+    8-bit slices and recombines with shifts.
+    """
+    x_q, x_scale = _dynamic_act_quant(x, act_bits)
+    acc = int_matmul(x_q, p["w_q"])
+    out = acc.astype(jnp.float32) * x_scale * p["w_scale"]
+    if "b" in p:
+        out = out + p["b"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def linear(p: Params, x: jnp.ndarray, act_bits: int = 8) -> jnp.ndarray:
+    """Dispatch: quantized (int8 bit-slice) if the param leaf is quantized."""
+    if "w_q" in p:
+        return quant_linear(p, x, act_bits)
+    out = x @ p["w"]
+    if "b" in p:
+        out = out + p["b"]
+    return out
+
+
+def linear_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    p: Params = {"w": dense_init(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def maybe_quantize_tree(params, cfg, path: str = "") -> Any:
+    """Transform a param tree for serving: every linear {'w': ...} leaf-dict
+    becomes {'w_q': int8, 'w_scale': f32} (PIMSAB: weights live bit-sliced).
+
+    Embedding and normalization weights stay high-precision (they are
+    gathered, not matmul'd).
+    """
+    if not cfg.quant.enabled:
+        return params
+    skip = ("embed", "norm", "scale", "lambda", "conv", "gate_bias", "router")
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            # ndim 2 = plain linear; ndim 3 = scan-stacked (G, d_in, d_out) —
+            # per-group quantization; lax.scan slices both w_q and w_scale
+            if "w" in node and node["w"].ndim in (2, 3) and not any(s in path for s in skip):
+                q = quantize_weight(node["w"], cfg.quant.weight_bits)
+                if "b" in node:
+                    q["b"] = node["b"]
+                return q
+            return {k: rec(v, f"{path}/{k}") for k, v in node.items()}
+        return node
+
+    return rec(params, path)
+
+
+# ---------------------------------------------------------------------------
+# activations / losses
+# ---------------------------------------------------------------------------
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Mean token cross-entropy; logits over padded vocab are masked."""
+    lf = logits.astype(jnp.float32)
+    if lf.shape[-1] > vocab:
+        pad = lf.shape[-1] - vocab
+        lf = lf - jnp.pad(jnp.zeros((vocab,)), (0, pad), constant_values=1e9)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,34 @@
+"""Modality frontend STUBS (as directed by the assignment).
+
+The audio (whisper conv-mel) and vision (CLIP) frontends are not reproduced;
+``input_specs()`` supplies precomputed frame/patch embeddings.  Only the thin
+adapter projections that fuse those embeddings into the backbone live here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, linear, linear_init
+
+
+def vision_adapter_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    return {"proj": linear_init(key, d, d, dtype)}
+
+
+def fuse_patches(p: Params, x: jnp.ndarray, patch_embeds: jnp.ndarray) -> jnp.ndarray:
+    """Add projected patch embeddings into the first n_patches positions."""
+    n = min(patch_embeds.shape[1], x.shape[1])
+    proj = linear(p["proj"], patch_embeds[:, :n].astype(x.dtype))
+    return x.at[:, :n].add(proj)
+
+
+def audio_adapter_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    return {"proj": linear_init(key, d, d, dtype)}
+
+
+def embed_frames(p: Params, frame_embeds: jnp.ndarray) -> jnp.ndarray:
+    """Project precomputed (B, T_frames, D) mel-frame embeddings."""
+    return linear(p["proj"], frame_embeds)

@@ -1,0 +1,92 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Routing runs independently per *routing group* (one group per data shard by
+default) so the dispatch buffers stay sharded over the data axis while the
+expert axis shards over "model" — the same rule PIMSAB's compiler applies:
+data-parallel loops map across tiles (data axis), reductions stay local.
+
+Dispatch is gather/scatter-based (no (T, E, C) one-hot einsum): tokens are
+argsorted by expert id, their position within the expert segment is computed
+with a searchsorted, over-capacity tokens are dropped, and the kept tokens are
+scattered into an (E, C, D) buffer that feeds a batched expert matmul.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, swiglu
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": {"w": dense_init(ks[0], d, e, jnp.float32)},
+        "w_gate": dense_init(ks[1], e * d, f, dtype).reshape(e, d, f),
+        "w_up": dense_init(ks[2], e * d, f, dtype).reshape(e, d, f),
+        "w_down": dense_init(ks[3], e * f, d, dtype).reshape(e, f, d),
+    }
+
+
+def _route_group(x: jnp.ndarray, logits: jnp.ndarray, k: int, capacity: int):
+    """Single routing group.  x: (T, D); logits: (T, E) fp32.
+
+    Returns (buf (E*C, D), combine info) for gather-based un-dispatch.
+    """
+    t, e = logits.shape
+    gates, eidx = jax.lax.top_k(logits, k)  # (T,k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    flat_e = eidx.reshape(-1)  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # position of each routed token within its expert's segment
+    seg_start = jnp.searchsorted(se, jnp.arange(e), side="left")  # (E,)
+    pos = jnp.arange(t * k) - seg_start[se]
+    keep = pos < capacity
+    slot = jnp.where(keep, se * capacity + pos, e * capacity)  # overflow row
+    buf = jnp.zeros((e * capacity + 1, x.shape[-1]), x.dtype).at[slot].set(x[st])
+    return buf[: e * capacity], (slot, st, sg, keep)
+
+
+def _combine_group(y: jnp.ndarray, info, t: int) -> jnp.ndarray:
+    """y: (E*C, D_out) expert outputs -> (T, D_out)."""
+    slot, st, sg, keep = info
+    contrib = y[jnp.where(keep, slot, 0)]
+    contrib = contrib * jnp.where(keep, sg, 0.0).astype(contrib.dtype)[:, None]
+    return jnp.zeros((t, y.shape[-1]), y.dtype).at[st].add(contrib)
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, cfg, n_groups: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).  Routed per group of B*S/n_groups tokens."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    tokens = b * s
+    assert tokens % n_groups == 0, (tokens, n_groups)
+    tg = tokens // n_groups
+    capacity = max(k, int(math.ceil(tg * k / e * cfg.moe_capacity_factor)))
+    xg = x.reshape(n_groups, tg, d)
+    logits = (xg.astype(jnp.float32) @ p["router"]["w"])  # (G, Tg, E)
+
+    def per_group(xi, li):
+        buf, info = _route_group(xi, li, k, capacity)  # (E*C, D)
+        buf = buf.reshape(e, capacity, d)
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        act = swiglu(gate, up)
+        down = jnp.einsum("ecf,efd->ecd", act, p["w_down"])
+        return _combine_group(down.reshape(e * capacity, d), info, tg)
+
+    out = jax.vmap(per_group)(xg, logits)
+    # Switch-style load-balance aux loss
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Tg, E)
+    me = jnp.mean(probs, axis=1)  # (G, E) router prob mass
+    top1 = jnp.argmax(logits, axis=-1)
+    ce = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=1)  # (G, E) dispatch mass
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return out.reshape(b, s, d), aux

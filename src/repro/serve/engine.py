@@ -1,0 +1,123 @@
+"""Serving engine: prefill + decode step builders, batched request loop.
+
+The serve path uses bit-sliced int8 weights (``maybe_quantize_tree``) — the
+paper's adaptive-precision inference — halving the weight-memory roofline
+term vs. bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import MeshRules, cache_entry_spec, param_specs
+from repro.models.common import maybe_quantize_tree
+from repro.models.runtime import DEFAULT_FLAGS, RunFlags
+from repro.models.transformer import (
+    cache_shape,
+    decode_step,
+    init_cache,
+    prefill,
+)
+
+
+def serve_params_shape(cfg: ModelConfig, flags: RunFlags = DEFAULT_FLAGS):
+    """ShapeDtypeStruct tree of the (possibly quantized) serving params."""
+    from repro.models.transformer import init_params
+
+    def build():
+        p = init_params(jax.random.key(0), cfg)
+        return maybe_quantize_tree(p, cfg) if flags.quant_serve else p
+
+    return jax.eval_shape(build)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, rules: MeshRules, flags: RunFlags = DEFAULT_FLAGS):
+    shapes = cache_shape(cfg, batch, max_len, flags)
+
+    def visit(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        # leading dim is the scan-group axis; entry rules apply to the rest
+        inner = cache_entry_spec(leaf.shape[1:], cfg, rules, seq_shard_kv=flags.seq_shard_kv)
+        return P(None, *inner)
+
+    return {
+        "pos": P(),
+        "blocks": jax.tree_util.tree_map_with_path(visit, shapes["blocks"]),
+    }
+
+
+def make_prefill_step(cfg, flags=DEFAULT_FLAGS, rules=None, max_len=None) -> Callable:
+    def step(params, batch):
+        return prefill(params, cfg, batch, flags, rules, max_len=max_len)
+
+    return step
+
+
+def make_decode_step(cfg, flags=DEFAULT_FLAGS, rules=None) -> Callable:
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens, flags, rules)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# A small batched-request engine (used by examples/serve_lm.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Static-batch engine: pads prompts to a bucket, prefills, then decodes
+    all requests in lock-step, retiring finished ones (continuous batching at
+    iteration granularity)."""
+
+    def __init__(self, cfg: ModelConfig, params, flags: RunFlags = DEFAULT_FLAGS, max_len: int = 512, eos: int = -1):
+        self.cfg, self.flags, self.max_len, self.eos = cfg, flags, max_len, eos
+        self.params = maybe_quantize_tree(params, cfg) if flags.quant_serve else params
+        self._prefill = jax.jit(make_prefill_step(cfg, flags, max_len=max_len))
+        self._decode = jax.jit(make_decode_step(cfg, flags))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        b = len(requests)
+        s = max(len(r.prompt) for r in requests)
+        s = max(s, 8)
+        toks = np.zeros((b, s), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, s - len(r.prompt) :] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend == "vision":
+            batch["patch_embeds"] = jnp.zeros((b, self.cfg.n_patches, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
+        if self.cfg.is_encdec:
+            batch["enc_embeds"] = jnp.zeros((b, self.cfg.enc_seq_len, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
+        cache, logits = self._prefill(self.params, batch)
+        steps = max(r.max_new_tokens for r in requests)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for _ in range(steps):
+            for i, r in enumerate(requests):
+                if not r.done and len(r.generated) < r.max_new_tokens:
+                    t = int(next_tok[i])
+                    r.generated.append(t)
+                    if t == self.eos:
+                        r.done = True
+            if all(r.done or len(r.generated) >= r.max_new_tokens for r in requests):
+                break
+            cache, logits = self._decode(self.params, cache, next_tok[:, None])
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return requests

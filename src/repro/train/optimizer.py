@@ -1,0 +1,116 @@
+"""AdamW with bf16 params + fp32 master/moments, and the WSD
+(warmup-stable-decay) schedule MiniCPM trains with.
+
+Hand-rolled on pytrees (no optax dependency).  Optimizer state:
+``{"m", "v", "master", "count"}`` — ``master`` holds fp32 weights when params
+are low-precision (mixed-precision training standard practice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    keep_master: bool = True
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> Any:
+    f32 = lambda l: jnp.zeros(l.shape, jnp.float32)
+    state = {
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.keep_master:
+        state["master"] = jax.tree_util.tree_map(lambda l: l.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads: Any, state: Any, params: Any, cfg: AdamWConfig, lr: jnp.ndarray
+) -> Tuple[Any, Any]:
+    count = state["count"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    source = state["master"] if "master" in state else params
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + cfg.weight_decay * pf)
+        return m, v, pf
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(source)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_masters = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    dtypes = jax.tree_util.tree_map(lambda l: l.dtype, params)
+    new_params = jax.tree_util.tree_map(lambda f, dt: f.astype(dt), new_masters, dtypes)
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if "master" in state:
+        new_state["master"] = new_masters
+    return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def wsd_schedule(
+    base_lr: float, warmup: int, stable: int, decay: int, floor: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup → constant → exp decay."""
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum((step + 1.0) / max(warmup, 1), 1.0)
+        in_decay = jnp.maximum(step - warmup - stable, 0.0)
+        frac = jnp.minimum(in_decay / max(decay, 1), 1.0)
+        decayed = base_lr * (floor ** frac)
+        return jnp.where(step < warmup + stable, warm, decayed)
+
+    return lr
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum((step + 1.0) / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr
+
+
+def schedule_for(cfg, base_lr: float = 3e-4, total_steps: int = 10_000):
+    if getattr(cfg, "wsd_schedule", False):
+        return wsd_schedule(base_lr, total_steps // 100 + 1, int(total_steps * 0.8), int(total_steps * 0.19) + 1)
+    return cosine_schedule(base_lr, total_steps // 100 + 1, total_steps)

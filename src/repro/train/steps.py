@@ -1,0 +1,139 @@
+"""jit-able step functions + their sharding trees.
+
+``make_train_step`` builds the pjit'd update; ZeRO-1 (optimizer-state sharded
+over the data axes) and int8 error-feedback gradient compression are RunFlags
+levers.  These are the functions the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import MeshRules, param_specs
+from repro.models.runtime import DEFAULT_FLAGS, RunFlags
+from repro.models.transformer import forward, loss_fn
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, schedule_for
+
+
+def make_train_state(params: Any, opt_cfg: AdamWConfig) -> Dict[str, Any]:
+    return {"params": params, "opt": adamw_init(params, opt_cfg), "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_shape(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    from repro.models.transformer import init_params
+
+    return jax.eval_shape(
+        lambda: make_train_state(init_params(jax.random.key(0), cfg), opt_cfg)
+    )
+
+
+def zero1_spec(spec: P, shape, rules: MeshRules) -> P:
+    """Additionally shard an optimizer-state leaf over the data axes (ZeRO-1).
+
+    The first dimension not already sharded whose size divides dp gets the dp
+    axes — the fp32 m/v/master tensors are the memory hog at scale.
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (ax, size) in enumerate(zip(parts, shape)):
+        if ax is None and size % rules.dp == 0 and size >= rules.dp:
+            parts[i] = rules.dp_axes
+            return P(*parts)
+    return spec
+
+
+def train_state_specs(cfg: ModelConfig, rules: MeshRules, opt_cfg: AdamWConfig, flags: RunFlags):
+    shapes = train_state_shape(cfg, opt_cfg)
+    pspecs = param_specs(shapes["params"], cfg, rules)
+
+    def opt_leaf_specs(subtree_shapes):
+        base = param_specs(subtree_shapes, cfg, rules)
+        if not flags.zero1:
+            return base
+        return jax.tree_util.tree_map(
+            lambda sp, sh: zero1_spec(sp, sh.shape, rules), base, subtree_shapes
+        )
+
+    ospecs = {
+        "m": opt_leaf_specs(shapes["opt"]["m"]),
+        "v": opt_leaf_specs(shapes["opt"]["v"]),
+        "count": P(),
+    }
+    if "master" in shapes["opt"]:
+        ospecs["master"] = opt_leaf_specs(shapes["opt"]["master"])
+    return {"params": pspecs, "opt": ospecs, "step": P()}
+
+
+def batch_specs_tree(batch_shapes: Dict[str, Any], rules: MeshRules) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch_shapes.items():
+        axes = rules.batch_axes(v.shape[0])
+        out[k] = P(axes, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    flags: RunFlags = DEFAULT_FLAGS,
+    rules: Optional[MeshRules] = None,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    base_lr: float = 3e-4,
+    total_steps: int = 10_000,
+) -> Callable:
+    sched = schedule_for(cfg, base_lr, total_steps)
+
+    def grads_of(params, batch):
+        def loss_wrap(p):
+            return loss_fn(p, cfg, batch, flags, rules)
+
+        return jax.value_and_grad(loss_wrap, has_aux=True)(params)
+
+    def train_step(state, batch):
+        k = flags.grad_accum
+        if k > 1:
+            # microbatch over the leading batch dim; fp32 grad accumulator
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), g = grads_of(state["params"], mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / k, acc, g
+                )
+                return (acc, loss_acc + loss / k), metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda l: jnp.zeros(l.shape, jnp.float32), state["params"]
+            )
+            micro_batch = jax.tree_util.tree_map(
+                lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:]), batch
+            )
+            (grads, loss), metrics_stack = jax.lax.scan(micro, (zeros, jnp.float32(0)), micro_batch)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics_stack)
+        else:
+            (loss, metrics), grads = grads_of(state["params"], batch)
+        lr = sched(state["step"])
+        new_params, new_opt = adamw_update(grads, state["opt"], state["params"], opt_cfg, lr)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        out_metrics = {"loss": loss, "lr": lr, **metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def jit_train_step(cfg, rules: MeshRules, flags: RunFlags, opt_cfg=AdamWConfig(), donate: bool = True):
+    step = make_train_step(cfg, flags, rules, opt_cfg)
+    sspecs = train_state_specs(cfg, rules, opt_cfg, flags)
+    mesh = rules.mesh
+    to_sharding = lambda tree: jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    return partial(
+        jax.jit,
+        in_shardings=(to_sharding(sspecs), None),
+        out_shardings=(to_sharding(sspecs), None),
+        donate_argnums=(0,) if donate else (),
+    )(step), sspecs

@@ -1,0 +1,9 @@
+import os
+import sys
+from pathlib import Path
+
+# benchmarks/ is imported as a package by some tests
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (dry-run subprocess tests set their own flags).

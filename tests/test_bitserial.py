@@ -1,0 +1,110 @@
+"""Property tests: the functional bit-serial CRAM equals integer arithmetic,
+and cycle counts track the paper's cost model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cram import Cram
+from repro.core import timing
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(st.integers(2, 10), st.integers(0, 12345))
+def test_add_sub_exact(prec, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (prec - 1)), 2 ** (prec - 1)
+    a, b = rng.integers(lo, hi, 256), rng.integers(lo, hi, 256)
+    c = Cram()
+    c.write(0, a, prec)
+    c.write(16, b, prec)
+    cyc = c.add(32, 0, 16, prec, prec, prec + 1)
+    assert (c.read(32, prec + 1) == a + b).all()
+    assert cyc == timing.cycles_add(prec, prec)  # == prec + 1
+    c.sub(64, 0, 16, prec, prec, prec + 1)
+    assert (c.read(64, prec + 1) == a - b).all()
+
+
+@SET
+@given(st.integers(2, 8), st.integers(0, 99999))
+def test_mul_exact(prec, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (prec - 1)), 2 ** (prec - 1)
+    a, b = rng.integers(lo, hi, 256), rng.integers(lo, hi, 256)
+    c = Cram()
+    c.write(0, a, prec)
+    c.write(16, b, prec)
+    c.mul(32, 0, 16, prec, prec, 2 * prec)
+    assert (c.read(32, 2 * prec) == a * b).all()
+
+
+@SET
+@given(st.integers(-127, 127), st.integers(0, 9999))
+def test_mul_const_exact_and_zero_bit_cycles(const, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, 256)
+    c = Cram()
+    c.write(0, a, 8)
+    cyc = c.mul_const(16, 0, const, 8, 16)
+    assert (c.read(16, 16) == a * const).all()
+    # zero-bit skipping: cycles grow with the popcount of the constant
+    z = bin(abs(const)).count("1")
+    assert cyc <= (z + 1) * (16 + 2) + 18, (const, cyc)
+
+
+def test_mul_const_sparse_faster_than_dense():
+    c = Cram()
+    c.write(0, np.arange(256) - 128, 8)
+    sparse = c.mul_const(16, 0, 64, 8, 16)   # one set bit
+    dense = c.mul_const(40, 0, 127, 8, 16)   # seven set bits
+    assert sparse < dense / 3
+
+
+@pytest.mark.parametrize("lo,hi", [(0, 100), (-128, 128), (-8, 8)])
+def test_reduce_intra_tree(lo, hi):
+    rng = np.random.default_rng(lo + hi)
+    v = rng.integers(lo, hi, 256)
+    c = Cram()
+    c.write(0, v, 8)
+    c.reduce_intra(0, 0, 8, 256)
+    assert c.read(0, 16)[0] == v.sum()
+
+
+@SET
+@given(st.integers(0, 9999))
+def test_bit_sliced_add_carry_chain(seed):
+    """cen/cst: two 4-bit adds chained through the carry latch == 8-bit add."""
+    rng = np.random.default_rng(seed)
+    a, b = rng.integers(0, 256, 256), rng.integers(0, 256, 256)
+    c = Cram()
+    c.write(0, a, 8)
+    c.write(8, b, 8)
+    c.add(16, 0, 8, 4, 4, 4, cen=False, cst=True)
+    c.add(20, 4, 12, 4, 4, 4, cen=True, cst=True)
+    lo = c.read(16, 4, signed=False)
+    hi = c.read(20, 4, signed=False)
+    assert ((lo + (hi << 4)) == ((a + b) & 0xFF)).all()
+
+
+def test_predicated_copy_relu():
+    rng = np.random.default_rng(3)
+    a = rng.integers(-128, 128, 256)
+    c = Cram()
+    c.write(0, a, 8)
+    c.write(8, np.zeros(256), 8)
+    c.write(16, np.zeros(256), 8)
+    c.cmp_ge(100, 0, 8, 8)
+    c.set_mask(100)
+    c.add(16, 0, 8, 8, 8, 8, pred="mask")  # a + 0 where a >= 0
+    got = c.read(16, 8)
+    assert (got == np.where(a >= 0, a, 0)).all()
+
+
+def test_paper_cost_formulas():
+    assert timing.cycles_add(8, 8) == 9
+    assert timing.cycles_mul(8, 8) == 80  # b*(a+2)
+    assert timing.cycles_mul_const(8, 0b1000001) == 2 * 10  # 2 set bits
+    assert timing.cycles_add_sliced(8, 2) == 5  # two 4-bit waves: 4+1
+    # reduction precision growth: stages of (shift + add)
+    assert timing.cycles_reduce_intra(8, 256) > 8 * 8

@@ -1,0 +1,168 @@
+"""Distribution layer: sharding rules (divisibility fallbacks), collective
+schedules on a multi-device subprocess, HLO collective parsing, dry-run cell
+on a small forced-device mesh."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist.sharding import MeshRules, param_specs
+from repro.launch.hlo_analysis import parse_collectives, roofline_terms
+from repro.models.transformer import params_shape
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+def _rules():
+    return MeshRules(mesh=_FakeMesh({"data": 16, "model": 16}), dp_axes=("data",))
+
+
+def test_param_specs_divisibility_fallbacks():
+    rules = _rules()
+    cfg = get_config("qwen2-0.5b")  # 14 heads, kv=2: both !% 16
+    shapes = params_shape(cfg)
+    specs = param_specs(shapes, cfg, rules)
+    blk = specs["blocks"]["00_attn"]
+    # stacked leaves are (G, d_in, d_out): group axis never sharded
+    assert blk["attn"]["wq"]["w"] == P(None, None, None), "14 q-heads must replicate"
+    assert blk["attn"]["wk"]["w"] == P(None, None, None), "2 kv-heads must replicate"
+    assert blk["ffn"]["w_gate"]["w"] == P(None, None, "model")
+    assert blk["ffn"]["w_down"]["w"] == P(None, "model", None)
+    assert any("replicated" in d for d in rules.decisions)
+
+
+def test_param_specs_moe_and_dense():
+    rules = _rules()
+    cfg = get_config("kimi-k2-1t-a32b")  # 64 heads, 384 experts: divisible
+    shapes = params_shape(cfg)
+    specs = param_specs(shapes, cfg, rules)
+    blk = specs["blocks"]["00_attn"]
+    assert blk["attn"]["wq"]["w"] == P(None, None, "model")
+    assert blk["ffn"]["w_gate"] == P(None, "model", None, None)  # (G, E, d, f)
+    assert specs["embed"]["w"] == P("model", None)
+
+
+def test_batch_axis_fallbacks():
+    rules = _rules()
+    assert rules.batch_axes(256) == ("data",)
+    assert rules.batch_axes(1) is None  # long_500k: replicate batch
+
+
+MULTIDEV_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.dist.collectives import (
+        htree_allreduce, ring_allgather_matmul, compressed_psum_with_feedback, shuffle,
+    )
+    mesh = jax.make_mesh((8,), ("model",))
+    x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4)
+    out = htree_allreduce(x, mesh, "model")
+    want = jnp.tile(x.reshape(8, 1, 4).sum(0), (8, 1)).reshape(8, 4)
+    assert np.allclose(np.asarray(out), np.asarray(want)), "htree"
+
+    k = jax.random.key(0)
+    a = jax.random.normal(k, (16, 32))
+    w = jax.random.normal(jax.random.key(1), (32, 24))
+    y = ring_allgather_matmul(a, w, mesh, "model")
+    assert np.allclose(np.asarray(y), np.asarray(a @ w), atol=1e-3), "ring matmul"
+
+    g = jax.random.normal(jax.random.key(2), (64,))
+    err = jnp.zeros((64,))
+    red, new_err = compressed_psum_with_feedback(g, err, mesh, ("model",))
+    # replicated input: mean-reduce returns ~the same vector, error bounded
+    assert np.allclose(np.asarray(red), np.asarray(g), atol=0.05), "compressed psum"
+    assert float(jnp.abs(new_err).max()) <= float(jnp.abs(g).max()) / 127 + 1e-6
+    print("MULTIDEV_OK")
+    """
+)
+
+
+def test_collectives_multidevice_subprocess():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        timeout=600,
+    )
+    assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr
+
+
+DRYRUN_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import json, dataclasses
+    import jax
+    from repro.configs import reduced_config, get_config
+    from repro.configs.base import ShapeCell
+    from repro.dist.sharding import MeshRules
+    from repro.launch.specs import input_specs
+    from repro.launch.hlo_analysis import parse_collectives
+    from repro.models.runtime import RunFlags
+    from repro.train.steps import make_train_step
+
+    cfg = dataclasses.replace(reduced_config(get_config("internlm2-20b")), n_heads=4, n_kv_heads=4)
+    cell = ShapeCell("tiny_train", "train", 32, 8)
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    rules = MeshRules.from_mesh(mesh)
+    flags = RunFlags(attn_chunk=16, flash_threshold=64)
+    specs = input_specs(cfg, cell, rules, flags)
+    step = make_train_step(cfg, flags, rules)
+    with mesh:
+        compiled = jax.jit(step).lower(specs["state"], specs["batch"]).compile()
+        stats = parse_collectives(compiled.as_text())
+        mem = compiled.memory_analysis()
+    assert stats.total_operand_bytes > 0, "TP training must emit collectives"
+    assert mem.argument_size_in_bytes > 0
+    print("DRYRUN_OK", stats.total_operand_bytes)
+    """
+)
+
+
+def test_tiny_dryrun_subprocess():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", DRYRUN_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        timeout=900,
+    )
+    assert "DRYRUN_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_hlo_collective_parser():
+    hlo = """
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[4096]{0} all-gather(%y), replica_groups=[32,8]<=[256], dimensions={0}
+  %rs = f32[128]{0} reduce-scatter(%z), replica_groups=[8,4]<=[32], dimensions={0}
+  %cp = bf16[64,64]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+    stats = parse_collectives(hlo)
+    assert stats.counts == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1, "collective-permute": 1}
+    assert stats.operand_bytes["all-reduce"] == 1024 * 512 * 4
+    assert stats.operand_bytes["all-gather"] == 4096 * 2 // 8
+    assert stats.operand_bytes["reduce-scatter"] == 128 * 4 * 4
+    assert stats.operand_bytes["collective-permute"] == 64 * 64 * 2
+    rl = roofline_terms(1e12, 1e9, stats, model_flops_per_device=5e11)
+    assert rl.dominant in ("compute", "memory", "collective")
+    assert 0 < rl.useful_ratio <= 1

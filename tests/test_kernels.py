@@ -1,0 +1,74 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and bit-widths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref, ops
+from repro.models.common import quantize_weight
+
+
+@pytest.mark.parametrize("xb,wb", [(8, 8), (4, 4), (16, 8), (8, 16), (16, 16)])
+@pytest.mark.parametrize("mnk", [(128, 128, 128), (256, 128, 256), (128, 256, 512)])
+def test_bitslice_matmul_matches_wide_int(xb, wb, mnk):
+    m, n, k = mnk
+    rng = np.random.default_rng(xb * 100 + wb + m)
+    xlo, xhi = ref.slice_range(xb)
+    wlo, whi = ref.slice_range(wb)
+    x = jnp.asarray(rng.integers(xlo, xhi + 1, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(wlo, whi + 1, (k, n)), jnp.int32)
+    xs, ws = ref.to_slices(x, xb), ref.to_slices(w, wb)
+    assert (ref.from_slices(xs) == x).all(), "x slice roundtrip"
+    assert (ref.from_slices(ws) == w).all(), "w slice roundtrip"
+    want = ref.int_matmul_wide_ref(x, w, xb, wb)
+    got_ref = ref.bitslice_matmul_ref(xs, ws)
+    got_pal = ops.bitslice_matmul(xs, ws, impl="interpret", block=(128, 128, 128))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got_ref))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got_pal))
+
+
+def test_zero_slice_skipping_exact():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-100, 100, (128, 256)), jnp.int32)
+    w = jnp.asarray(rng.integers(-100, 100, (256, 128)), jnp.int32)
+    xs, ws = ref.to_slices(x, 8), ref.to_slices(w, 16)
+    skip = ops.zero_slice_pairs(None, np.asarray(ws))
+    assert skip, "small-valued int16 weights must have a dead hi slice"
+    want = ref.int_matmul_wide_ref(x, w, 8, 16)
+    got = ops.bitslice_matmul(xs, ws, impl="interpret", skip=skip, block=(128, 128, 128))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("n,d", [(8, 512), (64, 512), (256, 1024)])
+def test_htree_reduce_matches_tree_oracle(dtype, n, d):
+    x = jax.random.normal(jax.random.key(n + d), (n, d), jnp.float32)
+    if dtype == jnp.int32:
+        x = (x * 100).astype(jnp.int32)
+    else:
+        x = x.astype(dtype)
+    want = ref.htree_reduce_ref(x)
+    got = ops.htree_reduce(x, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("b,t,w", [(1, 256, 512), (2, 512, 1024), (3, 128, 512)])
+def test_rglru_scan_kernel(b, t, w):
+    ks = jax.random.split(jax.random.key(b * t), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, t, w)))
+    bb = jax.random.normal(ks[1], (b, t, w))
+    h0 = jax.random.normal(ks[2], (b, w))
+    want = ref.rglru_scan_ref(a, bb, h0)
+    got = ops.rglru_scan(a, bb, h0, impl="interpret")
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-4, rtol=1e-4)
+
+
+def test_quantized_matmul_end_to_end_error_bound():
+    ks = jax.random.split(jax.random.key(7), 2)
+    x = jax.random.normal(ks[0], (64, 256), jnp.float32)
+    w = jax.random.normal(ks[1], (256, 128), jnp.float32) * 0.05
+    q = quantize_weight(w, 8)
+    out = ops.quantized_matmul(x, q["w_q"].astype(jnp.int32), q["w_scale"][0])
+    rel = float(jnp.abs(out - x @ w).max() / jnp.abs(x @ w).max())
+    assert rel < 0.05, rel

@@ -1,0 +1,119 @@
+"""PIMSAB compiler: adaptive precision, lifetime, fragmented allocation,
+parallelism distribution, codegen invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from benchmarks import workloads
+from repro.core.compiler import (
+    adaptive_precision,
+    allocate,
+    compile_workload,
+    distribute,
+)
+from repro.core.compiler.allocation import BufferReq, WordlineAllocator, mul_live_window
+from repro.core.compiler.tensor_dsl import reorder, split
+from repro.core.machine import PIMSAB
+from repro.core import isa
+from repro.core.simulator import Simulator
+
+SET = settings(max_examples=30, deadline=None)
+
+
+def test_adaptive_precision_paper_example():
+    """§V-C: i8×i8 accumulated 1024× needs 8+8+log2(1024) = 26 bits, not 32."""
+    assert adaptive_precision(8, 8, 1024, "mac") == 26
+    assert adaptive_precision(8, 10, 1, "mul") == 18  # the §III-B example
+    assert adaptive_precision(8, 8, 1, "add") == 9
+
+
+@SET
+@given(st.integers(2, 16), st.integers(2, 16), st.integers(1, 10**6))
+def test_adaptive_precision_is_sufficient(pa, pb, k):
+    """Property: the adaptive width can represent the extreme accumulation."""
+    p = adaptive_precision(pa, pb, k, "mac")
+    extreme = (2 ** (pa - 1)) * (2 ** (pb - 1)) * k
+    assert extreme <= 2 ** (p - 1) + 2 ** max(p - 2, 0), (pa, pb, k, p)
+
+
+def test_mul_live_window_half():
+    assert mul_live_window(16) == 8  # Fig 8a: half-width live set
+
+
+def test_fragmented_allocation():
+    wa = WordlineAllocator(64)
+    assert wa.alloc(30) == [(0, 30)]
+    assert wa.alloc(20) == [(30, 50)]
+    wa.free.append((100, 100))  # no-op range
+    # only 14 contiguous left; ask for 14 split across nothing — fits
+    got = wa.alloc(14)
+    assert got and sum(e - s for s, e in got) == 14
+
+
+def test_fragmented_allocation_splits():
+    wa = WordlineAllocator(64)
+    wa.free = [(0, 10), (20, 30), (40, 64)]
+    got = wa.alloc(25)
+    assert len(got) > 1, "must fragment (Fig 8b)"
+    assert sum(e - s for s, e in got) == 25
+
+
+def test_allocate_infeasible_feedback():
+    reqs = [BufferReq("x", 300, 300)]
+    assert not allocate(reqs, 256).feasible
+
+
+@pytest.mark.parametrize("mk", list(workloads.MICROBENCHES.values()))
+def test_distribution_constraints(mk):
+    w = mk()
+    m = distribute(w, PIMSAB)
+    assert m.allocation.feasible
+    assert m.allocation.used <= PIMSAB.cram_rows
+    assert 0 < m.occupancy <= 1.0
+    assert m.lanes_used <= PIMSAB.pes_per_tile
+    # adaptive precision never exceeds the program's accumulator
+    assert m.out_prec <= w.acc_prec
+
+
+def test_gemm_distribution_prefers_full_occupancy():
+    m = distribute(workloads.gemm(), PIMSAB)
+    assert m.occupancy == 1.0
+    assert m.reduce_split > 1, "gemm should split the reduction across lanes"
+
+
+def test_codegen_emits_reduction_and_matches_dram_model():
+    w = workloads.gemv()
+    cp = compile_workload(w, PIMSAB)
+    kinds = {type(i).__name__ for i in cp.program}
+    assert "ReduceIntra" in kinds or cp.mapping.reduce_split == 1
+    emitted = sum(i.bits for i in cp.program if isinstance(i, (isa.DramLoad, isa.DramStore)))
+    assert emitted == pytest.approx(cp.mapping.dram_bits, rel=0.05)
+
+
+def test_schedule_primitives():
+    w = workloads.gemm(m=64, n=8, k=16)
+    w2 = split(w, "x", 8)
+    names = [l.name for l in w2.loops]
+    assert "x.o" in names and "x.i" in names
+    w3 = reorder(w2, ["y", "k", "x.o", "x.i"])
+    assert [l.name for l in w3.loops] == ["y", "k", "x.o", "x.i"]
+
+
+def test_simulator_functional_program():
+    """End-to-end: an ISA program computing (a+b) on a functional machine."""
+    import dataclasses
+
+    cfg = dataclasses.replace(PIMSAB, mesh_cols=1, mesh_rows=1)
+    sim = Simulator(cfg, functional=True)
+    rng = np.random.default_rng(0)
+    a, b = rng.integers(-100, 100, 256), rng.integers(-100, 100, 256)
+    sim.cram(0, 0).write(0, a, 8)
+    sim.cram(0, 0).write(8, b, 8)
+    res = sim.run([
+        isa.RfLoad(tiles=(0,), reg=0, value=5),
+        isa.Add(tiles=(0,), dst=16, prec_dst=9, src1=0, prec1=8, src2=8, prec2=8),
+        isa.MulConst(tiles=(0,), dst=32, prec_dst=16, src1=0, prec1=8, reg=0),
+    ])
+    assert (sim.cram(0, 0).read(16, 9) == a + b).all()
+    assert (sim.cram(0, 0).read(32, 16) == a * 5).all()
+    assert res.total_cycles > 0 and res.energy.total_j > 0

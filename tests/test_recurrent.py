@@ -1,0 +1,100 @@
+"""Recurrent blocks: chunkwise/parallel forms vs sequential oracles, and
+prefill→decode continuation consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models.recurrent import (
+    _mlstm_chunk_scan,
+    _mlstm_decode_step,
+    mlstm_state_init,
+    rglru_block_apply,
+    rglru_block_init,
+    rglru_state_init,
+    slstm_block_apply,
+    slstm_block_init,
+    slstm_state_init,
+)
+
+
+def _naive_mlstm(q, k, v, ig, lf):
+    b, s, h, dh = q.shape
+    C = np.zeros((b, h, dh, dh))
+    n = np.zeros((b, h, dh))
+    m = np.zeros((b, h))
+    ys = []
+    for t in range(s):
+        m_new = np.maximum(lf[:, t] + m, ig[:, t])
+        fw = np.exp(lf[:, t] + m - m_new)
+        iw = np.exp(ig[:, t] - m_new)
+        C = C * fw[..., None, None] + iw[..., None, None] * (k[:, t][..., :, None] * v[:, t][..., None, :])
+        n = n * fw[..., None] + iw[..., None] * k[:, t]
+        num = np.einsum("bhd,bhde->bhe", q[:, t], C)
+        den = np.maximum(np.abs(np.einsum("bhd,bhd->bh", q[:, t], n)), np.exp(-m_new))
+        ys.append(num / den[..., None])
+        m = m_new
+    return np.stack(ys, 1)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_mlstm_chunkwise_matches_sequential(chunk):
+    b, s, h, dh = 2, 32, 2, 8
+    ks = jax.random.split(jax.random.key(0), 5)
+    q = np.asarray(jax.random.normal(ks[0], (b, s, h, dh))) / np.sqrt(dh)
+    k = np.asarray(jax.random.normal(ks[1], (b, s, h, dh)))
+    v = np.asarray(jax.random.normal(ks[2], (b, s, h, dh)))
+    ig = np.asarray(jax.random.normal(ks[3], (b, s, h))) * 2
+    lf = np.asarray(jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)) * 2))
+    ref = _naive_mlstm(q, k, v, ig, lf)
+    st = {"C": jnp.zeros((b, h, dh, dh)), "n": jnp.zeros((b, h, dh)), "m": jnp.zeros((b, h))}
+    y, _ = _mlstm_chunk_scan(*(jnp.asarray(t) for t in (q, k, v, ig, lf)), st, chunk)
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-4, rtol=1e-4)
+
+
+def test_mlstm_decode_continues_chunkwise_state():
+    b, s, h, dh = 2, 32, 2, 8
+    ks = jax.random.split(jax.random.key(1), 5)
+    q = np.asarray(jax.random.normal(ks[0], (b, s, h, dh))) / np.sqrt(dh)
+    k = np.asarray(jax.random.normal(ks[1], (b, s, h, dh)))
+    v = np.asarray(jax.random.normal(ks[2], (b, s, h, dh)))
+    ig = np.asarray(jax.random.normal(ks[3], (b, s, h))) * 2
+    lf = np.asarray(jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)) * 2))
+    ref = _naive_mlstm(q, k, v, ig, lf)
+    st = {"C": jnp.zeros((b, h, dh, dh)), "n": jnp.zeros((b, h, dh)), "m": jnp.zeros((b, h))}
+    _, st = _mlstm_chunk_scan(*(jnp.asarray(t[:, :24]) for t in (q, k, v, ig, lf)), st, 8)
+    for t in range(24, 32):
+        yd, st = _mlstm_decode_step(*(jnp.asarray(a[:, t]) for a in (q, k, v, ig, lf)), st)
+        np.testing.assert_allclose(np.asarray(yd), ref[:, t], atol=1e-4, rtol=1e-4)
+
+
+def test_rglru_scan_equals_stepwise():
+    cfg = reduced_config(get_config("recurrentgemma-2b"))
+    p = rglru_block_init(jax.random.key(2), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(3), (2, 16, cfg.d_model), jnp.float32)
+    y_full, _ = rglru_block_apply(p, x, cfg)
+    st = rglru_state_init(cfg, 2)
+    st = {"h": st["h"], "conv": st["conv"].astype(jnp.float32)}
+    ys = []
+    for t in range(16):
+        yt, st = rglru_block_apply(p, x[:, t : t + 1], cfg, st)
+        ys.append(yt)
+    np.testing.assert_allclose(
+        np.asarray(y_full), np.asarray(jnp.concatenate(ys, 1)), atol=2e-4, rtol=2e-4
+    )
+
+
+def test_slstm_decode_continuation():
+    cfg = reduced_config(get_config("xlstm-1.3b"))
+    p = slstm_block_init(jax.random.key(4), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(5), (2, 12, cfg.d_model), jnp.float32)
+    y_full, _ = slstm_block_apply(p, x, cfg)
+    st = slstm_state_init(cfg, 2)
+    ys = []
+    for t in range(12):
+        yt, st = slstm_block_apply(p, x[:, t : t + 1], cfg, st)
+        ys.append(yt)
+    np.testing.assert_allclose(
+        np.asarray(y_full), np.asarray(jnp.concatenate(ys, 1)), atol=2e-4, rtol=2e-4
+    )

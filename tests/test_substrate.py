@@ -1,0 +1,159 @@
+"""Substrate: data pipeline determinism, checkpoint atomicity + elastic
+restore, fault policies, train-resume bit-exactness, serving engine."""
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import DataConfig, TokenPipeline, batch_at
+from repro.models.runtime import RunFlags
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.train import checkpoint
+from repro.train.fault import HeartbeatMonitor, RestartPolicy, elastic_mesh_shape
+from repro.train.optimizer import AdamWConfig, wsd_schedule
+from repro.train.trainer import TrainLoopConfig, train
+
+FLAGS = RunFlags(attn_chunk=8, flash_threshold=64)
+
+
+# --- data pipeline ----------------------------------------------------------
+
+
+def test_pipeline_deterministic_and_shardable():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=8)
+    b0 = batch_at(cfg, step=7)
+    b1 = batch_at(cfg, step=7)
+    np.testing.assert_array_equal(b0["tokens"], b1["tokens"])
+    # shards from world=2 differ per rank and are the right size
+    s0, s1 = batch_at(cfg, 7, 0, 2), batch_at(cfg, 7, 1, 2)
+    assert s0["tokens"].shape == (4, 32)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+
+
+def test_pipeline_prefetch_resume():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=2)
+    p = TokenPipeline(cfg, start_step=0)
+    first = next(p)
+    p.close()
+    np.testing.assert_array_equal(first["tokens"], batch_at(cfg, 0)["tokens"])
+
+
+# --- checkpointing ----------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_prune(tmp_path):
+    state = {
+        "params": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4)},
+        "opt": {"m": jnp.ones((3, 4), jnp.float32)},
+        "step": jnp.int32(5),
+    }
+    for s in (1, 2, 3, 4):
+        checkpoint.save(str(tmp_path), state, s)
+    checkpoint.prune(str(tmp_path), keep=2)
+    assert checkpoint.latest_step(str(tmp_path)) == 4
+    remaining = sorted(p.name for p in tmp_path.iterdir())
+    assert remaining == ["step_00000003", "step_00000004"]
+    template = jax.eval_shape(lambda: state)
+    restored, step, _ = checkpoint.restore(str(tmp_path), template)
+    assert step == 4
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"], np.float32),
+        np.asarray(state["params"]["w"], np.float32),
+    )
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    state = {"w": jnp.ones((4,))}
+    checkpoint.save(str(tmp_path), state, 1)
+    # no stray temp dirs remain
+    assert all(not p.name.startswith(".tmp_") for p in tmp_path.iterdir())
+
+
+# --- fault tolerance --------------------------------------------------------
+
+
+def test_heartbeat_dead_and_straggler():
+    mon = HeartbeatMonitor(4, timeout_s=10.0, straggler_factor=2.0)
+    t = 0.0
+    for step in range(1, 6):
+        for w in range(4):
+            dt = 4.0 if w == 3 else 1.0  # worker 3 is slow
+            mon.beat(w, step, now=t + dt * step)
+    assert mon.stragglers() == [3]
+    assert mon.dead(now=t + 5 * 4.0 + 11.0) != []
+
+
+def test_elastic_mesh_shapes():
+    assert elastic_mesh_shape(512, model_axis=16) == (32, 16)  # all survivors
+    assert elastic_mesh_shape(511, model_axis=16) == (16, 16)  # next pow2 down
+    assert elastic_mesh_shape(512, model_axis=16, pod_axis=2) == (2, 16, 16)
+    assert elastic_mesh_shape(300, model_axis=16) == (16, 16)
+
+
+def test_restart_policy_flow():
+    mon = HeartbeatMonitor(512)
+    pol = RestartPolicy()
+    plan = pol.on_failure(mon, dead=[3, 77])
+    assert plan["action"] == "elastic_restart"
+    assert plan["new_mesh_shape"] == (16, 16)  # 510 alive -> drop to 256 chips
+
+
+# --- train resume bit-exactness --------------------------------------------
+
+
+def test_train_resume_matches_uninterrupted(tmp_path):
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+
+    loop_a = TrainLoopConfig(steps=8, ckpt_every=100, ckpt_dir=str(tmp_path / "a"), log_every=4, schedule_steps=8)
+    out_a = train(cfg, data_cfg, loop_a, FLAGS)
+
+    loop_b1 = TrainLoopConfig(steps=4, ckpt_every=4, ckpt_dir=str(tmp_path / "b"), log_every=4, schedule_steps=8)
+    train(cfg, data_cfg, loop_b1, FLAGS)
+    loop_b2 = TrainLoopConfig(steps=8, ckpt_every=100, ckpt_dir=str(tmp_path / "b"), log_every=4, schedule_steps=8)
+    out_b = train(cfg, data_cfg, loop_b2, FLAGS)
+    assert out_b["resumed_from"] == 4
+
+    for la, lb in zip(
+        jax.tree_util.tree_leaves(out_a["state"]["params"]),
+        jax.tree_util.tree_leaves(out_b["state"]["params"]),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(la, np.float32), np.asarray(lb, np.float32), atol=1e-6
+        )
+
+
+def test_wsd_schedule_shape():
+    lr = wsd_schedule(1.0, warmup=10, stable=80, decay=10)
+    assert 0.0 < float(lr(jnp.int32(0))) <= 0.2  # first step trains (lr > 0)
+    assert float(lr(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(lr(jnp.int32(50))) == pytest.approx(1.0)
+    assert float(lr(jnp.int32(100))) < 0.2
+
+
+# --- serving ----------------------------------------------------------------
+
+
+def test_serve_engine_batched_requests():
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    params = init_params(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, FLAGS, max_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(2, 200, size=5).astype(np.int32), max_new_tokens=4)
+        for i in range(3)
+    ]
+    done = engine.run(reqs)
+    assert all(len(r.generated) == 4 for r in done)
+    # engine serves with int8 bit-sliced weights
+    leaves = jax.tree_util.tree_leaves(engine.params)
+    assert any(l.dtype == jnp.int8 for l in leaves)
