@@ -1,0 +1,144 @@
+"""Registry-driven kernel micro-benchmarks (the perf-trajectory baseline).
+
+The kernel list is enumerated from the backend registry
+(``repro.kernels.api.registered_kernels``) — not hand-maintained — so a new
+``@register_kernel`` automatically joins the bench.  Each kernel runs its
+oracle under ``use_backend("xla")`` (jit-compiled, what the CPU container can
+execute; the TPU target swaps the context to "pallas" with no other change)
+and is cross-checked once against interpret mode on a reduced shape.
+
+``run()`` returns the row list for benchmarks/run.py; ``main()`` also writes
+``BENCH_kernels.json`` at the repo root so future PRs have a baseline to
+compare against.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import api, ref
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_kernels.json"
+
+# Bench operand builders per registered kernel: (bench shape, reduced
+# validation shape).  A kernel registered without an entry here still fails
+# loudly in run() — coverage is enforced by the registry, not this dict.
+_SEED = 0
+
+
+def _bitslice_args(m, n, k, xb, wb):
+    rng = np.random.default_rng(_SEED)
+    xlo, xhi = ref.slice_range(xb)
+    wlo, whi = ref.slice_range(wb)
+    x = jnp.asarray(rng.integers(xlo, xhi + 1, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(wlo, whi + 1, (k, n)), jnp.int32)
+    return (
+        api.SlicedTensor.from_int(x, xb),
+        api.SlicedTensor.from_int(w, wb, scale=jnp.ones((n,), jnp.float32)),
+    )
+
+
+def _cases() -> Dict[str, Dict[str, Callable]]:
+    return {
+        "bitslice_matmul": {
+            "bench": lambda: _bench_call(api.matmul, *_bitslice_args(512, 512, 512, 8, 8)),
+            "validate": lambda: _validate_matmul(128, 128, 128, 8, 16),
+        },
+        "htree_reduce": {
+            "bench": lambda: _bench_call(
+                api.htree_reduce,
+                jax.random.normal(jax.random.key(_SEED), (256, 2048), jnp.float32),
+            ),
+            "validate": lambda: _validate_unary(
+                api.htree_reduce, ref.htree_reduce_ref,
+                jax.random.normal(jax.random.key(_SEED), (16, 512), jnp.float32),
+            ),
+        },
+        "rglru_scan": {
+            "bench": lambda: _bench_call(
+                api.rglru_scan,
+                jax.nn.sigmoid(jax.random.normal(jax.random.key(1), (2, 512, 1024))),
+                jax.random.normal(jax.random.key(2), (2, 512, 1024)),
+                jax.random.normal(jax.random.key(3), (2, 1024)),
+            ),
+            "validate": lambda: _validate_rglru(),
+        },
+    }
+
+
+def _bench_call(fn, *args, iters: int = 5) -> float:
+    """Median wall-time (us) of the jitted call under the xla backend."""
+    with api.use_backend("xla"):
+        jitted = jax.jit(lambda *a: fn(*a))
+        jax.block_until_ready(jitted(*args))  # compile outside the timing
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jitted(*args))
+            times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def _validate_matmul(m, n, k, xb, wb) -> bool:
+    x, w = _bitslice_args(m, n, k, xb, wb)
+    with api.use_backend("xla"):
+        want = api.matmul(x, w)
+    with api.use_backend("interpret"):
+        got = api.matmul(x, w, block=(128, 128, 128))
+    return bool(jnp.allclose(want, got))
+
+
+def _validate_unary(fn, oracle, x) -> bool:
+    with api.use_backend("interpret"):
+        got = fn(x)
+    return bool(jnp.allclose(oracle(x), got))
+
+
+def _validate_rglru() -> bool:
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(1), (1, 256, 512)))
+    b = jax.random.normal(jax.random.key(2), (1, 256, 512))
+    h0 = jax.random.normal(jax.random.key(3), (1, 512))
+    with api.use_backend("interpret"):
+        got = api.rglru_scan(a, b, h0)
+    return bool(jnp.allclose(ref.rglru_scan_ref(a, b, h0), got, atol=1e-4))
+
+
+def run() -> List[Dict]:
+    cases = _cases()
+    rows = []
+    for name in sorted(api.registered_kernels()):
+        case = cases.get(name)
+        if case is None:
+            raise KeyError(
+                f"kernel {name!r} is registered but has no bench case — "
+                "add one to benchmarks/kernels_bench.py"
+            )
+        rows.append(
+            {
+                "kernel": name,
+                "backend": "xla",
+                "us_per_call": round(case["bench"](), 3),
+                "interpret_matches_oracle": case["validate"](),
+            }
+        )
+    return rows
+
+
+def main() -> List[Dict]:
+    rows = run()
+    OUT_PATH.write_text(json.dumps({"kernels": rows}, indent=2) + "\n")
+    for r in rows:
+        print(r)
+    print(f"wrote {OUT_PATH}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

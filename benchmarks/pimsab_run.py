@@ -1,13 +1,42 @@
 """Shared helper: compile a workload, simulate it on a PIMSAB config, return
-time/energy/breakdowns."""
+time/energy/breakdowns.
+
+Precision is expressed with the same :class:`repro.kernels.api.PrecisionSpec`
+the TPU-native kernel path uses: passing ``precision=`` rewrites the
+workload's operand/accumulator bit widths before compilation, so a single
+spec describes the adaptive-precision choice on both substrates.
+"""
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+import dataclasses
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.compiler.codegen import compile_workload
 from repro.core.compiler.tensor_dsl import Workload
 from repro.core.machine import PIMSAB, PimsabConfig
 from repro.core.simulator import Simulator
+from repro.kernels.api import PrecisionSpec
+
+
+def apply_precision(w: Workload, spec: PrecisionSpec) -> Workload:
+    """Rewrite a workload's Ref precisions from a PrecisionSpec.
+
+    The first input takes ``act_bits``, remaining non-const inputs take
+    ``weight_bits``; the output/accumulator take ``accum_bits``.
+    """
+    new_ins = []
+    for i, r in enumerate(w.ins):
+        if r.is_const:
+            new_ins.append(r)
+            continue
+        bits = spec.act_bits if i == 0 else spec.weight_bits
+        new_ins.append(dataclasses.replace(r, prec=bits))
+    return dataclasses.replace(
+        w,
+        ins=tuple(new_ins),
+        out=dataclasses.replace(w.out, prec=spec.accum_bits),
+        acc_prec=spec.accum_bits,
+    )
 
 # Iso-area static power (§VI-B: "the static energy is normalized indirectly
 # to A100 through having the same area footprint and DRAM bandwidth") —
@@ -15,13 +44,18 @@ from repro.core.simulator import Simulator
 PIMSAB_STATIC_W = 60.0
 
 
-def run_workload(w: Workload, cfg: PimsabConfig = PIMSAB, hand_tuned: bool = False) -> Dict:
+def run_workload(
+    w: Workload,
+    cfg: PimsabConfig = PIMSAB,
+    hand_tuned: bool = False,
+    precision: Optional[PrecisionSpec] = None,
+) -> Dict:
+    if precision is not None:
+        w = apply_precision(w, precision)
     if hand_tuned:
         # hand-tuned kernels prefetch DRAM bursts and overlap the broadcast
         # receive with compute (the Fig. 14 gap the compiler leaves on the
         # table with its conservative synchronization)
-        import dataclasses
-
         cfg = dataclasses.replace(cfg, dram_latency_cycles=0)
     cp = compile_workload(w, cfg, hand_tuned=hand_tuned)
     sim = Simulator(cfg)

@@ -22,7 +22,7 @@ def main() -> None:
     import benchmarks.fig13_workload_sensitivity as fig13
     import benchmarks.fig14_compiler as fig14
     import benchmarks.fig15_area as fig15
-    from benchmarks import roofline
+    from benchmarks import kernels_bench, roofline
 
     details = []
     failures = 0
@@ -72,6 +72,12 @@ def main() -> None:
     section(
         "roofline_dryrun", roofline.run,
         lambda rows: f"cells={len(rows)}_ok={sum(1 for r in rows if r['status']=='ok')}",
+    )
+    # registry-driven kernel micro-bench (also refreshes BENCH_kernels.json,
+    # the perf-trajectory baseline future PRs compare against)
+    section(
+        "kernels_api", kernels_bench.main,
+        lambda rows: "_".join(f"{r['kernel']}={r['us_per_call']:.0f}us" for r in rows),
     )
 
     print("\n=== details ===")

@@ -15,7 +15,7 @@ from benchmarks.pimsab_run import run_workload
 from repro.core.compiler import compile_workload, distribute
 from repro.core.machine import PIMSAB
 from repro.kernels import ref as kref
-from repro.kernels import ops as kops
+from repro.kernels.api import PrecisionSpec, SlicedTensor, matmul, use_backend
 
 
 def main() -> None:
@@ -33,19 +33,27 @@ def main() -> None:
     print(f"  time {r['time_s']*1e6:.1f} us | energy {r['energy_j']*1e3:.3f} mJ")
     print(f"  cycle breakdown: { {k: round(v,3) for k,v in r['cycle_breakdown'].items()} }")
 
-    print("\n=== same math, TPU-native (bit-slice kernel) ===")
+    print("\n=== same math, TPU-native (bit-slice kernel, unified API) ===")
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.integers(-128, 128, (256, 512)), jnp.int32)
     b = jnp.asarray(rng.integers(-128, 128, (512, 256)), jnp.int32)
-    xs, ws = kref.to_slices(a, 8), kref.to_slices(b, 8)
-    got = kops.bitslice_matmul(xs, ws, impl="interpret", block=(128, 128, 128))
+    xs = SlicedTensor.from_int(a, 8)
+    ws = SlicedTensor.from_int(b, 8)
+    with use_backend("interpret"):  # Pallas kernel body, validated on CPU
+        got = matmul(xs, ws, block=(128, 128, 128))
     want = kref.int_matmul_wide_ref(a, b, 8, 8)
     print(f"  interpret-mode kernel == wide-int oracle: {bool((got == want).all())}")
 
     # adaptive precision: int4 operands need one plane pair and half the work
+    spec4 = PrecisionSpec.int4
     a4 = jnp.asarray(rng.integers(-8, 8, (256, 512)), jnp.int32)
     b4 = jnp.asarray(rng.integers(-8, 8, (512, 256)), jnp.int32)
-    got4 = kops.bitslice_matmul(kref.to_slices(a4, 4), kref.to_slices(b4, 4), impl="interpret", block=(128, 128, 128))
+    with use_backend("interpret"):
+        got4 = matmul(
+            SlicedTensor.from_int(a4, spec4.act_bits),
+            SlicedTensor.from_int(b4, spec4.weight_bits),
+            block=(128, 128, 128),
+        )
     print(f"  int4 path exact: {bool((got4 == kref.int_matmul_wide_ref(a4, b4, 4, 4)).all())}")
 
 

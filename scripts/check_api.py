@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""API smoke check: import every public symbol and reject deprecated usage.
+
+Two gates (both run in CI):
+
+1. every public symbol of the unified kernel API and its consumers imports
+   cleanly (catches circular imports / missing exports early);
+2. no call site inside ``src/`` or ``benchmarks/`` passes the deprecated
+   ``impl=`` kwarg — kernel dispatch must go through the backend registry
+   (``repro.kernels.api.use_backend``).  Keyword *definitions* in the
+   compatibility shims are allowed; keyword *arguments* are not.
+
+Exit code 0 on success, 1 with a report on failure.
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import sys
+import traceback
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+PUBLIC_MODULES = [
+    "repro.kernels",
+    "repro.kernels.api",
+    "repro.kernels.ops",
+    "repro.kernels.ref",
+    "repro.dist.sharding",
+    "repro.dist.collectives",
+    "repro.models.common",
+    "repro.models.attention",
+    "repro.models.transformer",
+    "repro.serve.engine",
+    "repro.launch.specs",
+    "repro.train.steps",
+    "benchmarks.kernels_bench",
+    "benchmarks.pimsab_run",
+]
+
+API_SYMBOLS = [
+    "PrecisionSpec",
+    "SlicedTensor",
+    "use_backend",
+    "current_backend",
+    "set_default_backend",
+    "register_kernel",
+    "registered_kernels",
+    "matmul",
+    "quantized_matmul",
+]
+
+
+def check_imports() -> list[str]:
+    errors = []
+    for mod in PUBLIC_MODULES:
+        try:
+            importlib.import_module(mod)
+        except Exception:
+            errors.append(f"import {mod} failed:\n{traceback.format_exc()}")
+    try:
+        api = importlib.import_module("repro.kernels.api")
+        for sym in API_SYMBOLS:
+            if not hasattr(api, sym):
+                errors.append(f"repro.kernels.api missing public symbol {sym!r}")
+        kernels = api.registered_kernels()
+        for required in ("bitslice_matmul", "htree_reduce", "rglru_scan"):
+            if required not in kernels:
+                errors.append(f"kernel {required!r} not registered")
+    except Exception:
+        errors.append(f"api introspection failed:\n{traceback.format_exc()}")
+    return errors
+
+
+class _ImplCallFinder(ast.NodeVisitor):
+    def __init__(self) -> None:
+        self.hits: list[int] = []
+
+    def visit_Call(self, node: ast.Call) -> None:
+        for kw in node.keywords:
+            if kw.arg == "impl":
+                self.hits.append(node.lineno)
+        self.generic_visit(node)
+
+
+def check_no_impl_kwarg() -> list[str]:
+    errors = []
+    for root in (REPO / "src", REPO / "benchmarks"):
+        for path in sorted(root.rglob("*.py")):
+            tree = ast.parse(path.read_text(), filename=str(path))
+            finder = _ImplCallFinder()
+            finder.visit(tree)
+            for line in finder.hits:
+                errors.append(
+                    f"{path.relative_to(REPO)}:{line}: deprecated impl= kwarg — "
+                    "use repro.kernels.api.use_backend(...)"
+                )
+    return errors
+
+
+def main() -> int:
+    errors = check_imports() + check_no_impl_kwarg()
+    if errors:
+        print("check_api: FAIL")
+        for e in errors:
+            print(" -", e)
+        return 1
+    print(
+        f"check_api: OK ({len(PUBLIC_MODULES)} modules, "
+        f"{len(API_SYMBOLS)} api symbols, no impl= call sites)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,7 @@
+"""Distribution layer: sharding rules and mesh-level collectives.
+
+``sharding`` decides how params/activations/caches map onto the
+("data", "model") mesh with divisibility fallbacks; ``collectives`` holds
+the H-tree-shaped mesh collectives (the paper's spatially-aware
+communication, TPU-native form).
+"""

@@ -1,0 +1,123 @@
+"""Mesh-level collectives shaped like PIMSAB's spatially-aware communication.
+
+The paper's H-tree broadcasts/reductions and systolic neighbor transfers map
+onto mesh collectives built from ``ppermute`` schedules under ``shard_map``:
+
+* :func:`htree_allreduce` — log-depth butterfly (recursive halving/doubling
+  order), the mesh twin of ``kernels/htree_reduce``'s intra-tile tree.
+* :func:`ring_allgather_matmul` — K-sharded matmul whose partial sums
+  circulate a neighbor ring (the systolic collective-matmul overlap).
+* :func:`compressed_psum_with_feedback` — int8 error-feedback gradient
+  reduction (bit-serial-aware communication: ship the live bits only).
+* :func:`shuffle` — all-to-all across an axis (MoE dispatch traffic).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _ring_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def htree_allreduce(x: jnp.ndarray, mesh, axis: str) -> jnp.ndarray:
+    """All-reduce over ``axis`` in H-tree (butterfly) order.
+
+    ``x``'s leading dim is sharded over ``axis``; every shard receives the
+    sum of all shards.  For power-of-two axis sizes the schedule is the
+    log-depth pairwise exchange (adjacent pairs first — numerically the
+    H-tree order); otherwise it falls back to ``psum``.
+    """
+    n = mesh.shape[axis]
+
+    def tree(xs):
+        acc = xs
+        k = 1
+        while k < n:
+            acc = acc + jax.lax.ppermute(
+                acc, axis, [(i, i ^ k) for i in range(n)]
+            )
+            k *= 2
+        return acc
+
+    def flat(xs):
+        return jax.lax.psum(xs, axis)
+
+    inner = tree if n & (n - 1) == 0 else flat
+    return shard_map(
+        inner, mesh=mesh, in_specs=P(axis), out_specs=P(axis), check_rep=False
+    )(x)
+
+
+def ring_allgather_matmul(a: jnp.ndarray, w: jnp.ndarray, mesh, axis: str) -> jnp.ndarray:
+    """``a (M, K) @ w (K, N)`` with K sharded over ``axis``; the partial
+    products circulate the neighbor ring (compute/transfer overlap — the
+    systolic schedule).  Result is replicated over ``axis``.
+    """
+    n = mesh.shape[axis]
+    perm = _ring_perm(n)
+
+    def inner(ak, wk):
+        part = jnp.einsum("mk,kn->mn", ak, wk)
+        acc = part
+        for _ in range(n - 1):
+            part = jax.lax.ppermute(part, axis, perm)
+            acc = acc + part
+        return acc
+
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None)),
+        out_specs=P(None, None),
+        check_rep=False,
+    )(a, w)
+
+
+def compressed_psum_with_feedback(
+    g: jnp.ndarray, err: jnp.ndarray, mesh, axes: Tuple[str, ...]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8-compressed mean-reduction of a (replicated-shape) gradient with
+    error feedback: the quantization residual is returned and added to the
+    next step's gradient, so compression error does not accumulate.
+
+    Returns ``(reduced, new_err)``; ``|new_err| <= max|g + err| / 127``.
+    """
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def inner(gs, es):
+        x = gs + es
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        new_err = x - deq
+        red = deq
+        for a in axes:
+            red = jax.lax.psum(red, a)
+        return red / n, new_err
+
+    specs = tuple(P(*([None] * g.ndim)) for _ in range(2))
+    return shard_map(
+        inner, mesh=mesh, in_specs=specs, out_specs=specs, check_rep=False
+    )(g, err)
+
+
+def shuffle(x: jnp.ndarray, mesh, axis: str, *, split_dim: int = 0) -> jnp.ndarray:
+    """All-to-all over ``axis``: transpose the (devices, chunks) layout —
+    the MoE token-dispatch collective."""
+
+    def inner(xs):
+        return jax.lax.all_to_all(
+            xs, axis, split_axis=split_dim, concat_axis=split_dim, tiled=True
+        )
+
+    spec = P(*([axis if i == split_dim else None for i in range(x.ndim)]))
+    return shard_map(
+        inner, mesh=mesh, in_specs=spec, out_specs=spec, check_rep=False
+    )(x)

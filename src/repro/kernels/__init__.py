@@ -1,7 +1,25 @@
+"""Kernel package — the public surface is :mod:`repro.kernels.api`.
+
+``api`` exposes the unified execution API (``SlicedTensor``,
+``PrecisionSpec``, ``use_backend`` and the backend registry); ``ops`` holds
+the deprecated ``impl=``-kwarg shims kept for one release.
+"""
+from repro.kernels.api import (  # noqa: F401
+    PrecisionSpec,
+    SlicedTensor,
+    current_backend,
+    register_kernel,
+    registered_kernels,
+    set_default_backend,
+    use_backend,
+)
+from repro.kernels.api import (  # noqa: F401
+    matmul,
+    quantized_matmul,
+)
 from repro.kernels.ops import (  # noqa: F401
     bitslice_matmul,
     htree_reduce,
-    quantized_matmul,
     rglru_scan,
     zero_slice_pairs,
 )

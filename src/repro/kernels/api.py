@@ -1,0 +1,524 @@
+"""Unified kernel-execution API: typed tensors, precision specs, backends.
+
+PIMSAB's bit-serial compute is *divisible*: adaptive precision, bit-slicing
+and constant handling are all choices about how one logical tensor is
+decomposed.  This module makes that decomposition first-class instead of
+threading ``(x_slices, slice_bits, act_bits, weight_bits, skip, impl, block)``
+kwargs through every layer:
+
+* :class:`SlicedTensor` — a JAX pytree carrying the slice stack, the
+  dequantization scale, and *static* zero-slice metadata, so the paper's
+  ``mul_const`` zero-bit skipping flows to the kernel by construction.
+* :class:`PrecisionSpec` — one object for ``act_bits/weight_bits/slice_bits/
+  accum_bits`` with the adaptive-precision presets of §IV-C.
+* A **backend registry**: each Pallas kernel registers itself (paired with
+  its pure-jnp oracle) via :func:`register_kernel`; execution backend is
+  chosen by the :func:`use_backend` context manager —
+
+  - ``"xla"``       — the oracle (what the CPU dry-run lowers),
+  - ``"interpret"`` — the Pallas kernel body run in interpreter mode
+    (CPU validation of the real kernel),
+  - ``"pallas"``    — the compiled TPU kernel.
+
+Validation tests and benchmark enumeration are generated from the registry
+(:func:`registered_kernels`) instead of hand-maintained lists.
+
+The legacy ``impl="..."`` kwargs on :mod:`repro.kernels.ops` are deprecated
+shims over this module and will be removed after one release.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PrecisionSpec",
+    "SlicedTensor",
+    "BACKENDS",
+    "use_backend",
+    "current_backend",
+    "set_default_backend",
+    "register_kernel",
+    "get_kernel",
+    "registered_kernels",
+    "dispatch",
+    "active_pairs",
+    "skip_pairs",
+    "bitslice_matmul_oracle",
+    "matmul",
+    "quantized_matmul",
+    "htree_reduce",
+    "rglru_scan",
+    "static_value",
+    "last_executed_pairs",
+]
+
+
+# ---------------------------------------------------------------------------
+# version-safe staticness probe
+# ---------------------------------------------------------------------------
+
+
+def static_value(arr: Any) -> Optional[np.ndarray]:
+    """Concrete ndarray if ``arr`` is static at trace time, else ``None``.
+
+    Deliberately does NOT touch ``jax.core.Tracer`` (its home has moved
+    across JAX releases); a tracer is exactly the thing that refuses to
+    materialize as a numpy array, so we ask it to and catch the refusal.
+    """
+    if arr is None:
+        return None
+    if isinstance(arr, (np.ndarray, np.generic, int, float, bool)):
+        return np.asarray(arr)
+    try:
+        return np.asarray(arr)
+    except Exception:  # tracer (ConcretizationTypeError et al.) → dynamic
+        return None
+
+
+# ---------------------------------------------------------------------------
+# PrecisionSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PrecisionSpec:
+    """Bit widths of one logical matmul, PIMSAB adaptive-precision style.
+
+    ``slice_bits`` is the hardware-native slice width (8 on the MXU int8
+    path — the radix-256 analogue of the paper's 1-bit planes); operands
+    wider than a slice are decomposed into ``ceil(bits / slice_bits)``
+    slices and recombined with shifts.
+    """
+
+    act_bits: int = 8
+    weight_bits: int = 8
+    slice_bits: int = 8
+    accum_bits: int = 32
+
+    def __post_init__(self) -> None:
+        if not (1 <= self.slice_bits <= 8):
+            raise ValueError(f"slice_bits must be in [1, 8], got {self.slice_bits}")
+        if self.act_bits < 1 or self.weight_bits < 1:
+            raise ValueError(f"bits must be >= 1: {self}")
+        if self.accum_bits < self.act_bits + self.weight_bits:
+            raise ValueError(
+                f"accum_bits={self.accum_bits} cannot hold a "
+                f"{self.act_bits}x{self.weight_bits}-bit product"
+            )
+
+    @property
+    def act_slices(self) -> int:
+        return max(1, math.ceil(self.act_bits / self.slice_bits))
+
+    @property
+    def weight_slices(self) -> int:
+        return max(1, math.ceil(self.weight_bits / self.slice_bits))
+
+    @property
+    def single_pass(self) -> bool:
+        """True if the matmul is one MXU pass (no slice recombination)."""
+        return self.act_slices == 1 and self.weight_slices == 1
+
+    @classmethod
+    def from_quant_config(cls, q) -> "PrecisionSpec":
+        """Lift a :class:`repro.configs.base.QuantConfig` into a spec."""
+        return cls(act_bits=q.act_bits, weight_bits=q.weight_bits, slice_bits=q.slice_bits)
+
+
+def _install_presets() -> None:
+    # Adaptive-precision presets (§IV-C): precision tracks the value range,
+    # slices track the precision.  Defined here (not as class attrs inside
+    # the body) because dataclass fields would swallow them.
+    presets = {
+        "int4": PrecisionSpec(act_bits=4, weight_bits=4),
+        "int8": PrecisionSpec(act_bits=8, weight_bits=8),
+        "int12": PrecisionSpec(act_bits=12, weight_bits=12, accum_bits=32),
+        "int16": PrecisionSpec(act_bits=16, weight_bits=16, accum_bits=32),
+        "w4a8": PrecisionSpec(act_bits=8, weight_bits=4),
+        "w8a16": PrecisionSpec(act_bits=16, weight_bits=8),
+    }
+    for name, spec in presets.items():
+        setattr(PrecisionSpec, name, spec)
+
+
+_install_presets()
+
+
+# ---------------------------------------------------------------------------
+# SlicedTensor
+# ---------------------------------------------------------------------------
+
+
+def _zero_slice_ids(slices: Any) -> Tuple[int, ...]:
+    """Indices of statically-all-zero slices (``()`` when dynamic).
+
+    For on-device arrays the emptiness reduction runs on device and only
+    ``n_slices`` booleans cross to the host — probing a big activation
+    stack must not cost a full device→host copy.  Tracers refuse the
+    transfer and fall through to the conservative dense answer.
+    """
+    if slices is None:
+        return ()
+    if isinstance(slices, (np.ndarray, np.generic)):
+        return tuple(s for s in range(slices.shape[0]) if not slices[s].any())
+    try:
+        # np.asarray forces materialization: device_get on a tracer returns
+        # the tracer unchanged, so the conversion is where tracers refuse
+        flags = np.asarray(
+            jax.device_get(jnp.any(slices, axis=tuple(range(1, slices.ndim))))
+        )
+    except Exception:  # tracer → dynamic
+        return ()
+    return tuple(i for i, f in enumerate(flags) if not f)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True, eq=False)
+class SlicedTensor:
+    """A logical integer tensor stored as a stack of signed-digit slices.
+
+    ``slices`` is ``(n_slices, *shape)`` int8 in the balanced signed-digit
+    radix-2**slice_bits decomposition (low-to-high):
+
+        value == Σ_s slices[s] · 2**(slice_bits·s)
+
+    ``scale`` (optional) dequantizes the logical value back to float.
+    ``zero_slices`` caches which slices were statically all-zero at
+    construction time — PIMSAB ``mul_const`` zero-bit skipping — and rides
+    through ``jax.jit`` as pytree aux data, so kernels skip dead MXU passes
+    even when the slice data itself has become a tracer.
+    """
+
+    slices: jnp.ndarray
+    scale: Optional[jnp.ndarray] = None
+    slice_bits: int = 8
+    orig_bits: int = 8
+    zero_slices: Tuple[int, ...] = ()
+
+    # -- pytree protocol (aux = everything static) --
+    def tree_flatten(self):
+        return (self.slices, self.scale), (self.slice_bits, self.orig_bits, self.zero_slices)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        slices, scale = children
+        slice_bits, orig_bits, zero_slices = aux
+        return cls(slices=slices, scale=scale, slice_bits=slice_bits,
+                   orig_bits=orig_bits, zero_slices=zero_slices)
+
+    # -- constructors --
+    @classmethod
+    def from_int(
+        cls,
+        x: jnp.ndarray,
+        bits: int,
+        *,
+        slice_bits: int = 8,
+        scale: Optional[jnp.ndarray] = None,
+    ) -> "SlicedTensor":
+        """Decompose an integer tensor into slices, caching zero-slice ids."""
+        from repro.kernels import ref
+
+        slices = ref.to_slices(x, bits, slice_bits)
+        return cls(
+            slices=slices,
+            scale=scale,
+            slice_bits=slice_bits,
+            orig_bits=bits,
+            zero_slices=_zero_slice_ids(slices),
+        )
+
+    @classmethod
+    def quantize(
+        cls, x: jnp.ndarray, spec: PrecisionSpec = PrecisionSpec.int8, *, weight: bool = False
+    ) -> "SlicedTensor":
+        """Dynamic symmetric per-row (act) / per-column (weight) quantization.
+
+        Activations quantize along the last axis (the contraction axis of
+        ``x @ w``); weights along the second-to-last.
+        """
+        bits = spec.weight_bits if weight else spec.act_bits
+        axis = -2 if weight else -1
+        qmax = 2 ** (bits - 1) - 1
+        xf = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=axis, keepdims=True) / qmax, 1e-8)
+        x_q = jnp.clip(jnp.round(xf / scale), -qmax - 1, qmax).astype(jnp.int32)
+        return cls.from_int(x_q, bits, slice_bits=spec.slice_bits, scale=scale)
+
+    # -- views --
+    @property
+    def n_slices(self) -> int:
+        return self.slices.shape[0]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.slices.shape[1:])
+
+    def to_int(self) -> jnp.ndarray:
+        from repro.kernels import ref
+
+        return ref.from_slices(self.slices, self.slice_bits)
+
+    def dequantize(self) -> jnp.ndarray:
+        v = self.to_int().astype(jnp.float32)
+        return v * self.scale if self.scale is not None else v
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+BACKENDS = ("pallas", "interpret", "xla")
+
+# CPU container: oracles by default; TPU target: "pallas".  Overridable per
+# process via set_default_backend and per scope via use_backend.
+_default_backend = "xla"
+_backend_stack: contextvars.ContextVar[Tuple[str, ...]] = contextvars.ContextVar(
+    "repro_kernel_backend_stack", default=()
+)
+
+
+def _check_backend(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def current_backend() -> str:
+    """The innermost active backend (thread/context-local), else the default."""
+    stack = _backend_stack.get()
+    return stack[-1] if stack else _default_backend
+
+
+def set_default_backend(name: str) -> None:
+    """Set the process-wide default backend (used when no context is active)."""
+    global _default_backend
+    _default_backend = _check_backend(name)
+
+
+@contextlib.contextmanager
+def use_backend(name: str) -> Iterator[str]:
+    """Scope all registry-dispatched kernels to ``name``.
+
+    Nests (innermost wins) and is context-local: a ``use_backend`` entered
+    on one thread / async task does not leak into another.
+    """
+    _check_backend(name)
+    token = _backend_stack.set(_backend_stack.get() + (name,))
+    try:
+        yield name
+    finally:
+        _backend_stack.reset(token)
+
+
+@dataclass(frozen=True)
+class KernelDef:
+    """One registered kernel: the Pallas implementation + its oracle."""
+
+    name: str
+    pallas: Callable[..., Any]
+    oracle: Callable[..., Any]
+
+
+_REGISTRY: Dict[str, KernelDef] = {}
+_registry_lock = threading.Lock()
+
+
+def register_kernel(name: str, *, oracle: Callable[..., Any]):
+    """Decorator: pair a Pallas kernel with its pure-jnp oracle.
+
+    The Pallas callable must accept ``interpret: bool`` (both non-pallas
+    backends reach it that way); the oracle must accept the same positional
+    operands.  Registration is idempotent per name (last wins) so module
+    reloads in tests don't error.
+    """
+
+    def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
+        with _registry_lock:
+            _REGISTRY[name] = KernelDef(name=name, pallas=fn, oracle=oracle)
+        return fn
+
+    return deco
+
+
+_bootstrapped = False
+
+
+def _ensure_registered() -> None:
+    # Kernel modules self-register on import; importing them lazily here
+    # avoids an import cycle (kernel modules import this module for the
+    # decorator and active_pairs).  Guarded by a flag, not registry
+    # non-emptiness: a direct import of one kernel module must not mask
+    # the others.
+    global _bootstrapped
+    if _bootstrapped:
+        return
+    import repro.kernels.bitslice_matmul  # noqa: F401
+    import repro.kernels.htree_reduce  # noqa: F401
+    import repro.kernels.rglru_scan  # noqa: F401
+
+    _bootstrapped = True
+
+
+def get_kernel(name: str) -> KernelDef:
+    _ensure_registered()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no kernel {name!r} registered; have {sorted(_REGISTRY)}") from None
+
+
+def registered_kernels() -> Mapping[str, KernelDef]:
+    """Immutable view of the registry (tests/benchmarks enumerate this)."""
+    _ensure_registered()
+    return dict(_REGISTRY)
+
+
+def dispatch(name: str, *args, pallas_kwargs: Optional[Dict[str, Any]] = None, **kwargs):
+    """Run kernel ``name`` on the currently-active backend.
+
+    ``kwargs`` reach both implementations; ``pallas_kwargs`` (block sizes
+    and other tiling knobs the oracle has no business seeing) only the
+    Pallas call.  This is the single backend branch — the public wrappers
+    below all go through it.
+    """
+    k = get_kernel(name)
+    backend = current_backend()
+    if backend == "xla":
+        return k.oracle(*args, **kwargs)
+    kw = dict(kwargs, **(pallas_kwargs or {}))
+    return k.pallas(*args, interpret=(backend == "interpret"), **kw)
+
+
+# ---------------------------------------------------------------------------
+# bit-sliced matmul on the new surface
+# ---------------------------------------------------------------------------
+
+
+def active_pairs(
+    n_x: int, n_w: int, skip: Tuple[Tuple[int, int], ...] = ()
+) -> Tuple[Tuple[int, int], ...]:
+    """The (s, t) slice pairs a bit-sliced matmul actually executes.
+
+    Single source of truth for zero-slice skipping: both the Pallas kernel's
+    unrolled shift list and the XLA oracle loop iterate exactly this tuple,
+    so a skipped pair is *provably* never issued.
+    """
+    dead = set(skip)
+    return tuple((s, t) for s in range(n_x) for t in range(n_w) if (s, t) not in dead)
+
+
+def skip_pairs(x: SlicedTensor, w: SlicedTensor) -> Tuple[Tuple[int, int], ...]:
+    """(s, t) pairs statically known to contribute zero, from cached metadata."""
+    return tuple(
+        (s, t)
+        for s in range(x.n_slices)
+        for t in range(w.n_slices)
+        if s in x.zero_slices or t in w.zero_slices
+    )
+
+
+# Debug/observability: the pair list handed to the most recent bit-sliced
+# matmul dispatch on this thread (the list the kernel unrolls / the oracle
+# loops over).  Regression tests assert skipped pairs never appear here.
+_last_pairs = threading.local()
+
+
+def last_executed_pairs() -> Tuple[Tuple[int, int], ...]:
+    return getattr(_last_pairs, "pairs", ())
+
+
+def bitslice_matmul_oracle(x_slices, w_slices, *, slice_bits=8, skip=()):
+    """Skip-aware pure-jnp oracle: loops exactly ``active_pairs(...)`` —
+    with an empty skip list this is ``ref.bitslice_matmul_ref``."""
+    acc = jnp.zeros((x_slices.shape[1], w_slices.shape[2]), jnp.int32)
+    for s, t in active_pairs(x_slices.shape[0], w_slices.shape[0], skip):
+        prod = jax.lax.dot_general(
+            x_slices[s], w_slices[t], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + (prod << (slice_bits * (s + t)))
+    return acc
+
+
+def matmul(
+    x: SlicedTensor,
+    w: SlicedTensor,
+    *,
+    skip: Tuple[Tuple[int, int], ...] = (),
+    block: Optional[Tuple[int, int, int]] = None,
+) -> jnp.ndarray:
+    """``x (M, K) @ w (K, N)`` over slice stacks, zero slices skipped.
+
+    The skipped pairs are the union of the operands' cached zero-slice
+    metadata and the explicit ``skip`` argument.  Returns float32 (scales
+    applied) when either operand carries a scale, else the raw int32
+    accumulator.
+    """
+    if x.slice_bits != w.slice_bits:
+        raise ValueError(f"slice_bits mismatch: {x.slice_bits} vs {w.slice_bits}")
+    all_skip = tuple(sorted(set(skip_pairs(x, w)) | set(skip)))
+    _last_pairs.pairs = active_pairs(x.n_slices, w.n_slices, all_skip)
+    acc = dispatch(
+        "bitslice_matmul", x.slices, w.slices,
+        slice_bits=x.slice_bits, skip=all_skip,
+        pallas_kwargs=None if block is None else {"block": block},
+    )
+    if x.scale is None and w.scale is None:
+        return acc
+    out = acc.astype(jnp.float32)
+    if x.scale is not None:
+        out = out * x.scale.reshape(-1, 1)
+    if w.scale is not None:
+        out = out * w.scale.reshape(1, -1)
+    return out
+
+
+def quantized_matmul(
+    x: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    spec: PrecisionSpec = PrecisionSpec.int8,
+) -> jnp.ndarray:
+    """End-to-end PIMSAB path: dynamic act quant → slice decomposition →
+    zero-slice skip (by SlicedTensor construction) → integer matmul →
+    dequantize.  ``x (..., K)`` float; ``w_q (K, N)`` int; out ``(..., N)``.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x_st = SlicedTensor.quantize(x.reshape(-1, k), spec)
+    w_st = SlicedTensor.from_int(
+        w_q, spec.weight_bits, slice_bits=spec.slice_bits, scale=w_scale.reshape(-1)
+    )
+    out = matmul(x_st, w_st)
+    return out.reshape(*lead, -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# other registered kernels on the new surface
+# ---------------------------------------------------------------------------
+
+
+def htree_reduce(x: jnp.ndarray, *, block_d: int = 512) -> jnp.ndarray:
+    """(N, D) → (D,) log-depth H-tree reduction on the active backend."""
+    return dispatch("htree_reduce", x, pallas_kwargs={"block_d": block_d})
+
+
+def rglru_scan(
+    a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, *,
+    block_t: int = 256, block_w: int = 512,
+) -> jnp.ndarray:
+    """RG-LRU linear recurrence h_t = a_t·h_{t-1} + b_t on the active backend."""
+    return dispatch(
+        "rglru_scan", a, b, h0,
+        pallas_kwargs={"block_t": block_t, "block_w": block_w},
+    )

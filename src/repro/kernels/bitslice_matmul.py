@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.api import active_pairs, bitslice_matmul_oracle, register_kernel
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, slice_bits: int,
             shifts: Tuple[Tuple[int, int], ...]):
@@ -47,6 +49,7 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, slice_bits: int,
         o_ref[...] = acc_ref[...]
 
 
+@register_kernel("bitslice_matmul", oracle=bitslice_matmul_oracle)
 def bitslice_matmul(
     x_slices: jnp.ndarray,
     w_slices: jnp.ndarray,
@@ -59,7 +62,8 @@ def bitslice_matmul(
     """(Sx, M, K) int8 × (Sw, K, N) int8 → (M, N) int32.
 
     ``skip`` lists (s, t) slice pairs statically known to contribute zero
-    (PIMSAB zero-bit skipping) — their MXU passes are never issued.
+    (PIMSAB zero-bit skipping) — their MXU passes are never issued: the
+    unrolled shift list is exactly ``api.active_pairs(Sx, Sw, skip)``.
     """
     sx, m, k = x_slices.shape
     sw, k2, n = w_slices.shape
@@ -67,9 +71,7 @@ def bitslice_matmul(
     bm, bn, bk = (min(b, d) for b, d in zip(block, (m, n, k)))
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, (bm, bn, bk))
     n_k = k // bk
-    shifts = tuple(
-        (s, t) for s in range(sx) for t in range(sw) if (s, t) not in set(skip)
-    )
+    shifts = active_pairs(sx, sw, skip)
     grid = (m // bm, n // bn, n_k)
     return pl.pallas_call(
         functools.partial(_kernel, n_k=n_k, slice_bits=slice_bits, shifts=shifts),

@@ -18,6 +18,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import ref
+from repro.kernels.api import register_kernel
+
 
 def _kernel(x_ref, o_ref, *, n: int):
     y = x_ref[...]  # (n, bd) in VMEM
@@ -26,6 +29,7 @@ def _kernel(x_ref, o_ref, *, n: int):
     o_ref[...] = y[0]
 
 
+@register_kernel("htree_reduce", oracle=ref.htree_reduce_ref)
 def htree_reduce(x: jnp.ndarray, *, block_d: int = 512, interpret: bool = False) -> jnp.ndarray:
     """x: (N, D) → (D,), N a power of two."""
     n, d = x.shape

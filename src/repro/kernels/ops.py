@@ -1,28 +1,37 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Deprecated public wrappers around the Pallas kernels.
 
-Implementation dispatch: ``impl="pallas"`` (TPU), ``"interpret"`` (kernel body
-executed in Python — CPU validation), ``"xla"`` (the ref.py oracle — what the
-dry-run lowers, since Pallas TPU kernels cannot lower on the CPU backend).
-
-``quantized_matmul`` is the end-to-end PIMSAB path: dynamic activation
-quantization → slice decomposition → zero-slice skipping (when the weights
-are concrete at trace time) → bit-sliced integer matmul → dequantize.
+This module is a thin compatibility shim over :mod:`repro.kernels.api` — the
+unified kernel-execution surface (``SlicedTensor`` / ``PrecisionSpec`` /
+backend registry).  The ``impl="pallas"|"interpret"|"xla"`` kwargs are
+deprecated: select the backend with ``api.use_backend(...)`` instead.  Passing
+``impl=`` still works for one release (it maps onto a ``use_backend`` scope
+and emits a :class:`DeprecationWarning`); new code must not use it —
+``scripts/check_api.py`` rejects ``impl=`` call sites inside ``src/``.
 """
 from __future__ import annotations
 
-import functools
+import contextlib
+import warnings
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
-from repro.kernels.bitslice_matmul import bitslice_matmul as _bitslice_pallas
-from repro.kernels.htree_reduce import htree_reduce as _htree_pallas
-from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+from repro.kernels import api
 
-DEFAULT_IMPL = "xla"  # CPU container: oracles by default; TPU target: "pallas"
+
+def _compat_backend(impl: Optional[str]):
+    """Map a legacy ``impl=`` string onto a backend scope (warning once per
+    call site is too chatty for the bench loops; default filters dedupe)."""
+    if impl is None:
+        return contextlib.nullcontext()
+    warnings.warn(
+        "the impl= kwarg is deprecated; wrap the call in "
+        "repro.kernels.api.use_backend(...) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return api.use_backend(impl)
 
 
 # ---------------------------------------------------------------------------
@@ -36,12 +45,15 @@ def zero_slice_pairs(
     """Statically-zero (s, t) pairs — PIMSAB ``mul_const`` zero-bit skipping.
 
     Only possible when operands are concrete (inference-time constants);
-    tracers are conservatively assumed dense.
+    tracers are conservatively assumed dense.  Staticness is probed with
+    :func:`api.static_value` (version-safe — no ``jax.core.Tracer``
+    isinstance checks, which break across JAX relocations).
     """
+
     def dead(arr):
-        if arr is None or isinstance(arr, jax.core.Tracer):
+        a = api.static_value(arr)
+        if a is None:
             return None
-        a = np.asarray(arr)
         return [s for s in range(a.shape[0]) if not a[s].any()]
 
     xs, ws = dead(x_slices), dead(w_slices)
@@ -63,31 +75,15 @@ def bitslice_matmul(
     *,
     slice_bits: int = 8,
     skip: Tuple[Tuple[int, int], ...] = (),
-    impl: str = DEFAULT_IMPL,
+    impl: Optional[str] = None,
     block: Tuple[int, int, int] = (256, 256, 256),
 ) -> jnp.ndarray:
-    if impl == "xla":
-        # oracle ignores `skip` pairs by zeroing them out of the loop too
-        if skip:
-            keep = [
-                (s, t)
-                for s in range(x_slices.shape[0])
-                for t in range(w_slices.shape[0])
-                if (s, t) not in set(skip)
-            ]
-            acc = jnp.zeros((x_slices.shape[1], w_slices.shape[2]), jnp.int32)
-            for s, t in keep:
-                prod = jax.lax.dot_general(
-                    x_slices[s], w_slices[t], (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.int32,
-                )
-                acc = acc + (prod << (slice_bits * (s + t)))
-            return acc
-        return ref.bitslice_matmul_ref(x_slices, w_slices, slice_bits)
-    return _bitslice_pallas(
-        x_slices, w_slices, slice_bits=slice_bits, skip=skip,
-        interpret=(impl == "interpret"), block=block,
-    )
+    """Deprecated: build :class:`api.SlicedTensor` operands and call
+    :func:`api.matmul` (zero-slice skipping then happens by construction)."""
+    with _compat_backend(impl):
+        x = api.SlicedTensor(slices=x_slices, slice_bits=slice_bits)
+        w = api.SlicedTensor(slices=w_slices, slice_bits=slice_bits)
+        return api.matmul(x, w, skip=tuple(skip), block=block)
 
 
 def quantized_matmul(
@@ -98,25 +94,17 @@ def quantized_matmul(
     act_bits: int = 8,
     weight_bits: int = 8,
     slice_bits: int = 8,
-    impl: str = DEFAULT_IMPL,
+    impl: Optional[str] = None,
 ) -> jnp.ndarray:
-    """x: (..., K) float; w_q: (K, N) int; returns (..., N) float.
-
-    The full adaptive-precision path: per-row dynamic act quant, slice
-    decomposition of both operands, static zero-slice skip, integer matmul.
+    """Deprecated: use :func:`api.quantized_matmul` with a
+    :class:`api.PrecisionSpec`.  Zero-slice pairs are skipped by
+    ``SlicedTensor`` construction (the seed computed them and dropped them).
     """
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    xf = x.reshape(-1, k).astype(jnp.float32)
-    qmax = 2 ** (act_bits - 1) - 1
-    x_scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / qmax, 1e-8)
-    x_q = jnp.clip(jnp.round(xf / x_scale), -qmax - 1, qmax).astype(jnp.int32)
-    x_slices = ref.to_slices(x_q, act_bits, slice_bits)
-    w_slices = ref.to_slices(w_q, weight_bits, slice_bits)
-    skip = zero_slice_pairs(None, w_q if not isinstance(w_q, jax.core.Tracer) else None)
-    acc = bitslice_matmul(x_slices, w_slices, slice_bits=slice_bits, impl=impl)
-    out = acc.astype(jnp.float32) * x_scale * w_scale.reshape(1, -1)
-    return out.reshape(*lead, -1).astype(x.dtype)
+    spec = api.PrecisionSpec(
+        act_bits=act_bits, weight_bits=weight_bits, slice_bits=slice_bits
+    )
+    with _compat_backend(impl):
+        return api.quantized_matmul(x, w_q, w_scale, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -124,17 +112,16 @@ def quantized_matmul(
 # ---------------------------------------------------------------------------
 
 
-def htree_reduce(x: jnp.ndarray, *, impl: str = DEFAULT_IMPL, block_d: int = 512) -> jnp.ndarray:
-    if impl == "xla":
-        return ref.htree_reduce_ref(x)
-    return _htree_pallas(x, block_d=block_d, interpret=(impl == "interpret"))
+def htree_reduce(x: jnp.ndarray, *, impl: Optional[str] = None, block_d: int = 512) -> jnp.ndarray:
+    """Deprecated: use :func:`api.htree_reduce` under ``api.use_backend``."""
+    with _compat_backend(impl):
+        return api.htree_reduce(x, block_d=block_d)
 
 
 def rglru_scan(
     a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, *,
-    impl: str = DEFAULT_IMPL, block_t: int = 256, block_w: int = 512,
+    impl: Optional[str] = None, block_t: int = 256, block_w: int = 512,
 ) -> jnp.ndarray:
-    if impl == "xla":
-        return ref.rglru_scan_ref(a, b, h0)
-    return _rglru_pallas(a, b, h0, block_t=block_t, block_w=block_w,
-                         interpret=(impl == "interpret"))
+    """Deprecated: use :func:`api.rglru_scan` under ``api.use_backend``."""
+    with _compat_backend(impl):
+        return api.rglru_scan(a, b, h0, block_t=block_t, block_w=block_w)

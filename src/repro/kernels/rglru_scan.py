@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import ref
+from repro.kernels.api import register_kernel
+
 
 def _kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, bt: int):
     t_step = pl.program_id(2)
@@ -40,6 +43,7 @@ def _kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, bt: int):
     h_ref[...] = h
 
 
+@register_kernel("rglru_scan", oracle=ref.rglru_scan_ref)
 def rglru_scan(
     a: jnp.ndarray,
     b: jnp.ndarray,

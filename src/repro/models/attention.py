@@ -16,6 +16,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.api import PrecisionSpec
+
 NEG_INF = -1e30
 
 
@@ -218,25 +220,40 @@ def local_attention(q, k, v, window: int) -> jnp.ndarray:
     return out[:, :s]
 
 
-def quantize_kv(x: jnp.ndarray):
-    """Per-(b, t, h) symmetric int8 quantization of a (B,T,H,d) tensor."""
+def _kv_qmax(spec: PrecisionSpec) -> int:
+    """The int8 cache stores 8-bit payloads; narrower specs use fewer of
+    those bits (adaptive precision), wider ones would silently saturate."""
+    if spec.act_bits > 8:
+        raise ValueError(
+            f"int8 KV cache holds at most 8-bit payloads, got act_bits={spec.act_bits}"
+        )
+    return 2 ** (spec.act_bits - 1) - 1
+
+
+def quantize_kv(x: jnp.ndarray, spec: PrecisionSpec = PrecisionSpec.int8):
+    """Per-(b, t, h) symmetric integer quantization of a (B,T,H,d) tensor —
+    PIMSAB adaptive precision on decode state (``spec.act_bits`` wide)."""
+    qmax = _kv_qmax(spec)
     xf = x.astype(jnp.float32)
-    s = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-8)  # (B,T,H)
-    xq = jnp.clip(jnp.round(xf / s[..., None]), -127, 127).astype(jnp.int8)
+    s = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / qmax, 1e-8)  # (B,T,H)
+    xq = jnp.clip(jnp.round(xf / s[..., None]), -qmax, qmax).astype(jnp.int8)
     return xq, s
 
 
-def decode_attention_int8(q1, k_q, v_q, k_s, v_s, valid_len=None) -> jnp.ndarray:
+def decode_attention_int8(
+    q1, k_q, v_q, k_s, v_s, valid_len=None, spec: PrecisionSpec = PrecisionSpec.int8
+) -> jnp.ndarray:
     """Integer decode attention (PIMSAB bit-serial attention on the MXU):
     scores and readout run int8×int8→int32; scales re-applied afterwards.
 
     q1: (B,1,Hq,d) float; k_q/v_q: (B,T,Hkv,d) int8; k_s/v_s: (B,T,Hkv) f32.
     """
+    qmax = _kv_qmax(spec)
     b, _, hq, d = q1.shape
     hkv = k_q.shape[2]
     qf = _gqa_fold(q1, hkv)[:, 0].astype(jnp.float32)  # (B,Hkv,G,d)
-    qs = jnp.maximum(jnp.max(jnp.abs(qf), axis=-1) / 127.0, 1e-8)  # (B,Hkv,G)
-    qq = jnp.clip(jnp.round(qf / qs[..., None]), -127, 127).astype(jnp.int8)
+    qs = jnp.maximum(jnp.max(jnp.abs(qf), axis=-1) / qmax, 1e-8)  # (B,Hkv,G)
+    qq = jnp.clip(jnp.round(qf / qs[..., None]), -qmax, qmax).astype(jnp.int8)
     iscores = jnp.einsum("bhgd,bthd->bhgt", qq, k_q, preferred_element_type=jnp.int32)
     scores = iscores.astype(jnp.float32) * qs[..., None] * jnp.moveaxis(k_s, 1, -1)[:, :, None]
     scores = scores / math.sqrt(d)

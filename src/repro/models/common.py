@@ -17,6 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import api
+from repro.kernels.api import PrecisionSpec, SlicedTensor
+
 Params = Dict[str, Any]
 
 
@@ -104,25 +107,40 @@ def int_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
     )
 
 
-def quant_linear(p: Params, x: jnp.ndarray, act_bits: int = 8) -> jnp.ndarray:
+def quant_linear(
+    p: Params, x: jnp.ndarray, spec: PrecisionSpec = PrecisionSpec.int8
+) -> jnp.ndarray:
     """Bit-sliced integer linear: dynamic act quant + int32 accumulation.
 
-    With act_bits ≤ 8 and weight_bits ≤ 8 this is a single plane-pair pass;
-    the general case (kernels/bitslice_matmul) splits wider operands into
-    8-bit slices and recombines with shifts.
+    When the spec fits one slice pair (act/weight bits ≤ slice_bits, the
+    int8 serving default) this is a single MXU pass; wider specs go through
+    :func:`repro.kernels.api.matmul` over ``SlicedTensor`` operands, which
+    splits into slices, skips statically-zero ones, and recombines with
+    shifts.
     """
-    x_q, x_scale = _dynamic_act_quant(x, act_bits)
-    acc = int_matmul(x_q, p["w_q"])
-    out = acc.astype(jnp.float32) * x_scale * p["w_scale"]
+    if spec.single_pass:
+        x_q, x_scale = _dynamic_act_quant(x, spec.act_bits)
+        acc = int_matmul(x_q, p["w_q"])
+        out = acc.astype(jnp.float32) * x_scale * p["w_scale"]
+    else:
+        lead = x.shape[:-1]
+        x_st = SlicedTensor.quantize(x.reshape(-1, x.shape[-1]), spec)
+        w_st = SlicedTensor.from_int(
+            p["w_q"].astype(jnp.int32), spec.weight_bits,
+            slice_bits=spec.slice_bits, scale=p["w_scale"].reshape(-1),
+        )
+        out = api.matmul(x_st, w_st).reshape(*lead, -1)
     if "b" in p:
         out = out + p["b"].astype(jnp.float32)
     return out.astype(x.dtype)
 
 
-def linear(p: Params, x: jnp.ndarray, act_bits: int = 8) -> jnp.ndarray:
-    """Dispatch: quantized (int8 bit-slice) if the param leaf is quantized."""
+def linear(
+    p: Params, x: jnp.ndarray, spec: Optional[PrecisionSpec] = None
+) -> jnp.ndarray:
+    """Dispatch: quantized (bit-slice) if the param leaf is quantized."""
     if "w_q" in p:
-        return quant_linear(p, x, act_bits)
+        return quant_linear(p, x, spec or PrecisionSpec.int8)
     out = x @ p["w"]
     if "b" in p:
         out = out + p["b"]
@@ -145,6 +163,7 @@ def maybe_quantize_tree(params, cfg, path: str = "") -> Any:
     """
     if not cfg.quant.enabled:
         return params
+    spec = PrecisionSpec.from_quant_config(cfg.quant)
     skip = ("embed", "norm", "scale", "lambda", "conv", "gate_bias", "router")
 
     def rec(node, path):
@@ -152,7 +171,7 @@ def maybe_quantize_tree(params, cfg, path: str = "") -> Any:
             # ndim 2 = plain linear; ndim 3 = scan-stacked (G, d_in, d_out) —
             # per-group quantization; lax.scan slices both w_q and w_scale
             if "w" in node and node["w"].ndim in (2, 3) and not any(s in path for s in skip):
-                q = quantize_weight(node["w"], cfg.quant.weight_bits)
+                q = quantize_weight(node["w"], spec.weight_bits)
                 if "b" in node:
                     q["b"] = node["b"]
                 return q

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.api import PrecisionSpec
 from repro.models import frontend
 from repro.models.attention import (
     decode_attention,
@@ -49,6 +50,11 @@ from repro.models.recurrent import (
 )
 from repro.models.runtime import DEFAULT_FLAGS, RunFlags
 from repro.dist.sharding import MeshRules, act_spec, cache_entry_spec, constrain
+
+# Decode-state precision (PIMSAB adaptive precision on the KV cache): the
+# int8 preset matches the MXU's native slice width — one plane pair per
+# score/readout contraction.  A future RunFlags lever can lower this.
+KV_SPEC = PrecisionSpec.int8
 
 # ---------------------------------------------------------------------------
 # init
@@ -505,7 +511,7 @@ def _seq_cache_to_decode_cache(
             return kv_dict
         out = {}
         for n in ("k", "v"):
-            q, sc = quantize_kv(kv_dict[n])
+            q, sc = quantize_kv(kv_dict[n], KV_SPEC)
             out[n], out[f"{n}_scale"] = q, sc
         for n in ("cross_k", "cross_v"):
             if n in kv_dict:
@@ -565,14 +571,15 @@ def _attn_decode(p, h, cfg, entry, pos, kind, rules):
         valid = (pos + 1) * jnp.ones((b,), jnp.int32)
     new_entry = dict(entry)
     if "k_scale" in entry:  # int8 KV cache (PIMSAB adaptive precision)
-        kq, ks = quantize_kv(k)
-        vq, vs = quantize_kv(v)
+        kq, ks = quantize_kv(k, KV_SPEC)
+        vq, vs = quantize_kv(v, KV_SPEC)
         new_entry["k"] = jax.lax.dynamic_update_slice_in_dim(entry["k"], kq, slot, axis=1)
         new_entry["v"] = jax.lax.dynamic_update_slice_in_dim(entry["v"], vq, slot, axis=1)
         new_entry["k_scale"] = jax.lax.dynamic_update_slice_in_dim(entry["k_scale"], ks, slot, axis=1)
         new_entry["v_scale"] = jax.lax.dynamic_update_slice_in_dim(entry["v_scale"], vs, slot, axis=1)
         out = decode_attention_int8(
-            q, new_entry["k"], new_entry["v"], new_entry["k_scale"], new_entry["v_scale"], valid
+            q, new_entry["k"], new_entry["v"], new_entry["k_scale"], new_entry["v_scale"],
+            valid, KV_SPEC,
         )
     else:
         new_entry["k"] = jax.lax.dynamic_update_slice_in_dim(entry["k"], k, slot, axis=1)

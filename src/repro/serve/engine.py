@@ -2,10 +2,14 @@
 
 The serve path uses bit-sliced int8 weights (``maybe_quantize_tree``) — the
 paper's adaptive-precision inference — halving the weight-memory roofline
-term vs. bf16.
+term vs. bf16.  Kernel dispatch goes through the backend registry: pass
+``backend=`` ("xla" on CPU, "pallas" on TPU) to the step builders or
+:class:`ServeEngine` and every registry kernel traced under that step runs
+there (the ``use_backend`` scope is active during tracing).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from dataclasses import dataclass, field
 from functools import partial
@@ -18,6 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import MeshRules, cache_entry_spec, param_specs
+from repro.kernels.api import use_backend
 from repro.models.common import maybe_quantize_tree
 from repro.models.runtime import DEFAULT_FLAGS, RunFlags
 from repro.models.transformer import (
@@ -26,6 +31,10 @@ from repro.models.transformer import (
     init_cache,
     prefill,
 )
+
+
+def _backend_scope(backend: Optional[str]):
+    return use_backend(backend) if backend else contextlib.nullcontext()
 
 
 def serve_params_shape(cfg: ModelConfig, flags: RunFlags = DEFAULT_FLAGS):
@@ -55,16 +64,18 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int, rules: MeshRules, fl
     }
 
 
-def make_prefill_step(cfg, flags=DEFAULT_FLAGS, rules=None, max_len=None) -> Callable:
+def make_prefill_step(cfg, flags=DEFAULT_FLAGS, rules=None, max_len=None, backend=None) -> Callable:
     def step(params, batch):
-        return prefill(params, cfg, batch, flags, rules, max_len=max_len)
+        with _backend_scope(backend):
+            return prefill(params, cfg, batch, flags, rules, max_len=max_len)
 
     return step
 
 
-def make_decode_step(cfg, flags=DEFAULT_FLAGS, rules=None) -> Callable:
+def make_decode_step(cfg, flags=DEFAULT_FLAGS, rules=None, backend=None) -> Callable:
     def step(params, cache, tokens):
-        return decode_step(params, cfg, cache, tokens, flags, rules)
+        with _backend_scope(backend):
+            return decode_step(params, cfg, cache, tokens, flags, rules)
 
     return step
 
@@ -88,11 +99,20 @@ class ServeEngine:
     all requests in lock-step, retiring finished ones (continuous batching at
     iteration granularity)."""
 
-    def __init__(self, cfg: ModelConfig, params, flags: RunFlags = DEFAULT_FLAGS, max_len: int = 512, eos: int = -1):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        flags: RunFlags = DEFAULT_FLAGS,
+        max_len: int = 512,
+        eos: int = -1,
+        backend: Optional[str] = None,
+    ):
         self.cfg, self.flags, self.max_len, self.eos = cfg, flags, max_len, eos
+        self.backend = backend
         self.params = maybe_quantize_tree(params, cfg) if flags.quant_serve else params
-        self._prefill = jax.jit(make_prefill_step(cfg, flags, max_len=max_len))
-        self._decode = jax.jit(make_decode_step(cfg, flags))
+        self._prefill = jax.jit(make_prefill_step(cfg, flags, max_len=max_len, backend=backend))
+        self._decode = jax.jit(make_decode_step(cfg, flags, backend=backend))
 
     def run(self, requests: List[Request]) -> List[Request]:
         b = len(requests)

@@ -1,0 +1,338 @@
+"""Unified kernel-execution API: SlicedTensor pytree semantics, backend
+context nesting/threading, registry-driven oracle-vs-interpret validation,
+and the zero-slice-skipping regression (the seed computed skip pairs and
+dropped them)."""
+import threading
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import api, ops, ref
+from repro.kernels.api import PrecisionSpec, SlicedTensor
+
+
+# ---------------------------------------------------------------------------
+# PrecisionSpec
+# ---------------------------------------------------------------------------
+
+
+def test_precision_spec_presets_and_slices():
+    assert PrecisionSpec.int8.single_pass
+    assert PrecisionSpec.int16.act_slices == 2
+    assert PrecisionSpec.w4a8 == PrecisionSpec(act_bits=8, weight_bits=4)
+    assert PrecisionSpec.int4.weight_slices == 1
+
+
+def test_precision_spec_validates():
+    with pytest.raises(ValueError):
+        PrecisionSpec(slice_bits=9)
+    with pytest.raises(ValueError):
+        PrecisionSpec(act_bits=16, weight_bits=16, accum_bits=16)
+
+
+def test_precision_spec_from_quant_config():
+    from repro.configs.base import QuantConfig
+
+    spec = PrecisionSpec.from_quant_config(QuantConfig(act_bits=4, weight_bits=8))
+    assert (spec.act_bits, spec.weight_bits) == (4, 8)
+
+
+# ---------------------------------------------------------------------------
+# SlicedTensor pytree
+# ---------------------------------------------------------------------------
+
+
+def _int_tensor(shape, bits, seed=0):
+    rng = np.random.default_rng(seed)
+    lo, hi = ref.slice_range(bits)
+    return jnp.asarray(rng.integers(lo, hi + 1, shape), jnp.int32)
+
+
+def test_sliced_tensor_roundtrip_and_metadata():
+    x = _int_tensor((32, 64), 16)
+    st = SlicedTensor.from_int(x, 16)
+    assert st.n_slices == 2 and st.shape == (32, 64)
+    assert (st.to_int() == x).all()
+    # small-valued int16 → statically dead hi slice, cached at construction
+    small = SlicedTensor.from_int(_int_tensor((8, 8), 16) % 50, 16)
+    assert 1 in small.zero_slices
+
+
+def test_sliced_tensor_jit_roundtrip_keeps_static_metadata():
+    st = SlicedTensor.from_int(_int_tensor((8, 8), 16) % 50, 16)
+    out = jax.jit(lambda t: t)(st)
+    assert isinstance(out, SlicedTensor)
+    assert out.zero_slices == st.zero_slices
+    assert out.slice_bits == st.slice_bits and out.orig_bits == st.orig_bits
+    assert (out.to_int() == st.to_int()).all()
+
+
+def test_sliced_tensor_through_jit_consumer_and_eval_shape():
+    x = SlicedTensor.from_int(_int_tensor((16, 32), 8), 8)
+    w = SlicedTensor.from_int(_int_tensor((32, 16), 8, seed=1), 8)
+    want = ref.int_matmul_wide_ref(x.to_int(), w.to_int(), 8, 8)
+    got = jax.jit(api.matmul)(x, w)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    shp = jax.eval_shape(api.matmul, x, w)
+    assert shp.shape == (16, 16) and shp.dtype == jnp.int32
+
+
+def test_sliced_tensor_quantize_grad_adjacent():
+    """quantize → dequantize composes with jax.grad through the float env
+    (the integer core is constant w.r.t. the scale path, so the identity-ish
+    dequant must at least be differentiable-through without tracer leaks)."""
+
+    def f(x):
+        st = SlicedTensor.quantize(x, PrecisionSpec.int8)
+        return jnp.sum(st.dequantize())
+
+    g = jax.grad(f)(jax.random.normal(jax.random.key(0), (8, 16)))
+    assert g.shape == (8, 16)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+# ---------------------------------------------------------------------------
+# backend contexts
+# ---------------------------------------------------------------------------
+
+
+def test_backend_nesting_innermost_wins():
+    assert api.current_backend() == "xla"  # process default in this container
+    with api.use_backend("interpret"):
+        assert api.current_backend() == "interpret"
+        with api.use_backend("xla"):
+            assert api.current_backend() == "xla"
+        assert api.current_backend() == "interpret"
+    assert api.current_backend() == "xla"
+
+
+def test_backend_rejects_unknown():
+    with pytest.raises(ValueError):
+        with api.use_backend("cuda"):
+            pass
+
+
+def test_backend_context_is_thread_local():
+    seen = {}
+
+    def worker():
+        seen["in_thread"] = api.current_backend()
+        with api.use_backend("interpret"):
+            seen["in_thread_scoped"] = api.current_backend()
+
+    with api.use_backend("interpret"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        assert api.current_backend() == "interpret"
+    # a fresh thread starts from the process default, not the spawner's scope
+    assert seen["in_thread"] == "xla"
+    assert seen["in_thread_scoped"] == "interpret"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_kv_quantization_rejects_wider_than_payload():
+    """The int8 KV cache cannot hold >8-bit payloads: wider specs must be
+    rejected loudly, not silently saturated."""
+    from repro.models.attention import decode_attention_int8, quantize_kv
+
+    x = jax.random.normal(jax.random.key(0), (1, 4, 2, 8))
+    q, s = quantize_kv(x, PrecisionSpec.int4)  # narrower is fine
+    assert q.dtype == jnp.int8 and int(jnp.abs(q).max()) <= 7
+    with pytest.raises(ValueError, match="int8 KV cache"):
+        quantize_kv(x, PrecisionSpec.int16)
+    with pytest.raises(ValueError, match="int8 KV cache"):
+        decode_attention_int8(
+            jnp.zeros((1, 1, 2, 8)), q, q, s, s, spec=PrecisionSpec.int12
+        )
+
+
+def test_partial_kernel_import_still_bootstraps_registry():
+    """Importing one kernel module directly must not mask the others
+    (the bootstrap flag, not registry non-emptiness, gates lazy imports)."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    code = (
+        "import repro.kernels.bitslice_matmul\n"
+        "import jax.numpy as jnp\n"
+        "from repro.kernels import api\n"
+        "out = api.htree_reduce(jnp.ones((4, 8), jnp.float32))\n"
+        "assert out.shape == (8,)\n"
+        "assert len(api.registered_kernels()) >= 3\n"
+        "print('PARTIAL_IMPORT_OK')\n"
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH="src"),
+        cwd=str(pathlib.Path(__file__).resolve().parents[1]),
+        timeout=300,
+    )
+    assert "PARTIAL_IMPORT_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_registry_contains_every_pallas_kernel():
+    names = set(api.registered_kernels())
+    assert {"bitslice_matmul", "htree_reduce", "rglru_scan"} <= names
+    for kd in api.registered_kernels().values():
+        assert callable(kd.pallas) and callable(kd.oracle)
+
+
+def _case(name):
+    """Small operands per kernel; enumerated from the registry so a newly
+    registered kernel fails loudly until it gets a case here."""
+    if name == "bitslice_matmul":
+        x = SlicedTensor.from_int(_int_tensor((128, 128), 8), 8)
+        w = SlicedTensor.from_int(_int_tensor((128, 128), 16, seed=1), 16)
+        return (
+            lambda: api.matmul(x, w, block=(128, 128, 128)),
+            lambda: ref.int_matmul_wide_ref(x.to_int(), w.to_int(), 8, 16),
+        )
+    if name == "htree_reduce":
+        x = jax.random.normal(jax.random.key(2), (16, 512), jnp.float32)
+        return lambda: api.htree_reduce(x), lambda: ref.htree_reduce_ref(x)
+    if name == "rglru_scan":
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.key(3), (2, 256, 512)))
+        b = jax.random.normal(jax.random.key(4), (2, 256, 512))
+        h0 = jax.random.normal(jax.random.key(5), (2, 512))
+        return lambda: api.rglru_scan(a, b, h0), lambda: ref.rglru_scan_ref(a, b, h0)
+    raise KeyError(f"registered kernel {name!r} has no test case — add one")
+
+
+@pytest.mark.parametrize("name", sorted(api.registered_kernels()))
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_registry_kernel_matches_oracle(name, backend):
+    run, oracle = _case(name)
+    with api.use_backend(backend):
+        got = run()
+    np.testing.assert_allclose(
+        np.asarray(oracle(), np.float32), np.asarray(got, np.float32),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# zero-slice skipping regression (seed bug: skip computed, never applied)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_zero_slices_are_actually_skipped(backend):
+    # small-valued int16 weights → hi slice statically zero
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-100, 100, (128, 128)), jnp.int32)
+    w = jnp.asarray(rng.integers(-50, 50, (128, 128)), jnp.int32)
+    xs = SlicedTensor.from_int(x, 8)
+    ws = SlicedTensor.from_int(w, 16)
+    assert ws.zero_slices == (1,), "hi weight slice must be statically dead"
+    skip = api.skip_pairs(xs, ws)
+    assert skip == ((0, 1),)
+
+    with api.use_backend(backend):
+        got = api.matmul(xs, ws, block=(128, 128, 128))
+    executed = api.last_executed_pairs()
+    # the executed shift list excludes every skipped pair...
+    assert not (set(skip) & set(executed)), (skip, executed)
+    assert set(executed) == set(api.active_pairs(1, 2, skip))
+    # ...and skipping changes nothing numerically
+    dense = SlicedTensor(slices=ws.slices, slice_bits=8, orig_bits=16, zero_slices=())
+    with api.use_backend(backend):
+        want = api.matmul(xs, dense, block=(128, 128, 128))
+    assert api.last_executed_pairs() == ((0, 0), (0, 1))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    np.testing.assert_array_equal(
+        np.asarray(ref.int_matmul_wide_ref(x, w, 8, 16)), np.asarray(got)
+    )
+
+
+def test_quantized_matmul_applies_skip_by_construction():
+    """The end-to-end path the seed dropped: tiny weights leave the hi slice
+    dead and quantized_matmul must not issue its MXU passes."""
+    ks = jax.random.split(jax.random.key(7), 2)
+    x = jax.random.normal(ks[0], (32, 128), jnp.float32)
+    w_full = jax.random.normal(ks[1], (128, 64), jnp.float32) * 0.05
+    qmax = 2 ** 15 - 1
+    w_scale = jnp.max(jnp.abs(w_full), axis=0) / qmax
+    # quantize to int16 but keep magnitudes tiny → hi slice all-zero
+    w_q = jnp.clip(jnp.round(w_full / (w_scale * 300.0)), -128, 127).astype(jnp.int32)
+    out = api.quantized_matmul(x, w_q, w_scale * 300.0, PrecisionSpec.w8a16)
+    executed = api.last_executed_pairs()
+    assert (0, 1) not in executed, "dead hi weight slice must be skipped"
+    want = (x @ (w_q * (w_scale * 300.0)[None, :])).astype(jnp.float32)
+    rel = float(jnp.abs(out - want).max() / (jnp.abs(want).max() + 1e-9))
+    assert rel < 0.05, rel
+
+
+def test_tracer_weights_disable_static_skip_but_stay_correct():
+    """Under jit the weights are tracers: zero_slice metadata must be empty
+    (conservative) and results still exact — the version-safe staticness
+    probe must not crash on tracers."""
+    x = _int_tensor((32, 32), 8)
+    w = _int_tensor((32, 32), 16, seed=1) % 50
+
+    @jax.jit
+    def run(xa, wa):
+        xs = SlicedTensor.from_int(xa, 8)
+        ws = SlicedTensor.from_int(wa, 16)
+        assert ws.zero_slices == ()  # tracer → no static metadata
+        return api.matmul(xs, ws)
+
+    np.testing.assert_array_equal(
+        np.asarray(ref.int_matmul_wide_ref(x, w, 8, 16)), np.asarray(run(x, w))
+    )
+
+
+def test_zero_slice_pairs_version_safe_on_tracers():
+    def traced(ws):
+        assert ops.zero_slice_pairs(None, ws) == ()
+        return ws
+
+    jax.jit(traced)(jnp.ones((2, 4, 4), jnp.int8))
+    concrete = np.stack([np.ones((4, 4)), np.zeros((4, 4))]).astype(np.int8)
+    assert ops.zero_slice_pairs(None, concrete) == ((0, 1),)
+
+
+def test_quant_linear_multi_slice_spec():
+    """Non-single-pass specs route quant_linear through api.matmul over
+    SlicedTensors; wider act precision must tighten (not worsen) the error."""
+    from repro.models.common import quant_linear, quantize_weight
+
+    w = jax.random.normal(jax.random.key(1), (256, 128), jnp.float32) * 0.05
+    x = jax.random.normal(jax.random.key(0), (4, 32, 256), jnp.float32)
+    p = quantize_weight(w, 8)
+    want = x @ w
+    rels = {}
+    for spec in (PrecisionSpec.int8, PrecisionSpec.w8a16):
+        out = quant_linear(p, x, spec)
+        assert out.shape == (4, 32, 128)
+        rels[spec] = float(jnp.abs(out - want).max() / jnp.abs(want).max())
+    assert rels[PrecisionSpec.int8] < 0.05
+    assert rels[PrecisionSpec.w8a16] <= rels[PrecisionSpec.int8]
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_ops_impl_kwarg_warns_and_matches():
+    x = _int_tensor((128, 128), 8)
+    w = _int_tensor((128, 128), 8, seed=1)
+    xs, ws = ref.to_slices(x, 8), ref.to_slices(w, 8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        with pytest.raises(DeprecationWarning):
+            ops.bitslice_matmul(xs, ws, impl="xla")
+    got = ops.bitslice_matmul(xs, ws, impl="interpret", block=(128, 128, 128))
+    np.testing.assert_array_equal(
+        np.asarray(ref.int_matmul_wide_ref(x, w, 8, 8)), np.asarray(got)
+    )

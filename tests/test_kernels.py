@@ -1,11 +1,12 @@
-"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle,
-swept over shapes and bit-widths."""
+"""Per-kernel validation: Pallas (interpret backend) vs the pure-jnp oracle,
+swept over shapes and bit-widths via the unified kernel API."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref, ops
+from repro.kernels import api, ref
+from repro.kernels.api import PrecisionSpec, SlicedTensor, use_backend
 from repro.models.common import quantize_weight
 
 
@@ -18,12 +19,14 @@ def test_bitslice_matmul_matches_wide_int(xb, wb, mnk):
     wlo, whi = ref.slice_range(wb)
     x = jnp.asarray(rng.integers(xlo, xhi + 1, (m, k)), jnp.int32)
     w = jnp.asarray(rng.integers(wlo, whi + 1, (k, n)), jnp.int32)
-    xs, ws = ref.to_slices(x, xb), ref.to_slices(w, wb)
-    assert (ref.from_slices(xs) == x).all(), "x slice roundtrip"
-    assert (ref.from_slices(ws) == w).all(), "w slice roundtrip"
+    xs, ws = SlicedTensor.from_int(x, xb), SlicedTensor.from_int(w, wb)
+    assert (xs.to_int() == x).all(), "x slice roundtrip"
+    assert (ws.to_int() == w).all(), "w slice roundtrip"
     want = ref.int_matmul_wide_ref(x, w, xb, wb)
-    got_ref = ref.bitslice_matmul_ref(xs, ws)
-    got_pal = ops.bitslice_matmul(xs, ws, impl="interpret", block=(128, 128, 128))
+    with use_backend("xla"):
+        got_ref = api.matmul(xs, ws)
+    with use_backend("interpret"):
+        got_pal = api.matmul(xs, ws, block=(128, 128, 128))
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got_ref))
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got_pal))
 
@@ -32,11 +35,13 @@ def test_zero_slice_skipping_exact():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.integers(-100, 100, (128, 256)), jnp.int32)
     w = jnp.asarray(rng.integers(-100, 100, (256, 128)), jnp.int32)
-    xs, ws = ref.to_slices(x, 8), ref.to_slices(w, 16)
-    skip = ops.zero_slice_pairs(None, np.asarray(ws))
-    assert skip, "small-valued int16 weights must have a dead hi slice"
+    xs = SlicedTensor.from_int(x, 8)
+    ws = SlicedTensor.from_int(w, 16)
+    assert ws.zero_slices, "small-valued int16 weights must have a dead hi slice"
+    assert api.skip_pairs(xs, ws), "dead slice must induce skip pairs"
     want = ref.int_matmul_wide_ref(x, w, 8, 16)
-    got = ops.bitslice_matmul(xs, ws, impl="interpret", skip=skip, block=(128, 128, 128))
+    with use_backend("interpret"):
+        got = api.matmul(xs, ws, block=(128, 128, 128))
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
@@ -49,7 +54,8 @@ def test_htree_reduce_matches_tree_oracle(dtype, n, d):
     else:
         x = x.astype(dtype)
     want = ref.htree_reduce_ref(x)
-    got = ops.htree_reduce(x, impl="interpret")
+    with use_backend("interpret"):
+        got = api.htree_reduce(x)
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
@@ -60,7 +66,8 @@ def test_rglru_scan_kernel(b, t, w):
     bb = jax.random.normal(ks[1], (b, t, w))
     h0 = jax.random.normal(ks[2], (b, w))
     want = ref.rglru_scan_ref(a, bb, h0)
-    got = ops.rglru_scan(a, bb, h0, impl="interpret")
+    with use_backend("interpret"):
+        got = api.rglru_scan(a, bb, h0)
     np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-4, rtol=1e-4)
 
 
@@ -69,6 +76,8 @@ def test_quantized_matmul_end_to_end_error_bound():
     x = jax.random.normal(ks[0], (64, 256), jnp.float32)
     w = jax.random.normal(ks[1], (256, 128), jnp.float32) * 0.05
     q = quantize_weight(w, 8)
-    out = ops.quantized_matmul(x, q["w_q"].astype(jnp.int32), q["w_scale"][0])
+    out = api.quantized_matmul(
+        x, q["w_q"].astype(jnp.int32), q["w_scale"][0], PrecisionSpec.int8
+    )
     rel = float(jnp.abs(out - x @ w).max() / jnp.abs(x @ w).max())
     assert rel < 0.05, rel

@@ -2,7 +2,11 @@
 parallelism distribution, codegen invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: deterministic replay shim
+    from _hypothesis_stub import given, settings, st
 
 from benchmarks import workloads
 from repro.core.compiler import (

@@ -48,12 +48,13 @@ def test_htree_numerics_agree_everywhere():
     """kernels/htree_reduce, core/htree functional reduce, and a manual
     pairwise fold produce bit-identical fp32 sums (same summation order)."""
     from repro.core.htree import reduce_functional
-    from repro.kernels.ops import htree_reduce
+    from repro.kernels.api import htree_reduce, use_backend
 
     x = np.asarray(
         jax.random.normal(jax.random.key(0), (16, 64), jnp.float32) * 1000
     )
-    a = np.asarray(htree_reduce(jnp.asarray(x), impl="interpret"))
+    with use_backend("interpret"):
+        a = np.asarray(htree_reduce(jnp.asarray(x)))
     ints = np.round(x).astype(np.int64)
     b = reduce_functional(list(np.round(x).astype(np.int64)))
     c = np.asarray(kref.htree_reduce_ref(jnp.asarray(x)))
