@@ -7,6 +7,13 @@ oracle under ``use_backend("xla")`` (jit-compiled, what the CPU container can
 execute; the TPU target swaps the context to "pallas" with no other change)
 and is cross-checked once against interpret mode on a reduced shape.
 
+Alongside wall-clock, every kernel also runs once under
+``use_backend("pimsab")`` on a reduced shape: the call lowers through the
+tensor DSL → §V compiler → ISA, executes bit-exactly on the functional
+simulator, and attaches *modeled* full-chip cycles/energy via
+``api.last_sim_report()`` — so ``BENCH_kernels.json`` tracks the architecture
+model's trajectory next to the host numbers.
+
 ``run()`` returns the row list for benchmarks/run.py; ``main()`` also writes
 ``BENCH_kernels.json`` at the repo root so future PRs have a baseline to
 compare against.
@@ -70,6 +77,73 @@ def _cases() -> Dict[str, Dict[str, Callable]]:
             ),
             "validate": lambda: _validate_rglru(),
         },
+        "ewise_add": {
+            "bench": lambda: _bench_call(
+                api.ewise_add,
+                jax.random.normal(jax.random.key(4), (1024, 1024), jnp.float32),
+                jax.random.normal(jax.random.key(5), (1024, 1024), jnp.float32),
+            ),
+            "validate": lambda: _validate_unary(
+                lambda x: api.ewise_add(x, x), lambda x: x + x,
+                jax.random.normal(jax.random.key(6), (64, 128), jnp.float32),
+            ),
+        },
+        "relu": {
+            "bench": lambda: _bench_call(
+                api.relu, jax.random.normal(jax.random.key(7), (1024, 1024), jnp.float32),
+            ),
+            "validate": lambda: _validate_unary(
+                api.relu, ref.relu_ref,
+                jax.random.normal(jax.random.key(8), (64, 128), jnp.float32),
+            ),
+        },
+    }
+
+
+def _pimsab_cases() -> Dict[str, Callable]:
+    """Reduced-shape calls for the architecture-model run (functional
+    simulation is bit-serial — registry-bench shapes would take minutes)."""
+    rng = np.random.default_rng(_SEED)
+
+    def _matmul():
+        x, w = _bitslice_args(32, 32, 64, 8, 8)
+        want = api.matmul(x, w)  # xla oracle (active backend is set by caller)
+        with api.use_backend("pimsab"):
+            got = api.matmul(x, w)
+        return bool(jnp.allclose(want, got))
+
+    def _htree():
+        x = jax.random.normal(jax.random.key(_SEED), (16, 64), jnp.float32)
+        with api.use_backend("pimsab"):
+            got = api.htree_reduce(x)
+        return bool(jnp.allclose(ref.htree_reduce_ref(x), got, atol=5e-3))
+
+    def _rglru():
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.key(1), (1, 8, 64)))
+        b = jax.random.normal(jax.random.key(2), (1, 8, 64))
+        h0 = jax.random.normal(jax.random.key(3), (1, 64))
+        with api.use_backend("pimsab"):
+            got = api.rglru_scan(a, b, h0)
+        return bool(jnp.allclose(ref.rglru_scan_ref(a, b, h0), got, atol=5e-2))
+
+    def _ewise():
+        x = jnp.asarray(rng.integers(-100, 100, (16, 64)), jnp.int32)
+        with api.use_backend("pimsab"):
+            got = api.ewise_add(x, x)
+        return bool((np.asarray(got) == np.asarray(x + x)).all())
+
+    def _relu():
+        x = jnp.asarray(rng.integers(-100, 100, (16, 64)), jnp.int32)
+        with api.use_backend("pimsab"):
+            got = api.relu(x)
+        return bool((np.asarray(got) == np.asarray(jnp.maximum(x, 0))).all())
+
+    return {
+        "bitslice_matmul": _matmul,
+        "htree_reduce": _htree,
+        "rglru_scan": _rglru,
+        "ewise_add": _ewise,
+        "relu": _relu,
     }
 
 
@@ -112,6 +186,7 @@ def _validate_rglru() -> bool:
 
 def run() -> List[Dict]:
     cases = _cases()
+    sim_cases = _pimsab_cases()
     rows = []
     for name in sorted(api.registered_kernels()):
         case = cases.get(name)
@@ -120,14 +195,31 @@ def run() -> List[Dict]:
                 f"kernel {name!r} is registered but has no bench case — "
                 "add one to benchmarks/kernels_bench.py"
             )
-        rows.append(
-            {
-                "kernel": name,
-                "backend": "xla",
-                "us_per_call": round(case["bench"](), 3),
-                "interpret_matches_oracle": case["validate"](),
-            }
-        )
+        row = {
+            "kernel": name,
+            "backend": "xla",
+            "us_per_call": round(case["bench"](), 3),
+            "interpret_matches_oracle": case["validate"](),
+        }
+        sim_case = sim_cases.get(name)
+        if sim_case is None:
+            raise KeyError(
+                f"kernel {name!r} has no pimsab bench case — "
+                "add one to benchmarks/kernels_bench.py"
+            )
+        matches = sim_case()
+        rep = api.last_sim_report()
+        row["pimsab"] = {
+            "matches_oracle": matches,
+            "workload": rep.workload,
+            "modeled_cycles": rep.total_cycles,
+            "modeled_seconds": rep.modeled_seconds,
+            "cycle_breakdown": {k: round(v, 4) for k, v in rep.cycle_breakdown.items()},
+            "energy_j": rep.energy_j,
+            "instrs": rep.instrs,
+            "functional_instrs": rep.functional_instrs,
+        }
+        rows.append(row)
     return rows
 
 

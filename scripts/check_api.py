@@ -29,6 +29,8 @@ PUBLIC_MODULES = [
     "repro.kernels.api",
     "repro.kernels.ops",
     "repro.kernels.ref",
+    "repro.kernels.ewise",
+    "repro.kernels.pimsab_backend",
     "repro.dist.sharding",
     "repro.dist.collectives",
     "repro.models.common",
@@ -48,9 +50,13 @@ API_SYMBOLS = [
     "current_backend",
     "set_default_backend",
     "register_kernel",
+    "register_pimsab_impl",
     "registered_kernels",
     "matmul",
     "quantized_matmul",
+    "ewise_add",
+    "relu",
+    "last_sim_report",
 ]
 
 
@@ -67,9 +73,14 @@ def check_imports() -> list[str]:
             if not hasattr(api, sym):
                 errors.append(f"repro.kernels.api missing public symbol {sym!r}")
         kernels = api.registered_kernels()
-        for required in ("bitslice_matmul", "htree_reduce", "rglru_scan"):
+        for required in ("bitslice_matmul", "htree_reduce", "rglru_scan", "ewise_add", "relu"):
             if required not in kernels:
                 errors.append(f"kernel {required!r} not registered")
+        if "pimsab" not in api.BACKENDS:
+            errors.append("backend 'pimsab' missing from api.BACKENDS")
+        for name, kd in kernels.items():
+            if kd.pimsab is None:
+                errors.append(f"kernel {name!r} has no pimsab lowering")
     except Exception:
         errors.append(f"api introspection failed:\n{traceback.format_exc()}")
     return errors

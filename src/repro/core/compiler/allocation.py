@@ -24,6 +24,11 @@ def adaptive_precision(pa: int, pb: int, k: int = 1, op: str = "mac") -> int:
         base = pa + pb
     elif op in ("relu", "maxpool", "copy"):
         base = max(pa, pb)
+    elif op == "scan_mac":
+        # the recurrence state keeps the wider operand's format: each step's
+        # product is renormalized back (>> frac) before the add, so precision
+        # does not grow with the sequential extent
+        base = max(pa, pb)
     else:
         raise ValueError(op)
     if op in ("mac", "stencil_mac") and k > 1:

@@ -5,6 +5,16 @@ its own data slice; the simulator charges DRAM/NoC instructions with
 chip-total bits).  Schedules are conservative/synchronous — data-transfer
 phases serialize against compute, matching the paper's compiler (the Fig. 14
 hand-tuned gap comes exactly from this).
+
+Programs are *functionally executable*: DRAM instructions carry a data-plane
+``tag`` ("in_a"/"in_b"/"h0"/"out") and a ``fields`` count so a binder (see
+``repro.kernels.pimsab_backend``) can marry the instruction stream with real
+operand slabs and run it on ``Simulator(functional=True)``.  That forces the
+stream to be self-contained: accumulators are zeroed with the bit-serial
+XOR idiom before each serial step, constants reach the RF through explicit
+``RfLoad``s, and multiply-accumulates are the fused ``Mac``/``MacConst``
+(Fig. 8a streaming — the Mul+Add pair they replace truncated the product to
+the half-width live window and was not executable).
 """
 from __future__ import annotations
 
@@ -33,6 +43,11 @@ def _addr(mapping: Mapping, name: str) -> int:
     return rng[0][0] if rng else 0
 
 
+def _zero(addr: int, prec: int) -> isa.Instr:
+    """Bit-serial zeroing idiom: x XOR x (one micro-op per wordline)."""
+    return isa.Logical(dst=addr, src1=addr, prec1=prec, src2=addr, prec2=prec, op="xor")
+
+
 def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -> CompiledProgram:
     m = distribute(w, cfg)
     prog: List[isa.Instr] = []
@@ -40,7 +55,6 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
     pb = w.ins[1].prec if len(w.ins) > 1 else pa
     d = w.total_out_elems()
     k = w.reduce_extent()
-    elems_per_step = m.tiles_used * m.lanes_used // m.reduce_split
     a_addr, b_addr = _addr(m, "in_a"), _addr(m, "in_b")
     out_addr = _addr(m, "out") or _addr(m, "acc")
     tmp_addr = _addr(m, "mul_tmp")
@@ -52,34 +66,54 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
     out_total = m.dram_split.get("out", 0.0)
 
     if w.op in ("map_add", "map_mul", "relu"):
+        pred_addr = _addr(m, "pred")
+        const_b = len(w.ins) > 1 and w.ins[1].is_const
+        if const_b and w.op == "map_mul":
+            prog.append(isa.RfLoad(reg=0, value=w.ins[1].const_value or 1))
         for step in range(m.serial_iters):
-            prog.append(isa.DramLoad(dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters), prec=pa))
-            if len(w.ins) > 1 and not w.ins[1].is_const:
-                prog.append(isa.DramLoad(dram_addr=0, cram_addr=b_addr, bits=int(b_total / m.serial_iters), prec=pb))
+            prog.append(isa.DramLoad(
+                dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters),
+                prec=pa, tag="in_a",
+            ))
+            if len(w.ins) > 1 and not const_b:
+                prog.append(isa.DramLoad(
+                    dram_addr=0, cram_addr=b_addr, bits=int(b_total / m.serial_iters),
+                    prec=pb, tag="in_b",
+                ))
             if w.op == "map_add":
                 prog.append(isa.Add(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, src2=b_addr, prec2=pb))
             elif w.op == "map_mul":
-                prog.append(isa.Mul(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, src2=b_addr, prec2=pb))
-            else:  # relu: cmp against zero + predicated copy
-                prog.append(isa.CmpGE(dst=tmp_addr or 200, src1=a_addr, prec1=pa, src2=a_addr, prec2=pa))
-                prog.append(isa.SetMask(src=tmp_addr or 200))
+                if const_b:
+                    prog.append(isa.MulConst(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, reg=0))
+                else:
+                    prog.append(isa.Mul(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, src2=b_addr, prec2=pb))
+            else:  # relu: out = a where a >= 0 else 0 (predicated copy onto zeros)
+                prog.append(_zero(out_addr, m.out_prec))
+                prog.append(isa.CmpGE(dst=pred_addr, src1=a_addr, prec1=pa, src2=out_addr, prec2=pa))
+                prog.append(isa.SetMask(src=pred_addr))
                 prog.append(isa.Copy(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, pred=isa.Pred.MASK))
-            prog.append(isa.DramStore(dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters), prec=m.out_prec))
+            prog.append(isa.DramStore(
+                dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters),
+                prec=m.out_prec, tag="out",
+            ))
 
     elif w.op == "mac":
-        p_mul = pa + pb
-        window = mul_live_window(p_mul)
         k_lane = k // m.reduce_split
         n_chunks = max(1, k_lane // m.k_chunk)
         n_phases = m.serial_iters * n_chunks
+        const_b = w.ins[1].is_const
+        if const_b:
+            prog.append(isa.RfLoad(reg=0, value=w.ins[1].const_value or 1))
         for step in range(m.serial_iters):
+            prog.append(_zero(out_addr, m.out_prec))  # fresh accumulator
             for kc in range(n_chunks):
                 # data-parallel operand slice for this chunk
                 prog.append(isa.DramLoad(
                     dram_addr=0, cram_addr=a_addr,
                     bits=int(a_total / n_phases), prec=pa,
+                    tag="in_a", fields=m.k_chunk,
                 ))
-                if not w.ins[1].is_const:
+                if not const_b:
                     # shared operand: one DRAM load, systolic NoC broadcast,
                     # H-tree shuffle-distribution to CRAMs (§III-B) — one
                     # pipelined instruction; receive still serializes against
@@ -89,30 +123,68 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
                         bits=int(b_total / n_phases), prec=pb,
                         shf=isa.ShufflePattern.STRIDE,
                         bcast_tiles=m.tiles_used,
+                        tag="in_b", fields=m.k_chunk,
                     ))
                 for j in range(m.k_chunk):
-                    if w.ins[1].is_const:
-                        prog.append(isa.MulConst(
-                            dst=tmp_addr, prec_dst=window, src1=a_addr + j * pa, prec1=pa,
-                            reg=j % cfg.rf_regs,
+                    if const_b:
+                        prog.append(isa.MacConst(
+                            dst=out_addr, prec_dst=m.out_prec,
+                            src1=a_addr + j * pa, prec1=pa, reg=0,
                         ))
                     else:
-                        prog.append(isa.Mul(
-                            dst=tmp_addr, prec_dst=window, src1=a_addr + j * pa, prec1=pa,
+                        prog.append(isa.Mac(
+                            dst=out_addr, prec_dst=m.out_prec,
+                            src1=a_addr + j * pa, prec1=pa,
                             src2=b_addr + j * pb, prec2=pb,
                         ))
-                    prog.append(isa.Add(
-                        dst=out_addr, prec_dst=m.out_prec, src1=out_addr, prec1=m.out_prec,
-                        src2=tmp_addr, prec2=p_mul,
-                    ))
             if m.reduce_split > 1:
                 prog.append(isa.ReduceIntra(dst=out_addr, src=out_addr, prec=m.out_prec, size=min(m.reduce_split, cfg.cram_cols)))
                 if m.reduce_split > cfg.cram_cols:
                     prog.append(isa.ReduceHTree(dst=out_addr, src=out_addr, prec=m.out_prec))
             prog.append(isa.DramStore(
                 dram_addr=0, cram_addr=out_addr,
-                bits=int(out_total / m.serial_iters), prec=m.out_prec,
+                bits=int(out_total / m.serial_iters), prec=m.out_prec, tag="out",
             ))
+
+    elif w.op == "scan_mac":
+        # linear recurrence h_t = a_t · h_{t-1} + b_t, fixed point: the
+        # product (frac(a)+frac(h) fraction bits) is renormalized by reading
+        # the wordline window shifted up by frac(a) — a free arithmetic >>
+        ph = m.out_prec
+        fa = w.ins[0].frac
+        p_mul = pa + ph
+        n_chunks = max(1, k // m.k_chunk)
+        h0_total = m.dram_split.get("h0", 0.0)
+        for step in range(m.serial_iters):
+            prog.append(isa.DramLoad(
+                dram_addr=0, cram_addr=out_addr, bits=int(h0_total / m.serial_iters),
+                prec=ph, tag="h0",
+            ))
+            for kc in range(n_chunks):
+                prog.append(isa.DramLoad(
+                    dram_addr=0, cram_addr=a_addr,
+                    bits=int(a_total / (m.serial_iters * n_chunks)), prec=pa,
+                    tag="in_a", fields=m.k_chunk,
+                ))
+                prog.append(isa.DramLoad(
+                    dram_addr=0, cram_addr=b_addr,
+                    bits=int(b_total / (m.serial_iters * n_chunks)), prec=pb,
+                    tag="in_b", fields=m.k_chunk,
+                ))
+                for j in range(m.k_chunk):
+                    prog.append(isa.Mul(
+                        dst=tmp_addr, prec_dst=p_mul,
+                        src1=a_addr + j * pa, prec1=pa, src2=out_addr, prec2=ph,
+                    ))
+                    prog.append(isa.Copy(dst=out_addr, prec_dst=ph, src1=tmp_addr + fa, prec1=ph))
+                    prog.append(isa.Add(
+                        dst=out_addr, prec_dst=ph, src1=out_addr, prec1=ph,
+                        src2=b_addr + j * pb, prec2=pb,
+                    ))
+                    prog.append(isa.DramStore(
+                        dram_addr=0, cram_addr=out_addr,
+                        bits=int(out_total / (m.serial_iters * k)), prec=ph, tag="out",
+                    ))
 
     elif w.op == "stencil_mac":
         taps = max(r.stencil for r in w.ins)
@@ -120,14 +192,23 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
         for j in range(min(taps, cfg.rf_regs)):
             prog.append(isa.RfLoad(reg=j, value=2 * j + 1))
         for step in range(m.serial_iters):
-            prog.append(isa.DramLoad(dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters), prec=pa))
+            prog.append(_zero(out_addr, m.out_prec))
+            prog.append(isa.DramLoad(
+                dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters),
+                prec=pa, tag="in_a",
+            ))
             for j in range(taps):
                 if j:
                     # slide the window one lane: cross-CRAM shift (§III-B)
                     prog.append(isa.Shift(dst=a_addr, src=a_addr, prec=pa, amount=1))
-                prog.append(isa.MulConst(dst=tmp_addr, prec_dst=pa + pb, src1=a_addr, prec1=pa, reg=j % cfg.rf_regs))
-                prog.append(isa.Add(dst=out_addr, prec_dst=m.out_prec, src1=out_addr, prec1=m.out_prec, src2=tmp_addr, prec2=pa + pb))
-            prog.append(isa.DramStore(dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters), prec=m.out_prec))
+                prog.append(isa.MacConst(
+                    dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa,
+                    reg=j % cfg.rf_regs,
+                ))
+            prog.append(isa.DramStore(
+                dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters),
+                prec=m.out_prec, tag="out",
+            ))
     else:
         raise ValueError(w.op)
 

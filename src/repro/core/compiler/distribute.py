@@ -60,16 +60,40 @@ class Mapping:
         }
 
 
-def _buffer_reqs(w: Workload, k_chunk: int, out_prec: int, use_lifetime: bool = True) -> List[BufferReq]:
+def _buffer_reqs(
+    w: Workload, k_chunk: int, out_prec: int, use_lifetime: bool = True,
+    reduce_split: int = 1, cram_cols: int = 256,
+) -> List[BufferReq]:
     """Per-bitline wordline requirements for one serial step (Fig. 7 model)."""
     reqs: List[BufferReq] = []
     pa = w.ins[0].prec
     pb = w.ins[1].prec if len(w.ins) > 1 else pa
+    # a lane-split reduction folds through the intra-CRAM tree in place: the
+    # accumulator block must also hold the tree's sign-extended operand and
+    # shift scratch — 2·(P + log2 stages) contiguous wordlines (§V-C); the
+    # stage count must mirror codegen's ReduceIntra(size=min(rs, cram_cols))
+    def acc_words(p: int) -> int:
+        if reduce_split <= 1:
+            return p
+        stages = int(math.log2(min(reduce_split, cram_cols)))
+        return 2 * (p + stages)
+
     if w.op in ("map_add", "map_mul", "relu", "maxpool"):
         reqs.append(BufferReq("in_a", pa, pa))
         if len(w.ins) > 1 and not w.ins[1].is_const:
             reqs.append(BufferReq("in_b", pb, pb))
         reqs.append(BufferReq("out", out_prec, w.acc_prec))
+        if w.op == "relu":
+            reqs.append(BufferReq("pred", 1, 1))  # CmpGE predicate wordline
+    elif w.op == "scan_mac":
+        # sequential recurrence: both streams are data-parallel per lane; the
+        # product tmp is full-width (its high bits are read back for the
+        # >> frac renormalization, so no half-width live window applies)
+        reqs.append(BufferReq("in_a", k_chunk * pa, k_chunk * pa))
+        reqs.append(BufferReq("in_b", k_chunk * pb, k_chunk * pb))
+        reqs.append(BufferReq("acc", out_prec, w.acc_prec))
+        p_mul = pa + out_prec
+        reqs.append(BufferReq("mul_tmp", p_mul, p_mul))
     elif w.op == "stencil_mac":
         # the window slides via cross-CRAM lane shifts (§III-B) — only the
         # current element + a shifting copy are resident; taps live in the RF
@@ -82,7 +106,7 @@ def _buffer_reqs(w: Workload, k_chunk: int, out_prec: int, use_lifetime: bool = 
         reqs.append(BufferReq("in_a", k_chunk * pa, k_chunk * pa))
         if not w.ins[1].is_const:
             reqs.append(BufferReq("in_b", k_chunk * pb, k_chunk * pb))
-        reqs.append(BufferReq("acc", out_prec, w.acc_prec))
+        reqs.append(BufferReq("acc", acc_words(out_prec), acc_words(w.acc_prec)))
         p_mul = pa + pb
         window = mul_live_window(p_mul) if use_lifetime else p_mul
         reqs.append(BufferReq("mul_tmp", window, p_mul))
@@ -105,6 +129,14 @@ def _dram_bits(w: Workload, cfg: PimsabConfig, tiles: int, bcast_b: bool) -> Dic
             split["b"] = d * w.ins[1].prec
     elif w.op == "stencil_mac":
         split["a"] = d * pa  # each element loaded once; taps slide via shifts
+    elif w.op == "scan_mac":
+        # every timestep's (a_t, b_t) is loaded once and every state h_t is
+        # stored (the recurrence output is the whole trajectory); the initial
+        # state streams in once per lane
+        split["a"] = d * k * pa
+        split["b"] = d * k * w.ins[1].prec
+        split["out"] = float(d * k * w.out.prec)
+        split["h0"] = float(d * w.out.prec)
     else:
         split["a"] = d * k * pa / max(_reuse_a(w), 1)  # loaded once per use÷reuse
         if len(w.ins) > 1 and not w.ins[1].is_const:
@@ -154,9 +186,16 @@ def distribute(w: Workload, cfg: PimsabConfig) -> Mapping:
     best: Optional[Mapping] = None
     # --- exhaustive exploration (small space, §V-B) -----------------------
     tile_options = [t for t in range(1, cfg.num_tiles + 1)]
+    # lane-splitting a reduction: none, a CRAM sub-group, a full CRAM, or all
+    # lanes of the tile (the last folds through the H-tree across CRAMs);
+    # sequential scans never split — the recurrence carries per lane
+    if w.op == "mac" and k > 1:
+        rs_options = sorted({1, 16, cfg.cram_cols, lanes})
+    else:
+        rs_options = [1]
     for tiles in tile_options:
         per_tile = -(-d // tiles)
-        for reduce_split in ([1] if w.op not in ("mac",) or k == 1 else [1, 16, 256]):
+        for reduce_split in rs_options:
             if k % reduce_split:
                 continue
             lanes_needed = per_tile * reduce_split
@@ -166,7 +205,10 @@ def distribute(w: Workload, cfg: PimsabConfig) -> Mapping:
             for k_chunk in _k_chunk_options(w, k_per_lane):
                 out_prec = adaptive_precision(pa, pb, k, w.op)
                 out_prec = min(out_prec, w.acc_prec)
-                reqs = _buffer_reqs(w, k_chunk, out_prec)
+                reqs = _buffer_reqs(
+                    w, k_chunk, out_prec,
+                    reduce_split=reduce_split, cram_cols=cfg.cram_cols,
+                )
                 alloc = allocate(reqs, cfg.cram_rows)
                 if not alloc.feasible:
                     continue
@@ -188,14 +230,18 @@ def distribute(w: Workload, cfg: PimsabConfig) -> Mapping:
         )
     if best.reduce_split > 1:
         best.notes.append(f"reduction split {best.reduce_split}x across lanes, folded via intra-CRAM tree + H-tree")
-    naive = sum(r.naive_wordlines for r in _buffer_reqs(w, best.k_chunk, w.acc_prec, use_lifetime=False))
-    opt = sum(r.wordlines for r in _buffer_reqs(w, best.k_chunk, best.out_prec))
+    naive = sum(r.naive_wordlines for r in _buffer_reqs(
+        w, best.k_chunk, w.acc_prec, use_lifetime=False,
+        reduce_split=best.reduce_split, cram_cols=cfg.cram_cols))
+    opt = sum(r.wordlines for r in _buffer_reqs(
+        w, best.k_chunk, best.out_prec,
+        reduce_split=best.reduce_split, cram_cols=cfg.cram_cols))
     best.notes.append(f"wordlines {naive}->{opt} after adaptive precision + bit-level lifetime")
     return best
 
 
 def _k_chunk_options(w: Workload, k_per_lane: int) -> List[int]:
-    if w.op not in ("mac", "stencil_mac") or k_per_lane <= 1:
+    if w.op not in ("mac", "stencil_mac", "scan_mac") or k_per_lane <= 1:
         return [1]
     divs = [d for d in range(1, min(k_per_lane, 64) + 1) if k_per_lane % d == 0]
     return divs or [1]

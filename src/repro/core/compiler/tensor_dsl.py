@@ -31,6 +31,8 @@ class Ref:
     is_const: bool = False  # scalar/constant operand → RF + mul_const path
     const_value: Optional[int] = None
     stencil: int = 0        # fir/conv taps indexed via shifted loads
+    frac: int = 0           # fixed-point fraction bits (scan_mac renormalizes
+                            # products by reading the shifted wordline window)
 
 
 @dataclass(frozen=True)
@@ -39,7 +41,10 @@ class Workload:
     loops: Tuple[Loop, ...]
     out: Ref
     ins: Tuple[Ref, ...]
-    op: str  # "map_add" | "map_mul" | "mac" | "stencil_mac" | "relu" | "maxpool"
+    # "map_add" | "map_mul" | "mac" | "stencil_mac" | "scan_mac" | "relu" | "maxpool"
+    # scan_mac: out_t = a_t · out_{t-1} + b_t — the reduce loop is *sequential
+    # per lane* (a linear recurrence), never split across lanes.
+    op: str
     acc_prec: int = 32  # the *program's* accumulator precision (pre-adaptive)
 
     def loop(self, name: str) -> Loop:

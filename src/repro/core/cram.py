@@ -10,6 +10,20 @@ the paper's formulas (add: P+1, mul: ~b·(a+2), mul_const: set-bits·(a+2)).
 Layout: transposed.  An operand of precision P at wordline base `addr`
 occupies rows [addr, addr+P), LSB first, two's complement, one element per
 bitline.
+
+Two execution paths compute identical results and identical cycle counts:
+
+* ``exact_bits=True``  — the literal per-bit ``pe_step`` loops (the PE-level
+  reference; O(P²) numpy calls for a multiply).
+* ``exact_bits=False`` (default) — vectorized field arithmetic: operands are
+  gathered from their bit planes into int64 lane vectors, computed in one
+  shot, and scattered back, with two's-complement wrap (``& (2^P - 1)``),
+  carry-latch, and mask-predication semantics reproduced bit-exactly.  This
+  is the packbits-style vectorization that makes whole-program functional
+  simulation of registry-sized kernels tractable (one numpy op per bit
+  *plane* instead of per bit *step*).
+
+``tests/test_cram_properties.py`` drives both paths differentially.
 """
 from __future__ import annotations
 
@@ -21,8 +35,9 @@ from repro.core.pe import pe_step
 
 
 class Cram:
-    def __init__(self, rows: int = 256, cols: int = 256):
+    def __init__(self, rows: int = 256, cols: int = 256, exact_bits: bool = False):
         self.rows, self.cols = rows, cols
+        self.exact_bits = exact_bits
         self.bits = np.zeros((rows, cols), np.uint8)
         self.carry = np.zeros(cols, np.uint8)
         self.mask = np.ones(cols, np.uint8)
@@ -53,11 +68,26 @@ class Cram:
             return self.bits[base + i]
         return self.bits[base + prec - 1] if signed else np.zeros(self.cols, np.uint8)
 
+    def _field(self, addr: int, prec: int, signed: bool = True) -> np.ndarray:
+        """All-lane signed value of the operand at `addr` (fast-path gather)."""
+        return self.read(addr, prec, signed=signed)
+
+    def _store(self, addr: int, vals: np.ndarray, prec: int) -> None:
+        """Scatter an int64 lane vector back to bit planes, wrapping mod 2^prec."""
+        v = np.asarray(vals, np.int64) & ((1 << prec) - 1)
+        for i in range(prec):
+            self.bits[addr + i] = ((v >> i) & 1).astype(np.uint8)
+
     # ---- compute (each returns cycles) ------------------------------------
 
-    def copy(self, dst: int, src: int, prec: int) -> int:
-        for i in range(prec):
-            self.bits[dst + i] = self.bits[src + i]
+    def copy(self, dst: int, src: int, prec: int, pred: str = "none") -> int:
+        if pred == "mask":
+            keep = self.mask.astype(bool)
+            for i in range(prec):
+                self.bits[dst + i] = np.where(keep, self.bits[src + i], self.bits[dst + i])
+        else:
+            for i in range(prec):
+                self.bits[dst + i] = self.bits[src + i]
         return prec
 
     def logical(self, dst: int, a: int, b: int, prec: int, op: str) -> int:
@@ -76,6 +106,27 @@ class Cram:
     ) -> int:
         """dst[pd] = a[pa] + b[pb] (ripple, one bit per cycle).  cen/cst are
         the bit-slicing carry-enable/carry-store fields; negate_b gives sub."""
+        # carry-predication consults the *running* carry bit-by-bit — only the
+        # literal ripple loop reproduces it
+        if self.exact_bits or pred == "carry":
+            return self._add_bits(dst, a, b, pa, pb, pd, cen, cst, pred, negate_b)
+        m = (1 << pd) - 1
+        ua = self._field(a, pa) & m
+        vb = self._field(b, pb)
+        ub = (~vb if negate_b else vb) & m
+        cin = self.carry.astype(np.int64) if cen else (1 if negate_b else 0)
+        tot = ua + ub + cin
+        res = tot & m
+        if pred == "mask":
+            res = np.where(self.mask.astype(bool), res, self._field(dst, pd, signed=False))
+        self._store(dst, res, pd)
+        if cst:
+            self.carry = ((tot >> pd) & 1).astype(np.uint8)
+        # pd == max(pa,pb)+1 for a full add, so the cycle count IS the paper's
+        # P+1 formula; bit-sliced chunks (smaller pd) cost pd as well.
+        return pd
+
+    def _add_bits(self, dst, a, b, pa, pb, pd, cen, cst, pred, negate_b) -> int:
         carry = self.carry if cen else (np.ones(self.cols, np.uint8) if negate_b else np.zeros(self.cols, np.uint8))
         cycles = 0
         for i in range(pd):
@@ -89,8 +140,6 @@ class Cram:
             cycles += 1
         if cst:
             self.carry = carry.astype(np.uint8)
-        # pd == max(pa,pb)+1 for a full add, so the loop count IS the paper's
-        # P+1 formula; bit-sliced chunks (smaller pd) cost pd as well.
         return cycles
 
     def sub(self, dst: int, a: int, b: int, pa: int, pb: int, pd: int) -> int:
@@ -98,16 +147,22 @@ class Cram:
 
     def cmp_ge(self, dst: int, a: int, b: int, prec: int) -> int:
         """dst (1 bit) = (a >= b), via the sign of a - b."""
-        scratch = dst + 1  # callers reserve prec+1 rows at dst
-        carry = np.ones(self.cols, np.uint8)
-        sign = np.zeros(self.cols, np.uint8)
-        for i in range(prec + 1):
-            abit = self._bit(a, i, prec)
-            bbit = 1 - self._bit(b, i, prec)
-            sign, carry = pe_step(abit, bbit, carry, self.mask, "add")
-        self.bits[dst] = 1 - sign
-        del scratch
+        if self.exact_bits:
+            carry = np.ones(self.cols, np.uint8)
+            sign = np.zeros(self.cols, np.uint8)
+            for i in range(prec + 1):
+                abit = self._bit(a, i, prec)
+                bbit = 1 - self._bit(b, i, prec)
+                sign, carry = pe_step(abit, bbit, carry, self.mask, "add")
+            self.bits[dst] = 1 - sign
+        else:
+            # a - b over prec+1 bits never overflows, so the sign IS (a < b)
+            self.bits[dst] = (self._field(a, prec) >= self._field(b, prec)).astype(np.uint8)
         return prec + 2
+
+    def _mul_cycles(self, pb: int, pd: int) -> int:
+        # per partial product j: one set_mask + a (pd-j)-bit ripple + carry commit
+        return sum(pd - j + 2 for j in range(min(pb, pd)))
 
     def mul(self, dst: int, a: int, b: int, pa: int, pb: int, pd: int) -> int:
         """Signed shift-add multiply (predicated adds — Neural Cache §4.3).
@@ -116,6 +171,10 @@ class Cram:
         of `a` (sign-extended) into dst at offset j, predicated on bit j of b.
         The top bit of b has negative weight (two's complement) → subtract.
         """
+        if not self.exact_bits:
+            res = self._field(a, pa) * self._field(b, pb)
+            self._store(dst, res, pd)
+            return self._mul_cycles(pb, pd)
         cycles = 0
         for i in range(pd):
             self.bits[dst + i] = 0
@@ -137,9 +196,24 @@ class Cram:
         self.mask = saved_mask
         return cycles
 
+    def _mul_const_cycles(self, const: int, pa: int, pd: int) -> int:
+        cycles = 0
+        c, j = abs(int(const)), 0
+        while c:
+            if c & 1:
+                cycles += max(pd - j, 0) + 2
+            c >>= 1
+            j += 1
+        if const < 0:
+            cycles += pd
+        return cycles
+
     def mul_const(self, dst: int, a: int, const: int, pa: int, pd: int) -> int:
         """dst = a * const with zero-bit skipping: only set bits of |const|
         issue a ripple add (paper: z·(a+2) cycles)."""
+        if not self.exact_bits:
+            self._store(dst, self._field(a, pa) * int(const), pd)
+            return self._mul_const_cycles(const, pa, pd)
         cycles = 0
         for i in range(pd):
             self.bits[dst + i] = 0
@@ -167,6 +241,29 @@ class Cram:
                 cycles += 1
         return cycles
 
+    def mac(self, dst: int, a: int, b: int, pa: int, pb: int, pd: int) -> int:
+        """Fused multiply-accumulate: dst[pd] += a[pa] · b[pb] (wrapping).
+
+        This is the Fig-8a schedule made explicit: each product bit is folded
+        into the accumulator the cycle it becomes final, so only the half-width
+        live window of the product is ever resident (the allocator's
+        ``mul_tmp`` buffer).  Cycles = the mul's shift-add stream + the final
+        accumulator ripple — identical to the Mul+Add pair it replaces.
+        Defined at field granularity on both paths (the bit interleaving has
+        no observable state beyond the accumulator).
+        """
+        res = self._field(dst, pd) + self._field(a, pa) * self._field(b, pb)
+        self._store(dst, res, pd)
+        return pb * (pa + 2) + max(pd, pa + pb) + 1
+
+    def mac_const(self, dst: int, a: int, const: int, pa: int, pd: int) -> int:
+        """Fused dst[pd] += a[pa] · const, zero-bit skipping on the constant."""
+        res = self._field(dst, pd) + self._field(a, pa) * int(const)
+        self._store(dst, res, pd)
+        z = bin(abs(int(const))).count("1")
+        extra = pa + 2 if const < 0 else 0
+        return max(z, 1) * (pa + 2) + extra + pd + 1
+
     def shift_lanes(self, dst: int, src: int, prec: int, amount: int) -> int:
         """Cross-bitline shift: lane c receives lane c-amount (one wordline
         per cycle over the PE-to-PE connections)."""
@@ -192,6 +289,23 @@ class Cram:
         cycles = 0
         stages = int(np.log2(size))
         pf = prec + stages
+        if not self.exact_bits:
+            if src != dst:
+                cycles += prec
+            cycles += pf - prec  # in-place sign extension
+            v = self._field(src, prec)
+            m = (1 << pf) - 1
+            for s in range(stages):
+                g = 1 << s
+                sh = np.zeros_like(v)
+                sh[: self.cols - g] = v[g:]
+                tot = (v & m) + (sh & m)
+                if s == stages - 1:  # final add's ripple carry-out lands in the latch
+                    self.carry = ((tot >> pf) & 1).astype(np.uint8)
+                v = v + sh
+                cycles += 2 * pf  # lane shift + fixed-width add
+            self._store(dst, v, pf)
+            return cycles
         if src != dst:
             cycles += self.copy(dst, src, prec)
         for i in range(prec, pf):  # sign-extend in place

@@ -66,6 +66,13 @@ class Mul(Compute):
 
 
 @dataclass(frozen=True)
+class Mac(Compute):
+    """Fused multiply-accumulate: dst += src1 · src2 (Fig. 8a streaming —
+    product bits fold into the accumulator as they become final, so only the
+    half-width ``mul_tmp`` live window is resident)."""
+
+
+@dataclass(frozen=True)
 class Logical(Compute):
     op: str = "and"  # and | or | xor | not
 
@@ -129,6 +136,13 @@ class MulConst(Compute):
 
 
 @dataclass(frozen=True)
+class MacConst(Compute):
+    """Fused dst += src1 · RF[reg] — the constant-operand (mul_const) flavor
+    of :class:`Mac`, zero-bit skipping included."""
+    reg: int = 0
+
+
+@dataclass(frozen=True)
 class AddConst(Compute):
     reg: int = 0
 
@@ -145,6 +159,8 @@ class DramLoad(Instr):
     tr: bool = True            # run through the transpose unit
     shf: ShufflePattern = ShufflePattern.NONE
     bcast_tiles: int = 1       # >1: systolic broadcast to this many tiles
+    tag: str = ""              # data-plane binding ("in_a"/"in_b"/"h0"/...):
+    fields: int = 1            # consecutive `prec`-bit operands at cram_addr
 
 
 @dataclass(frozen=True)
@@ -154,6 +170,7 @@ class DramStore(Instr):
     bits: int = 0
     prec: int = 8
     tr: bool = True
+    tag: str = ""              # data-plane binding ("out")
 
 
 @dataclass(frozen=True)

@@ -50,9 +50,17 @@ class SimResult:
 
 
 class Simulator:
-    def __init__(self, cfg: PimsabConfig, functional: bool = False):
-        self.cfg = cfg
+    def __init__(
+        self,
+        cfg: Optional[PimsabConfig] = None,
+        functional: bool = False,
+        exact_bits: bool = False,
+    ):
+        from repro.core.machine import PIMSAB
+
+        self.cfg = cfg if cfg is not None else PIMSAB
         self.functional = functional
+        self.exact_bits = exact_bits
         self.crams: Dict[tuple, Cram] = {}  # (tile, cram) -> Cram, lazy
         self.rf: Dict[tuple, int] = {}      # (tile, reg) -> value
         self.res = SimResult()
@@ -61,17 +69,34 @@ class Simulator:
     def cram(self, tile: int = 0, idx: int = 0) -> Cram:
         key = (tile, idx)
         if key not in self.crams:
-            self.crams[key] = Cram(self.cfg.cram_rows, self.cfg.cram_cols)
+            self.crams[key] = Cram(
+                self.cfg.cram_rows, self.cfg.cram_cols, exact_bits=self.exact_bits
+            )
         return self.crams[key]
 
     def _tiles(self, ins: isa.Instr) -> List[int]:
         return list(ins.tiles) if ins.tiles else list(range(self.cfg.num_tiles))
+
+    def _active_crams(self, tile: int) -> List[int]:
+        """CRAM indices to execute SIMD compute on: the ones holding data.
+
+        Every CRAM of a tile executes the same micro-op stream; functionally
+        only the CRAMs the data plane has touched can produce observable
+        results, so the lazy dict doubles as the active set (cram 0 always
+        participates, preserving the single-CRAM test idiom)."""
+        idxs = sorted({c for (t, c) in self.crams if t == tile} | {0})
+        return idxs
 
     # -- execution ----------------------------------------------------------
     def run(self, program) -> SimResult:
         for ins in program:
             self.step(ins)
         return self.res
+
+    def _crams(self, tiles: List[int]):
+        for t in tiles:
+            for c in self._active_crams(t):
+                yield t, self.cram(t, c)
 
     def step(self, ins: isa.Instr) -> None:
         cfg, res = self.cfg, self.res
@@ -83,63 +108,83 @@ class Simulator:
             c = timing.cycles_add(ins.prec1, ins.prec2)
             self._compute(ins, c)
             if self.functional:
-                for t in tiles:
-                    cr = self.cram(t, 0)
+                for _, cr in self._crams(tiles):
                     if isinstance(ins, isa.Sub):
                         cr.sub(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
                     else:
                         cr.add(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2,
                                ins.prec_dst, cen=ins.cen, cst=ins.cst, pred=ins.pred.value)
+        elif isinstance(ins, isa.MacConst):
+            c = timing.cycles_mac_const(
+                ins.prec1, self.rf.get((tiles[0], ins.reg), 1), ins.prec_dst
+            )
+            self._compute(ins, c)
+            res.energy.rf(len(tiles))
+            if self.functional:
+                for t, cr in self._crams(tiles):
+                    cr.mac_const(ins.dst, ins.src1, self.rf[(t, ins.reg)], ins.prec1, ins.prec_dst)
         elif isinstance(ins, isa.MulConst):
             z_cycles = timing.cycles_mul_const(ins.prec1, self.rf.get((tiles[0], ins.reg), 1))
             self._compute(ins, z_cycles)
             res.energy.rf(len(tiles))
             if self.functional:
-                for t in tiles:
-                    self.cram(t, 0).mul_const(
-                        ins.dst, ins.src1, self.rf[(t, ins.reg)], ins.prec1, ins.prec_dst
-                    )
+                for t, cr in self._crams(tiles):
+                    cr.mul_const(ins.dst, ins.src1, self.rf[(t, ins.reg)], ins.prec1, ins.prec_dst)
+        elif isinstance(ins, isa.Mac):
+            c = timing.cycles_mac(ins.prec1, ins.prec2, ins.prec_dst)
+            self._compute(ins, c)
+            if self.functional:
+                for _, cr in self._crams(tiles):
+                    cr.mac(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
         elif isinstance(ins, isa.Mul):
             c = timing.cycles_mul(ins.prec1, ins.prec2)
             self._compute(ins, c)
             if self.functional:
-                for t in tiles:
-                    self.cram(t, 0).mul(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
+                for _, cr in self._crams(tiles):
+                    cr.mul(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
         elif isinstance(ins, isa.Logical):
             self._compute(ins, timing.cycles_logical(ins.prec1, ins.prec2))
             if self.functional:
-                for t in tiles:
-                    self.cram(t, 0).logical(ins.dst, ins.src1, ins.src2, ins.prec1, ins.op)
+                for _, cr in self._crams(tiles):
+                    cr.logical(ins.dst, ins.src1, ins.src2, ins.prec1, ins.op)
         elif isinstance(ins, isa.Copy):
             self._compute(ins, timing.cycles_copy(ins.prec1))
             if self.functional:
-                for t in tiles:
-                    self.cram(t, 0).copy(ins.dst, ins.src1, ins.prec1)
+                for _, cr in self._crams(tiles):
+                    cr.copy(ins.dst, ins.src1, ins.prec1, pred=ins.pred.value)
         elif isinstance(ins, isa.CmpGE):
             self._compute(ins, ins.prec1 + 2)
             if self.functional:
-                for t in tiles:
-                    self.cram(t, 0).cmp_ge(ins.dst, ins.src1, ins.src2, ins.prec1)
+                for _, cr in self._crams(tiles):
+                    cr.cmp_ge(ins.dst, ins.src1, ins.src2, ins.prec1)
         elif isinstance(ins, isa.SetMask):
             self._compute(ins, 1)
             if self.functional:
-                for t in tiles:
-                    self.cram(t, 0).set_mask(ins.src)
+                for _, cr in self._crams(tiles):
+                    cr.set_mask(ins.src)
         elif isinstance(ins, isa.ReduceIntra):
             self._compute(ins, timing.cycles_reduce_intra(ins.prec, ins.size))
             if self.functional:
-                for t in tiles:
-                    self.cram(t, 0).reduce_intra(ins.dst, ins.src, ins.prec, ins.size)
+                for _, cr in self._crams(tiles):
+                    cr.reduce_intra(ins.dst, ins.src, ins.prec, ins.size)
         elif isinstance(ins, isa.ReduceHTree):
             c = timing.cycles_htree_reduce(cfg, ins.prec)
             res.cycles["htree"] += c
             bits = cfg.crams_per_tile * cfg.cram_cols * ins.prec
             res.energy.htree(bits * len(tiles))
+            if self.functional:
+                # elementwise per-bitline sum over the tile's populated CRAMs
+                # (H-tree summation order — integers, so order is immaterial),
+                # result lands in CRAM 0 as the paper's designated root
+                for t in tiles:
+                    idxs = self._active_crams(t)
+                    total = sum(self.cram(t, c).read(ins.src, ins.prec) for c in idxs)
+                    self.cram(t, 0).write(ins.dst, total, ins.prec)
         elif isinstance(ins, isa.Shift):
             self._compute(ins, timing.cycles_cram_shift(cfg, ins.prec, abs(ins.amount)))
             if self.functional:
-                for t in tiles:
-                    self.cram(t, 0).shift_lanes(ins.dst, ins.src, ins.prec, ins.amount)
+                for _, cr in self._crams(tiles):
+                    cr.shift_lanes(ins.dst, ins.src, ins.prec, ins.amount)
         elif isinstance(ins, isa.RfLoad):
             res.cycles["compute"] += 1
             res.energy.rf(len(tiles))

@@ -45,6 +45,17 @@ def cycles_mul_const(pa: int, const: int) -> int:
     return max(z, 1) * (pa + 2) + extra
 
 
+def cycles_mac(pa: int, pb: int, pd: int) -> int:
+    """Fused multiply-accumulate (Fig. 8a streaming): the mul's shift-add
+    stream + the accumulator ripple — exactly the Mul+Add pair it fuses."""
+    return cycles_mul(pa, pb) + max(pd, pa + pb) + 1
+
+
+def cycles_mac_const(pa: int, const: int, pd: int) -> int:
+    """Constant-operand fused MAC: zero-bit-skipped mul + accumulator ripple."""
+    return cycles_mul_const(pa, const) + pd + 1
+
+
 def cycles_reduce_intra(p: int, size: int) -> int:
     """Intra-CRAM tree over bitlines: stage s shifts 2^s lanes (P_s cycles)
     then adds (P_s + 1); precision grows 1/stage."""

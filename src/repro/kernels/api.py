@@ -18,7 +18,11 @@ kwargs through every layer:
   - ``"xla"``       — the oracle (what the CPU dry-run lowers),
   - ``"interpret"`` — the Pallas kernel body run in interpreter mode
     (CPU validation of the real kernel),
-  - ``"pallas"``    — the compiled TPU kernel.
+  - ``"pallas"``    — the compiled TPU kernel,
+  - ``"pimsab"``    — the paper's architecture model: the call is lowered
+    through the tensor DSL → §V compiler → ISA and executed bit-serially on
+    the functional simulator (``repro.kernels.pimsab_backend``); modeled
+    cycles/energy are retrievable via :func:`last_sim_report`.
 
 Validation tests and benchmark enumeration are generated from the registry
 (:func:`registered_kernels`) instead of hand-maintained lists.
@@ -47,6 +51,7 @@ __all__ = [
     "current_backend",
     "set_default_backend",
     "register_kernel",
+    "register_pimsab_impl",
     "get_kernel",
     "registered_kernels",
     "dispatch",
@@ -57,8 +62,11 @@ __all__ = [
     "quantized_matmul",
     "htree_reduce",
     "rglru_scan",
+    "ewise_add",
+    "relu",
     "static_value",
     "last_executed_pairs",
+    "last_sim_report",
 ]
 
 
@@ -277,7 +285,7 @@ class SlicedTensor:
 # backend registry
 # ---------------------------------------------------------------------------
 
-BACKENDS = ("pallas", "interpret", "xla")
+BACKENDS = ("pallas", "interpret", "xla", "pimsab")
 
 # CPU container: oracles by default; TPU target: "pallas".  Overridable per
 # process via set_default_backend and per scope via use_backend.
@@ -322,11 +330,14 @@ def use_backend(name: str) -> Iterator[str]:
 
 @dataclass(frozen=True)
 class KernelDef:
-    """One registered kernel: the Pallas implementation + its oracle."""
+    """One registered kernel: the Pallas implementation + its oracle (+ the
+    optional architecture-simulator lowering, attached separately by
+    :func:`register_pimsab_impl`)."""
 
     name: str
     pallas: Callable[..., Any]
     oracle: Callable[..., Any]
+    pimsab: Optional[Callable[..., Any]] = None
 
 
 _REGISTRY: Dict[str, KernelDef] = {}
@@ -344,7 +355,33 @@ def register_kernel(name: str, *, oracle: Callable[..., Any]):
 
     def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
         with _registry_lock:
-            _REGISTRY[name] = KernelDef(name=name, pallas=fn, oracle=oracle)
+            prev = _REGISTRY.get(name)
+            _REGISTRY[name] = KernelDef(
+                name=name, pallas=fn, oracle=oracle,
+                pimsab=prev.pimsab if prev else None,
+            )
+        return fn
+
+    return deco
+
+
+def register_pimsab_impl(name: str):
+    """Decorator: attach the architecture-simulator lowering to kernel
+    ``name`` (which must already be registered).  Kept separate from
+    :func:`register_kernel` so the DSL→ISA→simulator bridge stays an optional
+    layer the TPU path never imports."""
+
+    def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
+        import dataclasses
+
+        with _registry_lock:
+            try:
+                kd = _REGISTRY[name]
+            except KeyError:
+                raise KeyError(
+                    f"cannot attach pimsab impl: kernel {name!r} not registered"
+                ) from None
+            _REGISTRY[name] = dataclasses.replace(kd, pimsab=fn)
         return fn
 
     return deco
@@ -363,8 +400,11 @@ def _ensure_registered() -> None:
     if _bootstrapped:
         return
     import repro.kernels.bitslice_matmul  # noqa: F401
+    import repro.kernels.ewise  # noqa: F401
     import repro.kernels.htree_reduce  # noqa: F401
     import repro.kernels.rglru_scan  # noqa: F401
+    # last: attaches the simulator lowering to the kernels registered above
+    import repro.kernels.pimsab_backend  # noqa: F401
 
     _bootstrapped = True
 
@@ -395,6 +435,15 @@ def dispatch(name: str, *args, pallas_kwargs: Optional[Dict[str, Any]] = None, *
     backend = current_backend()
     if backend == "xla":
         return k.oracle(*args, **kwargs)
+    if backend == "pimsab":
+        if k.pimsab is None:
+            raise NotImplementedError(
+                f"kernel {name!r} has no pimsab lowering "
+                "(register one with api.register_pimsab_impl)"
+            )
+        # tiling knobs in pallas_kwargs are TPU-specific; the DSL compiler
+        # chooses its own distribution (§V-B)
+        return k.pimsab(*args, **kwargs)
     kw = dict(kwargs, **(pallas_kwargs or {}))
     return k.pallas(*args, interpret=(backend == "interpret"), **kw)
 
@@ -522,3 +571,22 @@ def rglru_scan(
         "rglru_scan", a, b, h0,
         pallas_kwargs={"block_t": block_t, "block_w": block_w},
     )
+
+
+def ewise_add(x: jnp.ndarray, y: jnp.ndarray, *, block: int = 512) -> jnp.ndarray:
+    """Elementwise x + y (any matching shapes) on the active backend."""
+    return dispatch("ewise_add", x, y, pallas_kwargs={"block": block})
+
+
+def relu(x: jnp.ndarray, *, block: int = 512) -> jnp.ndarray:
+    """Elementwise max(x, 0) on the active backend (PIMSAB: CmpGE + predicated
+    copy through the PE mask latch)."""
+    return dispatch("relu", x, pallas_kwargs={"block": block})
+
+
+def last_sim_report():
+    """The :class:`~repro.kernels.pimsab_backend.SimReport` of the most recent
+    pimsab-backend kernel call on this thread (``None`` before any)."""
+    from repro.kernels import pimsab_backend
+
+    return pimsab_backend.last_sim_report()

@@ -1,0 +1,70 @@
+"""Pallas TPU kernels: elementwise map ops (vecadd / ReLU).
+
+PIMSAB executes these as one-micro-op-per-bit SIMD streams across all
+bitlines (op intensity ~0, DRAM-bound — Fig. 11's vecadd row); on the TPU
+they are trivial VPU maps.  They exist in the registry mainly to give the
+conformance suite and the architecture-simulator backend an elementwise
+lowering (`map_add` / `relu` in the tensor DSL) next to the MAC-shaped
+kernels.
+
+Tiling: operands are flattened and blocked 1-D; the grid streams blocks
+through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.kernels.api import register_kernel
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _relu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.maximum(x, jnp.zeros_like(x))
+
+
+def _block_size(n: int, block: int) -> int:
+    """Largest divisor of n that is ≤ block (grids need exact tiling)."""
+    for bn in range(min(block, n), 0, -1):
+        if n % bn == 0:
+            return bn
+    return 1
+
+
+def _blocked_1d(kernel, args, block: int, interpret: bool) -> jnp.ndarray:
+    x = args[0]
+    n = x.size
+    flat = [a.reshape(n) for a in args]
+    bn = _block_size(n, block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,)) for _ in flat],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(*flat)
+    return out.reshape(x.shape)
+
+
+@register_kernel("ewise_add", oracle=ref.ewise_add_ref)
+def ewise_add(
+    x: jnp.ndarray, y: jnp.ndarray, *, block: int = 512, interpret: bool = False
+) -> jnp.ndarray:
+    """x + y, any matching shapes/dtype."""
+    assert x.shape == y.shape, (x.shape, y.shape)
+    return _blocked_1d(_add_kernel, (x, y.astype(x.dtype)), block, interpret)
+
+
+@register_kernel("relu", oracle=ref.relu_ref)
+def relu(x: jnp.ndarray, *, block: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """max(x, 0)."""
+    return _blocked_1d(_relu_kernel, (x,), block, interpret)

@@ -1,0 +1,577 @@
+"""The ``"pimsab"`` kernel backend: registry calls → tensor DSL → §V compiler
+→ ISA → functional bit-serial simulator.
+
+This is the bridge that fuses the repo's two halves behind one API.  The
+TPU-native kernels (``use_backend("pallas"|"interpret"|"xla")``) execute JAX
+arrays; selecting ``use_backend("pimsab")`` instead lowers the *same call*
+onto the paper's architecture model:
+
+1. the operand shapes/precisions become a :class:`tensor_dsl.Workload`
+   (gemm → ``mac``, reduction → constant-operand ``mac`` through the RF
+   ``mul_const`` path, elementwise → ``map_*``/``relu``, the RG-LRU
+   recurrence → ``scan_mac``);
+2. ``compiler.distribute`` picks the parallelism distribution and
+   ``compiler.codegen`` emits the per-tile SIMD ISA stream (tagged DRAM
+   instructions carry the data-plane binding);
+3. the stream runs twice: **functionally** on a small
+   :class:`Simulator(functional=True)` machine for bit-exact results, and in
+   **timing** mode at full chip scale for the Fig-11-style modeled
+   cycle/energy report.
+
+Results return as JAX arrays (bit-exact for integer kernels; fixed-point
+quantized — `frac` fraction bits — for float kernels, allclose to the
+oracle).  The modeled numbers attach to the call through
+:func:`last_sim_report` (thread-local, mirroring ``api.last_executed_pairs``).
+
+Float operands cannot be tracers: the simulator needs concrete values, so
+calling a pimsab-backed kernel under ``jax.jit`` raises.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa
+from repro.core.compiler.codegen import CompiledProgram, compile_workload
+from repro.core.compiler.tensor_dsl import Loop, Ref, Workload
+from repro.core.machine import PIMSAB, PimsabConfig
+from repro.core.simulator import Simulator
+from repro.core import timing as core_timing
+from repro.kernels.api import register_pimsab_impl, static_value
+
+# the lowerings attach to already-registered kernels: importing the kernel
+# modules here makes a direct `import repro.kernels.pimsab_backend` work the
+# same as the lazy registry bootstrap
+import repro.kernels.bitslice_matmul  # noqa: E402,F401
+import repro.kernels.ewise  # noqa: E402,F401
+import repro.kernels.htree_reduce  # noqa: E402,F401
+import repro.kernels.rglru_scan  # noqa: E402,F401
+
+__all__ = [
+    "SimReport",
+    "last_sim_report",
+    "functional_config",
+    "FUNCTIONAL_CFG",
+    "execute_workload",
+    "timing_report",
+]
+
+# Functional machine: a small mesh so bit-exact bit-serial execution stays
+# tractable; the timing/energy report compiles the same workload at full
+# chip scale (PIMSAB, 120 tiles) where only the analytic model runs.
+FUNCTIONAL_CFG = PimsabConfig(mesh_cols=2, mesh_rows=2, crams_per_tile=1)
+TIMING_CFG = PIMSAB
+
+_tls = threading.local()
+
+
+def last_sim_report() -> Optional["SimReport"]:
+    """The report of the most recent pimsab kernel call on this thread."""
+    return getattr(_tls, "report", None)
+
+
+@contextlib.contextmanager
+def functional_config(cfg: PimsabConfig) -> Iterator[PimsabConfig]:
+    """Scope the functional-execution machine (tests use this to exercise
+    e.g. the cross-CRAM H-tree reduce path with ``crams_per_tile=2``)."""
+    prev = getattr(_tls, "fcfg", None)
+    _tls.fcfg = cfg
+    try:
+        yield cfg
+    finally:
+        _tls.fcfg = prev
+
+
+def _functional_cfg() -> PimsabConfig:
+    return getattr(_tls, "fcfg", None) or FUNCTIONAL_CFG
+
+
+@dataclass(frozen=True)
+class SimReport:
+    """Modeled execution of one kernel call on the PIMSAB architecture."""
+
+    kernel: str
+    workload: str
+    total_cycles: float                 # timing mode, full-scale machine
+    cycles: Dict[str, float]            # per category (compute/dram/noc/...)
+    cycle_breakdown: Dict[str, float]   # normalized
+    energy_pj: Dict[str, float]
+    energy_j: float
+    modeled_seconds: float
+    instrs: int                         # full-scale program length
+    instr_mix: Dict[str, int]           # instruction class -> count
+    mapping: Dict[str, Any]             # distribute() decision (to_json)
+    functional_instrs: int              # instructions executed bit-exactly
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "kernel": self.kernel,
+            "workload": self.workload,
+            "total_cycles": self.total_cycles,
+            "cycles": dict(self.cycles),
+            "cycle_breakdown": {k: round(v, 4) for k, v in self.cycle_breakdown.items()},
+            "energy_pj": {k: round(v, 1) for k, v in self.energy_pj.items()},
+            "energy_j": self.energy_j,
+            "modeled_seconds": self.modeled_seconds,
+            "instrs": self.instrs,
+            "instr_mix": dict(self.instr_mix),
+            "mapping": self.mapping,
+            "functional_instrs": self.functional_instrs,
+        }
+
+
+def _require_concrete(name: str, *arrays) -> List[np.ndarray]:
+    out = []
+    for a in arrays:
+        v = static_value(a)
+        if v is None:
+            raise ValueError(
+                f"the pimsab backend executes {name!r} on the functional "
+                "simulator and needs concrete operands — it cannot run under "
+                "jax.jit tracing"
+            )
+        out.append(np.asarray(v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the data plane: tagged DRAM instructions ↔ operand arrays
+# ---------------------------------------------------------------------------
+
+
+class _DataPlane:
+    """Marries the tagged instruction stream with real operand slabs.
+
+    Layout contract (mirrors distribute/codegen):
+    output element ``o`` of tile ``t``, serial step ``s``, lane group ``g``
+    has flat index ``t·per_tile + s·outs_per_step + g`` (row-major over the
+    data loops); group ``g`` occupies lanes ``[g·rs, (g+1)·rs)``, lane ``r``
+    of a group owns reduction indices ``[r·k_lane, (r+1)·k_lane)`` chunked by
+    ``k_chunk``.  Global lane ``L`` of a tile lives in CRAM ``L // cram_cols``
+    at bitline ``L % cram_cols``.
+    """
+
+    def __init__(
+        self,
+        w: Workload,
+        mapping,
+        cfg: PimsabConfig,
+        arrays: Dict[str, np.ndarray],
+        h0: Optional[np.ndarray] = None,
+    ):
+        self.w, self.m, self.cfg = w, mapping, cfg
+        self.arrays = arrays
+        self.h0 = h0
+        self.d = w.total_out_elems()
+        self.k = w.reduce_extent()
+        self.rs = mapping.reduce_split
+        self.k_lane = self.k // self.rs
+        self.cols = cfg.cram_cols
+        self.outs_per_step = max(1, mapping.lanes_used // self.rs)
+        self.per_tile = -(-self.d // mapping.tiles_used)
+        if w.op in ("mac", "scan_mac"):
+            self.n_chunks = max(1, self.k_lane // mapping.k_chunk)
+        else:
+            self.n_chunks = 1
+        self.counts: Dict[Tuple[str, int], int] = {}
+        if w.op == "scan_mac":
+            self.out = np.zeros((self.d, self.k), np.int64)
+        else:
+            self.out = np.zeros(self.d, np.int64)
+
+    # -- index algebra -----------------------------------------------------
+
+    def _lane_groups(self):
+        L = np.arange(self.m.lanes_used)
+        return L // self.rs, L % self.rs
+
+    def _data_vals(self, out_idx: np.ndarray) -> Dict[str, np.ndarray]:
+        vals: Dict[str, np.ndarray] = {}
+        rem = out_idx.copy()
+        for l in reversed(self.w.data_loops):
+            vals[l.name] = rem % l.extent
+            rem //= l.extent
+        return vals
+
+    def _reduce_vals(self, k_idx: np.ndarray, vals: Dict[str, np.ndarray]) -> None:
+        rem = k_idx.copy()
+        for l in reversed(self.w.reduce_loops):
+            vals[l.name] = rem % l.extent
+            rem //= l.extent
+
+    def _gather(self, ref: Ref, vals: Dict[str, np.ndarray], valid: np.ndarray) -> np.ndarray:
+        arr = self.arrays[ref.name]
+        if not ref.index:
+            return np.where(valid, int(arr), 0)
+        idx = tuple(np.where(valid, vals[n], 0) for n in ref.index)
+        return np.where(valid, arr[idx], 0)
+
+    def _out_positions(self, tile: int, step: int, gs: np.ndarray):
+        local = step * self.outs_per_step + gs
+        out_idx = tile * self.per_tile + local
+        valid = (local < self.per_tile) & (out_idx < self.d)
+        return out_idx, valid
+
+    # -- loads ---------------------------------------------------------------
+
+    def load(self, ins: isa.DramLoad, tile: int) -> Tuple[np.ndarray, int]:
+        """Next slab for this (tag, tile): (fields, lanes) values + precision."""
+        key = (ins.tag, tile)
+        cnt = self.counts.get(key, 0)
+        self.counts[key] = cnt + 1
+        g, r = self._lane_groups()
+        if ins.tag == "h0":
+            out_idx, valid = self._out_positions(tile, cnt, g)
+            vals = self._data_vals(np.where(valid, out_idx, 0))
+            row = np.where(valid, self.h0[tuple(vals[l.name] for l in self.w.data_loops)], 0)
+            return row[None, :], ins.prec
+        step, kc = divmod(cnt, self.n_chunks)
+        out_idx, valid = self._out_positions(tile, step, g)
+        vals = self._data_vals(np.where(valid, out_idx, 0))
+        ref = self.w.ins[0] if ins.tag == "in_a" else self.w.ins[1]
+        rows = []
+        for j in range(ins.fields):
+            k_idx = r * self.k_lane + kc * self.m.k_chunk + j
+            kvalid = valid & (k_idx < self.k) if self.w.reduce_loops else valid
+            v = dict(vals)
+            if self.w.reduce_loops:
+                self._reduce_vals(np.where(kvalid, k_idx, 0), v)
+            rows.append(self._gather(ref, v, kvalid))
+        return np.stack(rows), ins.prec
+
+    # -- stores --------------------------------------------------------------
+
+    def collect(self, ins: isa.DramStore, tile: int, read_lanes: Callable[[int, int], np.ndarray]) -> None:
+        key = ("out", tile)
+        cnt = self.counts.get(key, 0)
+        self.counts[key] = cnt + 1
+        if self.w.op == "scan_mac":
+            step, t_idx = divmod(cnt, self.k)
+        else:
+            step, t_idx = cnt, None
+        if self.w.op == "mac" and self.rs > 1:
+            gs = np.arange(self.outs_per_step)
+            lanes = gs * self.rs if self.rs <= self.cols else np.zeros(1, np.int64)
+        else:
+            gs = np.arange(self.outs_per_step)
+            lanes = gs
+        out_idx, valid = self._out_positions(tile, step, gs)
+        vals = read_lanes(ins.cram_addr, ins.prec)[lanes]
+        if t_idx is None:
+            self.out[out_idx[valid]] = vals[valid]
+        else:
+            self.out[out_idx[valid], t_idx] = vals[valid]
+
+
+def _write_lanes(sim: Simulator, tile: int, addr: int, vals: np.ndarray, prec: int) -> None:
+    cols = sim.cfg.cram_cols
+    for c in range((len(vals) + cols - 1) // cols):
+        sim.cram(tile, c).write(addr, vals[c * cols:(c + 1) * cols], prec)
+
+
+def _read_lanes(sim: Simulator, tile: int, addr: int, prec: int, lanes: int) -> np.ndarray:
+    cols = sim.cfg.cram_cols
+    parts = []
+    for c in range((lanes + cols - 1) // cols):
+        n = min(cols, lanes - c * cols)
+        parts.append(sim.cram(tile, c).read(addr, prec, n=n))
+    return np.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+
+def execute_workload(
+    w: Workload,
+    arrays: Dict[str, np.ndarray],
+    *,
+    h0: Optional[np.ndarray] = None,
+    kernel: str = "",
+    cfg_fn: Optional[PimsabConfig] = None,
+    cfg_timing: Optional[PimsabConfig] = None,
+) -> Tuple[np.ndarray, SimReport]:
+    """Compile ``w``, execute it bit-exactly, and model it at chip scale.
+
+    Returns the raw integer outputs (flat over the data loops; ``(d, k)`` for
+    ``scan_mac``) and the :class:`SimReport` (also stashed for
+    :func:`last_sim_report`).
+    """
+    cfg_fn = cfg_fn or _functional_cfg()
+    cp = compile_workload(w, cfg_fn)
+    m = cp.mapping
+    sim = Simulator(cfg_fn, functional=True)
+    plane = _DataPlane(w, m, cfg_fn, arrays, h0=h0)
+    for ins in cp.program:
+        if isinstance(ins, isa.DramLoad) and ins.tag:
+            for t in range(m.tiles_used):
+                slab, prec = plane.load(ins, t)
+                for j in range(slab.shape[0]):
+                    _write_lanes(sim, t, ins.cram_addr + j * prec, slab[j], prec)
+        sim.step(ins)
+        if isinstance(ins, isa.DramStore) and ins.tag == "out":
+            for t in range(m.tiles_used):
+                plane.collect(
+                    ins, t,
+                    lambda addr, prec, _t=t: _read_lanes(sim, _t, addr, prec, m.lanes_used),
+                )
+    rep = timing_report(
+        w, kernel=kernel, cfg=cfg_timing or TIMING_CFG, functional_instrs=sim.res.instrs
+    )
+    _tls.report = rep
+    return plane.out, rep
+
+
+def timing_report(
+    w: Workload,
+    *,
+    kernel: str = "",
+    cfg: PimsabConfig = TIMING_CFG,
+    functional_instrs: int = 0,
+) -> SimReport:
+    """Compile ``w`` for the full-scale machine and run the analytic model."""
+    cp = compile_workload(w, cfg)
+    res = Simulator(cfg).run(cp.program)
+    return SimReport(
+        kernel=kernel,
+        workload=w.name,
+        total_cycles=res.total_cycles,
+        cycles=dict(res.cycles),
+        cycle_breakdown=res.breakdown(),
+        energy_pj=dict(res.energy.pj),
+        energy_j=res.energy.total_j,
+        modeled_seconds=res.seconds(cfg),
+        instrs=res.instrs,
+        instr_mix=dict(Counter(type(i).__name__ for i in cp.program)),
+        mapping=cp.mapping.to_json(),
+        functional_instrs=functional_instrs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fixed-point quantization (float kernels)
+# ---------------------------------------------------------------------------
+
+
+def _quantize(x: np.ndarray, frac: int, bits: int) -> np.ndarray:
+    """Round x · 2^frac into a ``bits``-bit signed integer (saturating)."""
+    lim = 2 ** (bits - 1) - 1
+    return np.clip(
+        np.round(np.asarray(x, np.float64) * (1 << frac)), -lim, lim
+    ).astype(np.int64)
+
+
+def _fixed_frac(envelope: float, bits: int) -> int:
+    """Fraction bits left after covering ``envelope`` with ``bits``-2 int bits."""
+    int_bits = max(0, math.ceil(math.log2(envelope + 1e-30))) if envelope > 0 else 0
+    return max(0, bits - 2 - int_bits)
+
+
+def _to_fixed(x: np.ndarray, bits: int) -> Tuple[np.ndarray, int]:
+    """Symmetric fixed-point: returns (q, frac) with x ≈ q · 2^-frac and q a
+    ``bits``-bit signed integer."""
+    frac = _fixed_frac(float(np.max(np.abs(x))) if x.size else 0.0, bits)
+    return _quantize(x, frac, bits), frac
+
+
+def _to_fixed_shared(arrays: List[np.ndarray], bits: int) -> Tuple[List[np.ndarray], int]:
+    """One format for several operands (bit-serial adds need aligned binal
+    points): the envelope is the max over all of them."""
+    env = max((float(np.abs(a).max()) if a.size else 0.0) for a in arrays)
+    frac = _fixed_frac(env, bits)
+    return [_quantize(a, frac, bits) for a in arrays], frac
+
+
+def _int_bits(x: np.ndarray) -> int:
+    """Signed bits needed to hold every value of an integer array."""
+    m = int(np.max(np.abs(x))) if x.size else 0
+    return max(2, m.bit_length() + 1)
+
+
+def _from_slices_np(slices: np.ndarray, slice_bits: int) -> np.ndarray:
+    acc = np.zeros(slices.shape[1:], np.int64)
+    for s in range(slices.shape[0]):
+        acc += slices[s].astype(np.int64) << (slice_bits * s)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# kernel lowerings
+# ---------------------------------------------------------------------------
+
+
+@register_pimsab_impl("bitslice_matmul")
+def _bitslice_matmul_pimsab(
+    x_slices, w_slices, *, slice_bits: int = 8, skip: Tuple[Tuple[int, int], ...] = (), **_
+) -> jnp.ndarray:
+    """(Sx, M, K) × (Sw, K, N) → (M, N) int32 — a ``mac`` gemm at the
+    operands' composite precision.  Bit-exact vs the oracle: the CRAM
+    accumulator wraps mod 2^32 exactly like the oracle's int32."""
+    xs, ws = _require_concrete("bitslice_matmul", x_slices, w_slices)
+    sx, mm, kk = xs.shape
+    sw, kk2, nn = ws.shape
+    assert kk == kk2, (kk, kk2)
+    # pairwise skip semantics: a slice dead against *every* partner never
+    # reaches the integer reconstruction (those slices are all-zero in every
+    # real flow — the skip list is derived from cached zero-slice metadata)
+    dead = set(skip)
+    xs = xs.astype(np.int64).copy()
+    ws = ws.astype(np.int64).copy()
+    for s in range(sx):
+        if all((s, t) in dead for t in range(sw)):
+            xs[s] = 0
+    for t in range(sw):
+        if all((s, t) in dead for s in range(sx)):
+            ws[t] = 0
+    x_int = _from_slices_np(xs, slice_bits)
+    w_int = _from_slices_np(ws, slice_bits)
+    pa = sx * slice_bits + 1  # balanced signed digits slightly exceed 2^(s·b-1)
+    pb = sw * slice_bits + 1
+    w = Workload(
+        name=f"bitslice_matmul_{mm}x{nn}x{kk}",
+        loops=(Loop("x", mm, "data"), Loop("y", nn, "data"), Loop("k", kk, "reduce")),
+        out=Ref("c", ("x", "y"), prec=32),
+        ins=(Ref("a", ("x", "k"), prec=pa), Ref("b", ("k", "y"), prec=pb)),
+        op="mac",
+        acc_prec=32,
+    )
+    out, _ = execute_workload(w, {"a": x_int, "b": w_int}, kernel="bitslice_matmul")
+    return jnp.asarray(out.reshape(mm, nn).astype(np.int32))
+
+
+@register_pimsab_impl("htree_reduce")
+def _htree_reduce_pimsab(x, **_) -> jnp.ndarray:
+    """(N, D) → (D,): constant-operand ``mac`` (·1 through the RF mul_const
+    path) reduced over N — the H-tree/intra-CRAM fold carries the sum."""
+    (xv,) = _require_concrete("htree_reduce", x)
+    n, dd = xv.shape
+    is_int = np.issubdtype(xv.dtype, np.integer)
+    if is_int:
+        xq, frac = xv.astype(np.int64), 0
+        pa = _int_bits(xv)
+    else:
+        pa = 16
+        xq, frac = _to_fixed(xv, pa)
+    w = Workload(
+        name=f"htree_reduce_{n}x{dd}",
+        loops=(Loop("d", dd, "data"), Loop("n", n, "reduce")),
+        out=Ref("y", ("d",), prec=32),
+        ins=(
+            Ref("x", ("n", "d"), prec=pa),
+            Ref("one", (), prec=2, is_const=True, const_value=1),
+        ),
+        op="mac",
+        acc_prec=32,
+    )
+    out, _ = execute_workload(w, {"x": xq}, kernel="htree_reduce")
+    if is_int:
+        return jnp.asarray(out.astype(np.asarray(x).dtype))
+    return jnp.asarray((out.astype(np.float64) / (1 << frac)).astype(np.float32))
+
+
+@register_pimsab_impl("rglru_scan")
+def _rglru_scan_pimsab(a, b, h0, **_) -> jnp.ndarray:
+    """(B, T, W) gates/inputs → (B, T, W) states: ``scan_mac`` fixed point.
+
+    The gate quantizes to fa fraction bits; the state/input stream shares one
+    format sized from the trajectory envelope (a calibration pass — profile,
+    then pick the adaptive precision, §IV-C).  Per-step truncation error is
+    2^-frac, contracted by the gate, so the result is allclose (not
+    bit-exact) to the float oracle.
+    """
+    av, bv, hv = _require_concrete("rglru_scan", a, b, h0)
+    bsz, tt, ww = av.shape
+    pa, fa = 16, 14  # gates in (0, 1): 2 integer bits are plenty
+    aq = _quantize(av, fa, pa)
+    # calibration: float envelope of the recurrence sizes the state format
+    env = np.abs(hv).max() if hv.size else 0.0
+    h = hv.astype(np.float64)
+    for t in range(tt):
+        h = av[:, t] * h + bv[:, t]
+        env = max(env, float(np.abs(h).max()), float(np.abs(bv[:, t]).max()))
+    int_bits = max(0, math.ceil(math.log2(env + 1e-30))) if env > 0 else 0
+    fb = 12
+    ph = min(fb + int_bits + 3, 24)
+    quant = lambda v: _quantize(v, fb, ph)
+    w = Workload(
+        name=f"rglru_scan_{bsz}x{tt}x{ww}",
+        loops=(Loop("b", bsz, "data"), Loop("w", ww, "data"), Loop("t", tt, "reduce")),
+        out=Ref("h", ("b", "w"), prec=ph),
+        ins=(
+            Ref("a", ("b", "w", "t"), prec=pa, frac=fa),
+            Ref("bt", ("b", "w", "t"), prec=ph),
+        ),
+        op="scan_mac",
+        acc_prec=ph,
+    )
+    out, _ = execute_workload(
+        w,
+        {"a": aq.transpose(0, 2, 1), "bt": quant(bv).transpose(0, 2, 1)},
+        h0=quant(hv),
+        kernel="rglru_scan",
+    )
+    hs = out.reshape(bsz, ww, tt).transpose(0, 2, 1)
+    return jnp.asarray((hs.astype(np.float64) / (1 << fb)).astype(np.float32))
+
+
+def _map_workload(name: str, op: str, n: int, refs: Tuple[Ref, ...], out_prec: int, acc: int) -> Workload:
+    return Workload(
+        name=name,
+        loops=(Loop("i", n, "data"),),
+        out=Ref("y", ("i",), prec=out_prec),
+        ins=refs,
+        op=op,
+        acc_prec=acc,
+    )
+
+
+@register_pimsab_impl("ewise_add")
+def _ewise_add_pimsab(x, y, **_) -> jnp.ndarray:
+    xv, yv = _require_concrete("ewise_add", x, y)
+    assert xv.shape == yv.shape, (xv.shape, yv.shape)
+    n = xv.size
+    is_int = np.issubdtype(xv.dtype, np.integer) and np.issubdtype(yv.dtype, np.integer)
+    if is_int:
+        xq, yq, frac = xv.reshape(n).astype(np.int64), yv.reshape(n).astype(np.int64), 0
+        pa = max(_int_bits(xv), _int_bits(yv))
+    else:
+        pa = 16
+        (xq, yq), frac = _to_fixed_shared([xv.reshape(n), yv.reshape(n)], pa)
+    w = _map_workload(
+        f"ewise_add_{n}", "map_add", n,
+        (Ref("xa", ("i",), prec=pa), Ref("xb", ("i",), prec=pa)),
+        out_prec=pa + 1, acc=pa + 1,
+    )
+    out, _ = execute_workload(w, {"xa": xq, "xb": yq}, kernel="ewise_add")
+    if is_int:
+        return jnp.asarray(out.reshape(xv.shape).astype(np.asarray(x).dtype))
+    return jnp.asarray((out.reshape(xv.shape).astype(np.float64) / (1 << frac)).astype(np.float32))
+
+
+@register_pimsab_impl("relu")
+def _relu_pimsab(x, **_) -> jnp.ndarray:
+    (xv,) = _require_concrete("relu", x)
+    n = xv.size
+    is_int = np.issubdtype(xv.dtype, np.integer)
+    if is_int:
+        xq, frac, pa = xv.reshape(n).astype(np.int64), 0, _int_bits(xv)
+    else:
+        pa = 16
+        xq, frac = _to_fixed(xv.reshape(n), pa)
+    w = _map_workload(
+        f"relu_{n}", "relu", n,
+        (Ref("xa", ("i",), prec=pa), Ref("z", ("i",), prec=pa, is_const=True, const_value=0)),
+        out_prec=pa, acc=pa,
+    )
+    out, _ = execute_workload(w, {"xa": xq}, kernel="relu")
+    if is_int:
+        return jnp.asarray(out.reshape(xv.shape).astype(np.asarray(x).dtype))
+    return jnp.asarray((out.reshape(xv.shape).astype(np.float64) / (1 << frac)).astype(np.float32))

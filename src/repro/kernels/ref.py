@@ -93,6 +93,19 @@ def int_matmul_wide_ref(x: jnp.ndarray, w: jnp.ndarray, x_bits: int, w_bits: int
 
 
 # ---------------------------------------------------------------------------
+# elementwise maps
+# ---------------------------------------------------------------------------
+
+
+def ewise_add_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return x + y
+
+
+def relu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0)
+
+
+# ---------------------------------------------------------------------------
 # H-tree reduction
 # ---------------------------------------------------------------------------
 

@@ -7,3 +7,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests and
 # benches must see 1 device (dry-run subprocess tests set their own flags).
+
+
+def pytest_configure(config):
+    # belt-and-braces with pytest.ini: the slow marker must exist even when
+    # the suite is invoked from a cwd that misses the ini (e.g. editors)
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy model/serving tests (excluded from tier-1; run with `pytest -m slow`)",
+    )

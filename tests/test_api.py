@@ -205,6 +205,13 @@ def _case(name):
         b = jax.random.normal(jax.random.key(4), (2, 256, 512))
         h0 = jax.random.normal(jax.random.key(5), (2, 512))
         return lambda: api.rglru_scan(a, b, h0), lambda: ref.rglru_scan_ref(a, b, h0)
+    if name == "ewise_add":
+        x = jax.random.normal(jax.random.key(6), (64, 128), jnp.float32)
+        y = jax.random.normal(jax.random.key(7), (64, 128), jnp.float32)
+        return lambda: api.ewise_add(x, y), lambda: ref.ewise_add_ref(x, y)
+    if name == "relu":
+        x = jax.random.normal(jax.random.key(8), (64, 128), jnp.float32)
+        return lambda: api.relu(x), lambda: ref.relu_ref(x)
     raise KeyError(f"registered kernel {name!r} has no test case — add one")
 
 

@@ -14,6 +14,9 @@ from repro.train.steps import make_train_state, make_train_step
 
 FLAGS = RunFlags(attn_chunk=8, flash_threshold=64)
 
+# every test here builds and steps a reduced model per arch — the slow tier
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, b=2, s=16, labels=True):
     out = {"tokens": jnp.ones((b, s), jnp.int32)}

@@ -25,6 +25,7 @@ def _qkv(key, b, s, hq, hkv, d, t=None):
 
 @pytest.mark.parametrize("chunk", [16, 32, 64])
 @pytest.mark.parametrize("triangular", [True, False])
+@pytest.mark.slow
 def test_chunked_causal_matches_direct(chunk, triangular):
     q, k, v = _qkv(jax.random.key(0), 2, 128, 8, 2, 16)
     ref = full_attention(q, k, v, causal=True, chunk=chunk, triangular=False, flash_threshold=10**9)
@@ -34,6 +35,7 @@ def test_chunked_causal_matches_direct(chunk, triangular):
 
 @pytest.mark.parametrize("window", [8, 16, 24, 48])
 @pytest.mark.parametrize("chunk", [8, 16])
+@pytest.mark.slow
 def test_banded_flash_matches_direct_band(window, chunk):
     b, s, hq, hkv, d = 2, 128, 4, 2, 16
     q, k, v = _qkv(jax.random.key(1), b, s, hq, hkv, d)
@@ -72,6 +74,7 @@ def test_decode_matches_last_causal_row():
     np.testing.assert_allclose(np.asarray(ref[:, -1:]), np.asarray(got), atol=2e-6)
 
 
+@pytest.mark.slow
 def test_triangular_emits_fewer_flops():
     """The triangular schedule must not even trace the j>i chunk matmuls."""
     q, k, v = _qkv(jax.random.key(5), 1, 128, 4, 2, 16)

@@ -1,0 +1,185 @@
+"""Property-based CRAM arithmetic tests (satellite of the pimsab backend PR).
+
+Random precisions/values — negatives included — checked bit-exactly against
+a numpy reference for every op the codegen emits: wrapping adds, masked
+(predicated) adds, signed multiplies, constant multiplies, the fused MACs,
+and the lane-tree reduction.  Each case runs the vectorized fast path and
+the literal per-bit ``pe_step`` path differentially: same bits, same cycles.
+
+Runs under real ``hypothesis`` when installed, else the deterministic replay
+shim (tests/_hypothesis_stub.py).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: deterministic replay shim
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.cram import Cram
+from repro.core import timing
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def _wrap(v: np.ndarray, prec: int) -> np.ndarray:
+    """Two's-complement wrap of an int64 vector to `prec` bits."""
+    m = 1 << prec
+    return (v % m + m) % m - ((((v % m + m) % m) >> (prec - 1)) << prec)
+
+
+def _pair(prec, seed, n=256):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (prec - 1)), 2 ** (prec - 1)
+    return rng.integers(lo, hi, n), rng.integers(lo, hi, n)
+
+
+@SET
+@given(st.integers(2, 12), st.integers(0, 10**6))
+def test_add_overflow_wraps_like_twos_complement(prec, seed):
+    """pd == prec (no headroom): the sum wraps mod 2^prec, matching numpy."""
+    a, b = _pair(prec, seed)
+    for exact in (False, True):
+        c = Cram(exact_bits=exact)
+        c.write(0, a, prec)
+        c.write(20, b, prec)
+        cyc = c.add(40, 0, 20, prec, prec, prec)  # deliberately no carry room
+        assert cyc == prec
+        np.testing.assert_array_equal(c.read(40, prec), _wrap(a + b, prec))
+
+
+@SET
+@given(st.integers(2, 10), st.integers(0, 10**6))
+def test_masked_add_only_touches_predicated_lanes(prec, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _pair(prec, seed)
+    old = rng.integers(-(2 ** prec), 2 ** prec, 256)
+    mask = rng.integers(0, 2, 256).astype(np.uint8)
+    want = np.where(mask.astype(bool), _wrap(a + b, prec + 1), _wrap(old, prec + 1))
+    for exact in (False, True):
+        c = Cram(exact_bits=exact)
+        c.write(0, a, prec)
+        c.write(20, b, prec)
+        c.write(40, old, prec + 1)
+        c.mask = mask.copy()
+        c.add(40, 0, 20, prec, prec, prec + 1, pred="mask")
+        np.testing.assert_array_equal(c.read(40, prec + 1), want)
+
+
+@SET
+@given(st.integers(2, 8), st.integers(2, 8), st.integers(0, 10**6))
+def test_mixed_precision_mul_truncates_exactly(pa, pb, seed):
+    """pd < pa+pb: the product wraps mod 2^pd on both paths, same cycles."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-(2 ** (pa - 1)), 2 ** (pa - 1), 256)
+    b = rng.integers(-(2 ** (pb - 1)), 2 ** (pb - 1), 256)
+    pd = max(pa, pb) + 1  # deliberately narrower than the full product
+    cycles = {}
+    for exact in (False, True):
+        c = Cram(exact_bits=exact)
+        c.write(0, a, pa)
+        c.write(16, b, pb)
+        cycles[exact] = c.mul(32, 0, 16, pa, pb, pd)
+        np.testing.assert_array_equal(c.read(32, pd), _wrap(a * b, pd))
+    assert cycles[False] == cycles[True]
+
+
+@SET
+@given(st.integers(-255, 255), st.integers(0, 10**6))
+def test_mul_const_negative_and_cycle_parity(const, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, 256)
+    cycles = {}
+    for exact in (False, True):
+        c = Cram(exact_bits=exact)
+        c.write(0, a, 8)
+        cycles[exact] = c.mul_const(16, 0, const, 8, 18)
+        np.testing.assert_array_equal(c.read(16, 18), a * const)
+    assert cycles[False] == cycles[True]
+    z = bin(abs(const)).count("1")
+    assert cycles[False] <= z * 20 + 18  # zero-bit skipping bound
+
+
+@SET
+@given(st.integers(2, 8), st.integers(0, 10**6))
+def test_fused_mac_accumulates_and_wraps(prec, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _pair(prec, seed)
+    acc0 = rng.integers(-(2 ** (2 * prec)), 2 ** (2 * prec), 256)
+    pd = 2 * prec + 1
+    c = Cram()
+    c.write(0, a, prec)
+    c.write(16, b, prec)
+    c.write(32, acc0, pd)
+    cyc = c.mac(32, 0, 16, prec, prec, pd)
+    np.testing.assert_array_equal(c.read(32, pd), _wrap(acc0 + a * b, pd))
+    assert cyc == timing.cycles_mac(prec, prec, pd)
+    c.mac_const(32, 0, -5, prec, pd)
+    np.testing.assert_array_equal(
+        c.read(32, pd), _wrap(acc0 + a * b + a * -5, pd)
+    )
+
+
+@SET
+@given(st.integers(0, 10**6))
+def test_sub_and_carry_chain_differential(seed):
+    """sub + the cen/cst bit-sliced carry chain agree across both paths,
+    including the stored carry latch."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, 256)
+    b = rng.integers(0, 256, 256)
+    sa, sb = _wrap(a, 8), _wrap(b, 8)  # operands read as signed 8-bit
+    for exact in (False, True):
+        c = Cram(exact_bits=exact)
+        c.write(0, a, 8)
+        c.write(8, b, 8)
+        c.sub(16, 0, 8, 8, 8, 9)
+        np.testing.assert_array_equal(c.read(16, 9), sa - sb)
+        # chained 4-bit waves == one 8-bit add
+        c.add(32, 0, 8, 4, 4, 4, cen=False, cst=True)
+        lo_carry = c.carry.copy()
+        c.add(36, 4, 12, 4, 4, 4, cen=True, cst=True)
+        lo = c.read(32, 4, signed=False)
+        hi = c.read(36, 4, signed=False)
+        np.testing.assert_array_equal(lo + (hi << 4), (a + b) & 0xFF)
+        if not exact:
+            saved = lo_carry
+        else:
+            np.testing.assert_array_equal(saved, lo_carry)
+
+
+@pytest.mark.parametrize("size", [4, 16, 64, 256])
+def test_reduce_intra_differential(size):
+    rng = np.random.default_rng(size)
+    v = rng.integers(-128, 128, 256)
+    reads = {}
+    for exact in (False, True):
+        c = Cram(exact_bits=exact)
+        c.write(0, v, 8)
+        cyc = c.reduce_intra(16, 0, 8, size)
+        pf = 8 + int(np.log2(size))
+        reads[exact] = (c.read(16, pf), cyc, c.carry.copy())
+    # lane 0 holds the sum of the first `size` lanes (and group leaders too)
+    assert reads[False][0][0] == v[:size].sum()
+    np.testing.assert_array_equal(reads[False][0], reads[True][0])
+    assert reads[False][1] == reads[True][1]
+    np.testing.assert_array_equal(reads[False][2], reads[True][2])
+
+
+@SET
+@given(st.integers(2, 10), st.integers(0, 10**6))
+def test_predicated_copy_differential(prec, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-(2 ** (prec - 1)), 2 ** (prec - 1), 256)
+    old = rng.integers(-(2 ** (prec - 1)), 2 ** (prec - 1), 256)
+    mask = rng.integers(0, 2, 256).astype(np.uint8)
+    for exact in (False, True):
+        c = Cram(exact_bits=exact)
+        c.write(0, a, prec)
+        c.write(20, old, prec)
+        c.mask = mask.copy()
+        c.copy(20, 0, prec, pred="mask")
+        np.testing.assert_array_equal(
+            c.read(20, prec), np.where(mask.astype(bool), a, old)
+        )

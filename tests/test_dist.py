@@ -98,6 +98,7 @@ MULTIDEV_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_collectives_multidevice_subprocess():
     env = dict(os.environ, PYTHONPATH="src")
     r = subprocess.run(
@@ -140,6 +141,7 @@ DRYRUN_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_tiny_dryrun_subprocess():
     env = dict(os.environ, PYTHONPATH="src")
     r = subprocess.run(

@@ -60,6 +60,7 @@ def test_htree_reduce_matches_tree_oracle(dtype, n, d):
 
 
 @pytest.mark.parametrize("b,t,w", [(1, 256, 512), (2, 512, 1024), (3, 128, 512)])
+@pytest.mark.slow
 def test_rglru_scan_kernel(b, t, w):
     ks = jax.random.split(jax.random.key(b * t), 3)
     a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, t, w)))

@@ -28,6 +28,7 @@ def _dense_reference(p, x, cfg):
     return out.reshape(b, s, d)
 
 
+@pytest.mark.slow
 def test_moe_matches_dense_reference_with_ample_capacity():
     cfg = dataclasses.replace(
         reduced_config(get_config("dbrx-132b")), moe_capacity_factor=8.0

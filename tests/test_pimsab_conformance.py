@@ -1,0 +1,259 @@
+"""Differential conformance: the whole DSL→compiler→ISA→simulator stack vs
+the JAX oracles, through the public kernel API.
+
+``use_backend("pimsab")`` lowers every registry kernel onto the architecture
+model and executes it bit-serially on ``Simulator(functional=True)``.  These
+tests enumerate the registry (a newly registered kernel fails loudly until it
+gets a case), require integer paths to be **bit-exact** (including int32
+wraparound, which the CRAM accumulator and the oracle must agree on), float
+paths to be allclose at the backend's fixed-point precision, and every call
+to attach a populated :class:`SimReport`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.machine import PimsabConfig
+from repro.kernels import api, ref
+from repro.kernels import pimsab_backend as pb
+from repro.kernels.api import SlicedTensor
+
+
+def _ints(shape, lo, hi, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, shape), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# registry enumeration: every kernel must conform
+# ---------------------------------------------------------------------------
+
+
+def _case(name):
+    """(run, oracle, tolerance) per registered kernel; None tolerance means
+    bit-exact.  Shapes are small — functional simulation is bit-serial."""
+    if name == "bitslice_matmul":
+        x = SlicedTensor.from_int(_ints((16, 32), -100, 100, seed=0), 8)
+        w = SlicedTensor.from_int(_ints((32, 8), -100, 100, seed=1), 8)
+        return (
+            lambda: api.matmul(x, w),
+            lambda: ref.int_matmul_wide_ref(x.to_int(), w.to_int(), 8, 8),
+            None,
+        )
+    if name == "htree_reduce":
+        x = jax.random.normal(jax.random.key(2), (16, 32), jnp.float32)
+        return lambda: api.htree_reduce(x), lambda: ref.htree_reduce_ref(x), 5e-3
+    if name == "rglru_scan":
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.key(3), (2, 8, 24)))
+        b = jax.random.normal(jax.random.key(4), (2, 8, 24))
+        h0 = jax.random.normal(jax.random.key(5), (2, 24))
+        return (
+            lambda: api.rglru_scan(a, b, h0),
+            lambda: ref.rglru_scan_ref(a, b, h0),
+            5e-2,
+        )
+    if name == "ewise_add":
+        x, y = _ints((8, 32), -500, 500, seed=6), _ints((8, 32), -500, 500, seed=7)
+        return lambda: api.ewise_add(x, y), lambda: x + y, None
+    if name == "relu":
+        x = _ints((8, 32), -500, 500, seed=8)
+        return lambda: api.relu(x), lambda: jnp.maximum(x, 0), None
+    raise KeyError(f"registered kernel {name!r} has no conformance case — add one")
+
+
+@pytest.mark.parametrize("name", sorted(api.registered_kernels()))
+def test_registry_kernel_conforms_on_pimsab(name):
+    run, oracle, tol = _case(name)
+    with api.use_backend("pimsab"):
+        got = run()
+    want = oracle()
+    if tol is None:
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    else:
+        np.testing.assert_allclose(
+            np.asarray(want, np.float32), np.asarray(got, np.float32), atol=tol, rtol=tol
+        )
+    rep = api.last_sim_report()
+    assert rep is not None and rep.kernel == name
+    assert rep.total_cycles > 0 and rep.energy_j > 0
+    assert rep.instrs > 0 and rep.functional_instrs > 0
+    assert set(rep.cycles) == {"compute", "dram", "noc", "htree", "sync"}
+    assert rep.mapping["workload"].startswith(name)
+
+
+def test_every_registered_kernel_has_a_pimsab_lowering():
+    for name, kd in api.registered_kernels().items():
+        assert kd.pimsab is not None, f"kernel {name!r} lacks a pimsab lowering"
+
+
+# ---------------------------------------------------------------------------
+# bitslice_matmul: precision / skip / wraparound corners
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_multi_slice_with_static_skip_bit_exact():
+    """int8 × int16 where the hi weight slice is statically dead: the skip
+    pairs must not change the simulated result (they contribute zero)."""
+    x = _ints((8, 16), -100, 100, seed=0)
+    w = _ints((16, 8), -50, 50, seed=1)
+    xs = SlicedTensor.from_int(x, 8)
+    ws = SlicedTensor.from_int(w, 16)
+    assert ws.zero_slices == (1,)
+    assert api.skip_pairs(xs, ws) == ((0, 1),)
+    with api.use_backend("pimsab"):
+        got = api.matmul(xs, ws)
+    np.testing.assert_array_equal(
+        np.asarray(ref.int_matmul_wide_ref(x, w, 8, 16)), np.asarray(got)
+    )
+
+
+def test_matmul_int32_wraparound_matches_oracle():
+    """The CRAM accumulator wraps mod 2^32 exactly like the oracle's int32
+    (modular arithmetic is associative — clamped adaptive precision is safe)."""
+    x = _ints((4, 64), -30000, 30000, seed=2)
+    w = _ints((64, 4), -30000, 30000, seed=3)
+    want = ref.int_matmul_wide_ref(x, w, 16, 16)  # overflows int32 by design
+    with api.use_backend("pimsab"):
+        got = api.matmul(SlicedTensor.from_int(x, 16), SlicedTensor.from_int(w, 16))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_matmul_scaled_path_dequantizes():
+    x = SlicedTensor.from_int(_ints((8, 16), -100, 100, seed=4), 8)
+    w = SlicedTensor.from_int(
+        _ints((16, 8), -100, 100, seed=5), 8, scale=jnp.full((8,), 0.5, jnp.float32)
+    )
+    with api.use_backend("xla"):
+        want = api.matmul(x, w)
+    with api.use_backend("pimsab"):
+        got = api.matmul(x, w)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=1e-6)
+
+
+def test_quantized_matmul_end_to_end_on_pimsab():
+    """The full PIMSAB path: dynamic act quant → slices → simulator gemm →
+    dequant, allclose to the float reference."""
+    ks = jax.random.split(jax.random.key(9), 2)
+    x = jax.random.normal(ks[0], (8, 64), jnp.float32)
+    w = jax.random.normal(ks[1], (64, 16), jnp.float32) * 0.1
+    qmax = 127
+    w_scale = jnp.max(jnp.abs(w), axis=0) / qmax
+    w_q = jnp.round(w / w_scale[None, :]).astype(jnp.int32)
+    with api.use_backend("pimsab"):
+        got = api.quantized_matmul(x, w_q, w_scale, api.PrecisionSpec.int8)
+    want = x @ (w_q * w_scale[None, :])
+    rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+    assert rel < 0.05, rel
+
+
+# ---------------------------------------------------------------------------
+# reduce paths: intra-CRAM tree and cross-CRAM H-tree
+# ---------------------------------------------------------------------------
+
+
+def test_lane_split_reduction_uses_intra_tree():
+    """A K=512 gemv splits the reduction across lanes; the emitted program
+    must fold through ReduceIntra and still be bit-exact."""
+    x = _ints((2, 512), -20, 20, seed=10)
+    w = _ints((512, 1), -20, 20, seed=11)
+    with api.use_backend("pimsab"):
+        got = api.matmul(SlicedTensor.from_int(x, 8), SlicedTensor.from_int(w, 8))
+    rep = api.last_sim_report()
+    np.testing.assert_array_equal(
+        np.asarray(ref.int_matmul_wide_ref(x, w, 8, 8)), np.asarray(got)
+    )
+    assert rep.mapping["reduce_split"] > 1
+
+
+def test_full_lane_split_reduction_crosses_crams_via_htree():
+    """With 2 CRAMs/tile and a single K=512 output, the distribution splits
+    the reduction across *all* lanes of the tile: ReduceIntra folds each CRAM
+    and ReduceHTree folds across CRAMs — functionally bit-exact."""
+    from repro.core.compiler.codegen import compile_workload
+    from repro.core.compiler.tensor_dsl import Loop, Ref, Workload
+
+    cfg = PimsabConfig(mesh_cols=1, mesh_rows=1, crams_per_tile=2)
+    x = _ints((1, 512), -20, 20, seed=12)
+    w = _ints((512, 1), -20, 20, seed=13)
+    with pb.functional_config(cfg):
+        with api.use_backend("pimsab"):
+            got = api.matmul(SlicedTensor.from_int(x, 8), SlicedTensor.from_int(w, 8))
+    np.testing.assert_array_equal(
+        np.asarray(ref.int_matmul_wide_ref(x, w, 8, 8)), np.asarray(got)
+    )
+    # the functional program really took the cross-CRAM path
+    wl = Workload(
+        "g", (Loop("x", 1, "data"), Loop("y", 1, "data"), Loop("k", 512, "reduce")),
+        Ref("c", ("x", "y"), prec=32),
+        (Ref("a", ("x", "k"), prec=9), Ref("b", ("k", "y"), prec=9)),
+        "mac", 32,
+    )
+    cp = compile_workload(wl, cfg)
+    kinds = [type(i).__name__ for i in cp.program]
+    assert cp.mapping.reduce_split == 512
+    assert "ReduceHTree" in kinds and "ReduceIntra" in kinds
+
+
+def test_htree_reduce_integer_input_bit_exact():
+    x = _ints((32, 16), -1000, 1000, seed=14)
+    with api.use_backend("pimsab"):
+        got = api.htree_reduce(x)
+    np.testing.assert_array_equal(np.asarray(x).sum(axis=0), np.asarray(got))
+    # the reduction rides the constant-operand (·1) RF path
+    assert api.last_sim_report().instr_mix.get("MacConst", 0) > 0
+    assert api.last_sim_report().instr_mix.get("RfLoad", 0) == 1
+
+
+# ---------------------------------------------------------------------------
+# float kernels: fixed-point error stays bounded
+# ---------------------------------------------------------------------------
+
+
+def test_float_ewise_ops_allclose():
+    x = jax.random.normal(jax.random.key(20), (8, 32), jnp.float32)
+    y = jax.random.normal(jax.random.key(21), (8, 32), jnp.float32)
+    with api.use_backend("pimsab"):
+        ga = api.ewise_add(x, y)
+        gr = api.relu(x)
+    np.testing.assert_allclose(np.asarray(x + y), np.asarray(ga), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(jnp.maximum(x, 0)), np.asarray(gr), atol=1e-3)
+
+
+def test_rglru_longer_sequence_error_bounded():
+    """Truncation error is contracted by the gate (<1): it must not blow up
+    with sequence length."""
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(22), (1, 32, 16)))
+    b = jax.random.normal(jax.random.key(23), (1, 32, 16))
+    h0 = jax.random.normal(jax.random.key(24), (1, 16))
+    with api.use_backend("pimsab"):
+        got = api.rglru_scan(a, b, h0)
+    want = ref.rglru_scan_ref(a, b, h0)
+    scale = float(jnp.abs(want).max())
+    assert float(jnp.abs(got - want).max()) < 0.05 * max(scale, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# backend mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_pimsab_backend_rejects_tracers():
+    x = SlicedTensor.from_int(_ints((8, 8), -10, 10), 8)
+    w = SlicedTensor.from_int(_ints((8, 8), -10, 10, seed=1), 8)
+    with api.use_backend("pimsab"):
+        with pytest.raises(ValueError, match="concrete operands"):
+            jax.jit(api.matmul)(x, w)
+
+
+def test_sim_report_is_per_thread_and_refreshed():
+    x, y = _ints((4, 8), -5, 5, seed=30), _ints((4, 8), -5, 5, seed=31)
+    with api.use_backend("pimsab"):
+        api.ewise_add(x, y)
+        r1 = api.last_sim_report()
+        api.relu(x)
+        r2 = api.last_sim_report()
+    assert r1.kernel == "ewise_add" and r2.kernel == "relu"
+    j = r2.to_json()
+    assert j["kernel"] == "relu" and j["total_cycles"] > 0
+    assert isinstance(j["instr_mix"], dict) and j["mapping"]["tiles_used"] >= 1

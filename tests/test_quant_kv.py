@@ -4,6 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduced_config
 from repro.dist.sharding import cache_entry_spec, MeshRules
@@ -14,6 +15,7 @@ F0 = RunFlags(attn_chunk=8, flash_threshold=64, quant_kv=False)
 F1 = dataclasses.replace(F0, quant_kv=True)
 
 
+@pytest.mark.slow
 def test_int8_kv_decode_close_to_bf16():
     cfg = reduced_config(get_config("minicpm-2b"))
     params = init_params(jax.random.key(0), cfg)

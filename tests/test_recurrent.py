@@ -69,6 +69,7 @@ def test_mlstm_decode_continues_chunkwise_state():
         np.testing.assert_allclose(np.asarray(yd), ref[:, t], atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_rglru_scan_equals_stepwise():
     cfg = reduced_config(get_config("recurrentgemma-2b"))
     p = rglru_block_init(jax.random.key(2), cfg, jnp.float32)
@@ -85,6 +86,7 @@ def test_rglru_scan_equals_stepwise():
     )
 
 
+@pytest.mark.slow
 def test_slstm_decode_continuation():
     cfg = reduced_config(get_config("xlstm-1.3b"))
     p = slstm_block_init(jax.random.key(4), cfg, jnp.float32)

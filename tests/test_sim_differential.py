@@ -1,0 +1,123 @@
+"""Simulator differential tests (satellite of the pimsab backend PR).
+
+1. Timing mode and functional mode must agree on instruction counts and
+   produce identical ``SimResult`` breakdown keys (and identical cycle
+   totals — the functional data plane must never perturb the analytic
+   model) for the *same* compiled program.
+2. A golden-file regression pins the Fig-11-style cycle breakdown of a
+   small fixed GEMM at full chip scale: any compiler/timing change that
+   moves these numbers must consciously regenerate the golden
+   (tests/golden/gemm_fig11_breakdown.json).
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from benchmarks import workloads
+from repro.core import isa
+from repro.core.compiler.codegen import compile_workload
+from repro.core.machine import PIMSAB, PimsabConfig
+from repro.core.simulator import Simulator
+
+GOLDEN = Path(__file__).parent / "golden" / "gemm_fig11_breakdown.json"
+
+SMALL_CFG = PimsabConfig(mesh_cols=2, mesh_rows=2, crams_per_tile=1)
+
+
+def _gemm():
+    return workloads.gemm(m=4096, n=32, k=512, prec=8, acc=32)
+
+
+SMALL_WORKLOADS = [
+    lambda: workloads.gemm(m=256, n=8, k=64, prec=8, acc=32),
+    lambda: workloads.gemv(m=512, k=64),
+    lambda: workloads.vecadd(n=4096),
+    lambda: workloads.fir(n=2048, taps=4),
+]
+
+
+@pytest.mark.parametrize("mk", SMALL_WORKLOADS)
+def test_timing_and_functional_modes_agree(mk):
+    """Same program, both modes: identical instr counts, cycle categories,
+    per-category cycle totals, and energy — functional execution is a pure
+    data-plane overlay on the analytic model."""
+    cp = compile_workload(mk(), SMALL_CFG)
+    t = Simulator(SMALL_CFG, functional=False).run(cp.program)
+    f = Simulator(SMALL_CFG, functional=True).run(cp.program)
+    assert t.instrs == f.instrs == len(cp.program)
+    assert set(t.breakdown()) == set(f.breakdown())
+    assert t.cycles == f.cycles
+    assert t.total_cycles == f.total_cycles
+    # RfLoad is the only instruction whose *timing* consults machine state
+    # (the RF constant's popcount) — both modes load the RF identically
+    np.testing.assert_allclose(t.energy.total_j, f.energy.total_j)
+
+
+def test_functional_default_config_is_full_machine():
+    """Simulator() with no config simulates the paper's 120-tile chip."""
+    sim = Simulator(functional=True)
+    assert sim.cfg == PIMSAB
+    rng = np.random.default_rng(0)
+    a = rng.integers(-100, 100, 256)
+    sim.cram(0, 0).write(0, a, 8)
+    sim.run([
+        isa.RfLoad(tiles=(0,), reg=3, value=7),
+        isa.MulConst(tiles=(0,), dst=16, prec_dst=16, src1=0, prec1=8, reg=3),
+    ])
+    assert (sim.cram(0, 0).read(16, 16) == a * 7).all()
+
+
+def test_exact_bits_simulator_matches_vectorized():
+    """Whole-program differential: the per-bit pe_step machine and the
+    vectorized machine produce identical CRAM state and identical cycle
+    accounting for a compiled gemv."""
+    w = workloads.gemv(m=64, k=16, prec=4)
+    cp = compile_workload(w, SMALL_CFG)
+    sims = {}
+    for exact in (False, True):
+        sim = Simulator(SMALL_CFG, functional=True, exact_bits=exact)
+        rng = np.random.default_rng(0)
+        for t in range(cp.mapping.tiles_used):
+            sim.cram(t, 0).write(0, rng.integers(-8, 8, 256), 4)
+        sim.run([i for i in cp.program if not isinstance(i, (isa.DramLoad, isa.DramStore))])
+        sims[exact] = sim
+    assert sims[False].res.cycles == sims[True].res.cycles
+    for key, cram in sims[False].crams.items():
+        np.testing.assert_array_equal(cram.bits, sims[True].crams[key].bits)
+
+
+def test_golden_gemm_fig11_breakdown():
+    """Pin the full-scale cycle breakdown of the fixed GEMM (Fig. 11 shape)."""
+    golden = json.loads(GOLDEN.read_text())
+    cp = compile_workload(_gemm(), PIMSAB)
+    res = Simulator(PIMSAB).run(cp.program)
+    assert res.instrs == golden["instrs"]
+    assert res.total_cycles == pytest.approx(golden["total_cycles"], rel=1e-9)
+    for cat, cycles in golden["cycles"].items():
+        assert res.cycles[cat] == pytest.approx(cycles, rel=1e-9), cat
+    for cat, frac in golden["breakdown"].items():
+        assert res.breakdown()[cat] == pytest.approx(frac, abs=1e-5), cat
+    m = cp.mapping
+    assert (m.tiles_used, m.reduce_split, m.serial_iters, m.out_prec) == (
+        golden["mapping"]["tiles_used"],
+        golden["mapping"]["reduce_split"],
+        golden["mapping"]["serial_iters"],
+        golden["mapping"]["out_prec"],
+    )
+
+
+def test_dram_emission_matches_analytic_model_with_tags():
+    """Tagged, functionally-executable programs still move exactly the
+    analytic DRAM traffic (the PR-1 invariant survives the data plane)."""
+    for mk in (workloads.gemv, workloads.vecadd):
+        cp = compile_workload(mk(), PIMSAB)
+        emitted = sum(
+            i.bits for i in cp.program if isinstance(i, (isa.DramLoad, isa.DramStore))
+        )
+        assert emitted == pytest.approx(cp.mapping.dram_bits, rel=0.05)
+        for i in cp.program:
+            if isinstance(i, (isa.DramLoad, isa.DramStore)):
+                assert i.tag, f"untagged DRAM instruction: {i}"

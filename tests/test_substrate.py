@@ -110,6 +110,7 @@ def test_restart_policy_flow():
 # --- train resume bit-exactness --------------------------------------------
 
 
+@pytest.mark.slow
 def test_train_resume_matches_uninterrupted(tmp_path):
     cfg = reduced_config(get_config("qwen2-0.5b"))
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
