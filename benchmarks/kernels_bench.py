@@ -14,16 +14,24 @@ simulator, and attaches *modeled* full-chip cycles/energy via
 ``api.last_sim_report()`` — so ``BENCH_kernels.json`` tracks the architecture
 model's trajectory next to the host numbers.
 
+A **program-mode** section runs the `matmul → ewise_add → relu` chain through
+``api.trace``/``api.compile`` on the pimsab backend and records the
+fused-vs-eager DRAM-cycle win (the elided store/load pairs) plus the compile
+cache behaviour — pinning the Program API's headline number as an artifact.
+
 ``run()`` returns the row list for benchmarks/run.py; ``main()`` also writes
 ``BENCH_kernels.json`` at the repo root so future PRs have a baseline to
-compare against.
+compare against.  ``main(check=True)`` (CLI: ``--check``) first diffs the
+fresh *modeled* cycles against the committed baseline and fails on a >5%
+regression — wall-clock numbers are machine-dependent and are not gated.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -223,14 +231,128 @@ def run() -> List[Dict]:
     return rows
 
 
-def main() -> List[Dict]:
-    rows = run()
-    OUT_PATH.write_text(json.dumps({"kernels": rows}, indent=2) + "\n")
-    for r in rows:
+def program_mode() -> Dict:
+    """The traced `matmul → ewise_add → relu` chain on the pimsab backend:
+    fused DRAM cycles vs the eager per-kernel sum, bit-exactness, and the
+    compile-cache hit on the second identical compile."""
+    rng = np.random.default_rng(_SEED)
+    # K small enough that the lane-contiguous (reduce_split=1) producer
+    # layout still fits one k-chunk — the regime where residency wins; the
+    # planner's cost model declines the fusion at shapes where it would not
+    x = jnp.asarray(rng.integers(-100, 100, (16, 8)), jnp.int32)
+    w = jnp.asarray(rng.integers(-100, 100, (8, 16)), jnp.int32)
+    y = jnp.asarray(rng.integers(-100, 100, (16, 16)), jnp.int32)
+    xs = api.SlicedTensor.from_int(x, 8)
+    ws = api.SlicedTensor.from_int(w, 8)
+
+    def chain(xs, ws, y):
+        return api.relu(api.ewise_add(api.matmul(xs, ws), y))
+
+    eager_reports = []
+    with api.use_backend("pimsab"):
+        acc = api.matmul(xs, ws)
+        eager_reports.append(api.last_sim_report())
+        s = api.ewise_add(acc, y)
+        eager_reports.append(api.last_sim_report())
+        eager = api.relu(s)
+        eager_reports.append(api.last_sim_report())
+    eager_dram = sum(r.cycles["dram"] for r in eager_reports)
+    eager_total = sum(r.total_cycles for r in eager_reports)
+
+    traced = api.trace(chain, name="bench_matmul_add_relu")
+    before = api.compile_cache_info()
+    with api.use_backend("pimsab"):
+        got = traced(xs, ws, y)
+        rep = api.last_sim_report()
+        api.compile(traced.program_for(xs, ws, y))  # identical signature
+    after = api.compile_cache_info()
+    return {
+        "chain": list(rep.kernels),
+        "bit_exact_vs_eager": bool((np.asarray(got) == np.asarray(eager)).all()),
+        "modeled_cycles": rep.total_cycles,
+        "dram_cycles": rep.cycles["dram"],
+        "eager_dram_cycles_sum": eager_dram,
+        "eager_modeled_cycles_sum": eager_total,
+        "dram_cycle_win": eager_dram - rep.cycles["dram"],
+        "elided_dram_bits": rep.elided_dram_bits,
+        "resident_edges": list(rep.resident_edges),
+        "per_kernel_cycles": {
+            p["kernel"]: p["total_cycles"] for p in rep.per_kernel
+        },
+        "compile_cache": {
+            "second_compile_was_hit": after.hits > before.hits,
+            "misses_added": after.misses - before.misses,
+        },
+    }
+
+
+def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> List[str]:
+    """Correctness flags must hold and modeled cycles must not regress by
+    more than ``tol`` vs the committed baseline (wall-clock fields are
+    ignored — they are machine noise)."""
+    failures: List[str] = []
+    for row in result["kernels"]:
+        if not row["interpret_matches_oracle"]:
+            failures.append(f"{row['kernel']}: interpret mode no longer matches oracle")
+        if not row["pimsab"]["matches_oracle"]:
+            failures.append(f"{row['kernel']}: pimsab backend no longer matches oracle")
+    if not result["program"]["bit_exact_vs_eager"]:
+        failures.append("program: traced chain no longer bit-exact vs eager pimsab")
+    if not result["program"]["compile_cache"]["second_compile_was_hit"]:
+        failures.append("program: second identical compile was not a cache hit")
+
+    def gate(label: str, new: Optional[float], old: Optional[float]) -> None:
+        if not old or new is None:
+            return
+        rel = (new - old) / old
+        if rel > tol:
+            failures.append(f"{label}: modeled cycles {old} -> {new} (+{rel:.1%} > {tol:.0%})")
+        elif abs(rel) > 1e-12:
+            print(f"  note: {label} modeled cycles {old} -> {new} ({rel:+.1%})")
+
+    base_rows = {r["kernel"]: r for r in baseline.get("kernels", [])}
+    for row in result["kernels"]:
+        old = base_rows.get(row["kernel"], {}).get("pimsab", {}).get("modeled_cycles")
+        gate(row["kernel"], row["pimsab"]["modeled_cycles"], old)
+    gate(
+        "program:modeled",
+        result["program"]["modeled_cycles"],
+        baseline.get("program", {}).get("modeled_cycles"),
+    )
+    gate(
+        "program:dram",
+        result["program"]["dram_cycles"],
+        baseline.get("program", {}).get("dram_cycles"),
+    )
+    return failures
+
+
+def main(check: bool = False) -> Dict:
+    result = {"kernels": run(), "program": program_mode()}
+    if check:
+        if not OUT_PATH.exists():
+            raise SystemExit(f"--check: no committed baseline at {OUT_PATH}")
+        baseline = json.loads(OUT_PATH.read_text())
+        failures = check_against_baseline(result, baseline)
+        if failures:
+            print("kernels_bench --check: FAIL (modeled-cycle regression >5%)")
+            for f in failures:
+                print(" -", f)
+            raise SystemExit(1)
+        print("kernels_bench --check: OK (modeled cycles within 5% of baseline)")
+    OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+    for r in result["kernels"]:
         print(r)
+    print("program:", result["program"])
     print(f"wrote {OUT_PATH}")
-    return rows
+    return result
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--check", action="store_true",
+        help="diff modeled cycles against the committed BENCH_kernels.json "
+        "baseline and exit 1 on a >5%% regression before overwriting it",
+    )
+    main(check=ap.parse_args().check)

@@ -74,16 +74,19 @@ def main() -> None:
         lambda rows: f"cells={len(rows)}_ok={sum(1 for r in rows if r['status']=='ok')}",
     )
     # registry-driven kernel micro-bench (also refreshes BENCH_kernels.json,
-    # the perf-trajectory baseline future PRs compare against)
+    # the perf-trajectory baseline future PRs compare against; the "program"
+    # key pins the traced-chain fused-vs-eager DRAM-cycle win)
     section(
         "kernels_api", kernels_bench.main,
-        lambda rows: "_".join(f"{r['kernel']}={r['us_per_call']:.0f}us" for r in rows),
+        lambda res: "_".join(
+            f"{r['kernel']}={r['us_per_call']:.0f}us" for r in res["kernels"]
+        ) + f"_program_dram_win={res['program']['dram_cycle_win']:.0f}cyc",
     )
 
     print("\n=== details ===")
     for name, rows in details:
         print(f"\n--- {name} ---")
-        for r in rows:
+        for r in (rows["kernels"] + [rows["program"]] if isinstance(rows, dict) else rows):
             print(r)
     if failures:
         sys.exit(1)

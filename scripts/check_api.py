@@ -1,14 +1,16 @@
 #!/usr/bin/env python
 """API smoke check: import every public symbol and reject deprecated usage.
 
-Two gates (both run in CI):
+Three gates (all run in CI):
 
-1. every public symbol of the unified kernel API and its consumers imports
-   cleanly (catches circular imports / missing exports early);
-2. no call site inside ``src/`` or ``benchmarks/`` passes the deprecated
+1. every public symbol of the unified kernel API (incl. the Program API) and
+   its consumers imports cleanly (catches circular imports / missing exports
+   early);
+2. no call site inside ``src/`` or ``benchmarks/`` passes the removed
    ``impl=`` kwarg — kernel dispatch must go through the backend registry
-   (``repro.kernels.api.use_backend``).  Keyword *definitions* in the
-   compatibility shims are allowed; keyword *arguments* are not.
+   (``repro.kernels.api.use_backend``);
+3. nothing anywhere in the repo imports the removed ``repro.kernels.ops``
+   shim module.
 
 Exit code 0 on success, 1 with a report on failure.
 """
@@ -27,7 +29,7 @@ sys.path.insert(0, str(REPO))
 PUBLIC_MODULES = [
     "repro.kernels",
     "repro.kernels.api",
-    "repro.kernels.ops",
+    "repro.kernels.program",
     "repro.kernels.ref",
     "repro.kernels.ewise",
     "repro.kernels.pimsab_backend",
@@ -57,6 +59,17 @@ API_SYMBOLS = [
     "ewise_add",
     "relu",
     "last_sim_report",
+    "zero_slice_pairs",
+    # Program API
+    "trace",
+    "compile",
+    "Program",
+    "Executor",
+    "TracedFunction",
+    "TraceError",
+    "compile_cache_info",
+    "clear_compile_cache",
+    "PimsabTracerError",
 ]
 
 
@@ -112,8 +125,45 @@ def check_no_impl_kwarg() -> list[str]:
     return errors
 
 
+class _OpsImportFinder(ast.NodeVisitor):
+    """Flags any import of the removed repro.kernels.ops shim module."""
+
+    def __init__(self) -> None:
+        self.hits: list[int] = []
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if alias.name == "repro.kernels.ops" or alias.name.startswith("repro.kernels.ops."):
+                self.hits.append(node.lineno)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        if mod == "repro.kernels.ops" or mod.startswith("repro.kernels.ops."):
+            self.hits.append(node.lineno)
+        elif mod == "repro.kernels" and any(a.name == "ops" for a in node.names):
+            self.hits.append(node.lineno)
+        self.generic_visit(node)
+
+
+def check_no_ops_import() -> list[str]:
+    errors = []
+    for root in (REPO / "src", REPO / "benchmarks", REPO / "examples",
+                 REPO / "tests", REPO / "scripts"):
+        for path in sorted(root.rglob("*.py")):
+            tree = ast.parse(path.read_text(), filename=str(path))
+            finder = _OpsImportFinder()
+            finder.visit(tree)
+            for line in finder.hits:
+                errors.append(
+                    f"{path.relative_to(REPO)}:{line}: repro.kernels.ops was "
+                    "removed — import repro.kernels.api instead"
+                )
+    return errors
+
+
 def main() -> int:
-    errors = check_imports() + check_no_impl_kwarg()
+    errors = check_imports() + check_no_impl_kwarg() + check_no_ops_import()
     if errors:
         print("check_api: FAIL")
         for e in errors:
@@ -121,7 +171,8 @@ def main() -> int:
         return 1
     print(
         f"check_api: OK ({len(PUBLIC_MODULES)} modules, "
-        f"{len(API_SYMBOLS)} api symbols, no impl= call sites)"
+        f"{len(API_SYMBOLS)} api symbols, no impl= call sites, "
+        "no repro.kernels.ops imports)"
     )
     return 0
 

@@ -8,6 +8,13 @@
 * fragmented allocation — operands may straddle non-contiguous free wordline
   ranges (Fig. 8b); the allocator is first-fit over a free set and splits
   buffers when no contiguous range exists.
+
+Graph programs add a fourth, *live-range* dimension (:func:`allocate_graph`):
+buffers live only while their op executes — except intermediates that stay
+CRAM-resident for a downstream consumer, whose wordlines are reserved from
+the producing op through the consuming op.  A consumer's chained input is
+*pinned* to the producer's output range (same wordlines, no new space), which
+is what lets codegen elide the DRAM store/load pair at the boundary.
 """
 from __future__ import annotations
 
@@ -99,13 +106,46 @@ class WordlineAllocator:
     def free_wordlines(self) -> int:
         return sum(e - s for s, e in self.free)
 
+    def reserve(self, ranges: List[Tuple[int, int]]) -> None:
+        """Carve ``ranges`` out of the free set (wordlines owned by a live
+        buffer of another op — they must not be handed out here)."""
+        for (rs, re) in ranges:
+            nxt: List[Tuple[int, int]] = []
+            for (s, e) in self.free:
+                if re <= s or rs >= e:
+                    nxt.append((s, e))
+                    continue
+                if s < rs:
+                    nxt.append((s, rs))
+                if re < e:
+                    nxt.append((re, e))
+            self.free = nxt
+
 
 def allocate(
-    reqs: List[BufferReq], capacity: int = 256
+    reqs: List[BufferReq],
+    capacity: int = 256,
+    *,
+    reserved: Optional[List[Tuple[int, int]]] = None,
+    pinned: Optional[Dict[str, List[Tuple[int, int]]]] = None,
 ) -> Allocation:
+    """First-fit allocation of ``reqs`` over the wordline space.
+
+    ``reserved`` ranges are excluded from the free set (live buffers of other
+    ops in a graph program).  ``pinned`` buffers take the given ranges
+    verbatim instead of fresh space — a chained input aliasing its producer's
+    output.
+    """
     alloc = Allocation(capacity=capacity)
     wa = WordlineAllocator(capacity)
+    if reserved:
+        wa.reserve(reserved)
+    pinned = pinned or {}
     for r in sorted(reqs, key=lambda r: -r.wordlines):
+        if r.name in pinned:
+            alloc.ranges[r.name] = [tuple(p) for p in pinned[r.name]]
+            alloc.savings[r.name] = r.naive_wordlines  # no fresh space at all
+            continue
         got = wa.alloc(r.wordlines)
         if got is None:
             alloc.feasible = False
@@ -116,3 +156,43 @@ def allocate(
         alloc.used += r.wordlines
         alloc.savings[r.name] = r.naive_wordlines - r.wordlines
     return alloc
+
+
+def allocate_graph(
+    items: List[Tuple[str, List[BufferReq], Dict[str, str]]],
+    capacity: int = 256,
+) -> Dict[str, Allocation]:
+    """Live-range-aware allocation for an ordered graph program.
+
+    ``items`` is ``[(op_name, reqs, pins)]`` in execution order, where
+    ``pins`` maps a buffer of this op to ``"producer_op:producer_buf"`` — the
+    CRAM-resident intermediate it aliases.  A pinned source buffer stays
+    reserved for every op between its producer and its last consumer; all
+    other buffers are considered dead once their op retires, so later ops
+    reuse their wordlines freely.
+
+    Returns per-op Allocations; an op whose own buffers don't fit around the
+    live intermediates comes back ``feasible=False`` (the caller drops the
+    residency pin and retries).
+    """
+    order = {name: i for i, (name, _, _) in enumerate(items)}
+    # live interval of each pinned source buffer: (producer_idx, consumer_idx]
+    live: Dict[Tuple[str, str], int] = {}  # (op, buf) -> last consumer idx
+    for name, _, pins in items:
+        for _, src in pins.items():
+            src_op, src_buf = src.split(":")
+            key = (src_op, src_buf)
+            live[key] = max(live.get(key, -1), order[name])
+
+    allocs: Dict[str, Allocation] = {}
+    for idx, (name, reqs, pins) in enumerate(items):
+        reserved: List[Tuple[int, int]] = []
+        for (src_op, src_buf), last in live.items():
+            if order[src_op] < idx <= last:
+                reserved.extend(allocs[src_op].ranges.get(src_buf, []))
+        pinned = {}
+        for buf, src in pins.items():
+            src_op, src_buf = src.split(":")
+            pinned[buf] = allocs[src_op].ranges.get(src_buf, [])
+        allocs[name] = allocate(reqs, capacity, reserved=reserved, pinned=pinned)
+    return allocs

@@ -20,12 +20,17 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import FrozenSet, List, Optional, Tuple
 
 from repro.core import isa
 from repro.core.compiler.allocation import mul_live_window
-from repro.core.compiler.distribute import Mapping, distribute
-from repro.core.compiler.tensor_dsl import Workload
+from repro.core.compiler.distribute import (
+    GraphMapping,
+    Mapping,
+    distribute,
+    distribute_graph,
+)
+from repro.core.compiler.tensor_dsl import Workload, WorkloadGraph
 from repro.core.machine import PimsabConfig
 
 
@@ -33,6 +38,26 @@ from repro.core.machine import PimsabConfig
 class CompiledProgram:
     program: List[isa.Instr]
     mapping: Mapping
+
+    def __iter__(self):
+        return iter(self.program)
+
+
+@dataclass
+class CompiledGraph:
+    """One fused instruction stream for a multi-op WorkloadGraph.
+
+    ``segments`` maps each node to its [start, end) slice of ``program`` so
+    the simulator can attribute cycles per kernel; DRAM instructions carry
+    node-prefixed tags (``"node:in_a"``) for the data-plane binder.  Boundary
+    DRAM store/load pairs of resident edges are *absent* from the stream —
+    the consumer's compute reads the producer's accumulator wordlines.
+    """
+
+    program: List[isa.Instr]
+    graph: WorkloadGraph
+    gm: GraphMapping
+    segments: Tuple[Tuple[str, int, int], ...]
 
     def __iter__(self):
         return iter(self.program)
@@ -48,8 +73,25 @@ def _zero(addr: int, prec: int) -> isa.Instr:
     return isa.Logical(dst=addr, src1=addr, prec1=prec, src2=addr, prec2=prec, op="xor")
 
 
-def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -> CompiledProgram:
-    m = distribute(w, cfg)
+def compile_workload(
+    w: Workload,
+    cfg: PimsabConfig,
+    hand_tuned: bool = False,
+    *,
+    mapping: Optional[Mapping] = None,
+    elide: FrozenSet[str] = frozenset(),
+    tag_prefix: str = "",
+) -> CompiledProgram:
+    """Lower one workload to its per-tile ISA stream.
+
+    ``mapping`` reuses a precomputed (graph-constrained) distribution instead
+    of re-running the search.  ``elide`` ⊆ {"in_a", "in_b", "out"} drops the
+    corresponding DRAM instructions — the buffer is CRAM-resident across a
+    graph edge and its addresses already alias the neighbour op's allocation.
+    ``tag_prefix`` namespaces the data-plane tags per graph node.
+    """
+    m = mapping if mapping is not None else distribute(w, cfg)
+    tp = tag_prefix
     prog: List[isa.Instr] = []
     pa = w.ins[0].prec
     pb = w.ins[1].prec if len(w.ins) > 1 else pa
@@ -71,14 +113,15 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
         if const_b and w.op == "map_mul":
             prog.append(isa.RfLoad(reg=0, value=w.ins[1].const_value or 1))
         for step in range(m.serial_iters):
-            prog.append(isa.DramLoad(
-                dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters),
-                prec=pa, tag="in_a",
-            ))
-            if len(w.ins) > 1 and not const_b:
+            if "in_a" not in elide:
+                prog.append(isa.DramLoad(
+                    dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters),
+                    prec=pa, tag=tp + "in_a",
+                ))
+            if len(w.ins) > 1 and not const_b and "in_b" not in elide:
                 prog.append(isa.DramLoad(
                     dram_addr=0, cram_addr=b_addr, bits=int(b_total / m.serial_iters),
-                    prec=pb, tag="in_b",
+                    prec=pb, tag=tp + "in_b",
                 ))
             if w.op == "map_add":
                 prog.append(isa.Add(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, src2=b_addr, prec2=pb))
@@ -92,10 +135,11 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
                 prog.append(isa.CmpGE(dst=pred_addr, src1=a_addr, prec1=pa, src2=out_addr, prec2=pa))
                 prog.append(isa.SetMask(src=pred_addr))
                 prog.append(isa.Copy(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, pred=isa.Pred.MASK))
-            prog.append(isa.DramStore(
-                dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters),
-                prec=m.out_prec, tag="out",
-            ))
+            if "out" not in elide:
+                prog.append(isa.DramStore(
+                    dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters),
+                    prec=m.out_prec, tag=tp + "out",
+                ))
 
     elif w.op == "mac":
         k_lane = k // m.reduce_split
@@ -108,12 +152,13 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
             prog.append(_zero(out_addr, m.out_prec))  # fresh accumulator
             for kc in range(n_chunks):
                 # data-parallel operand slice for this chunk
-                prog.append(isa.DramLoad(
-                    dram_addr=0, cram_addr=a_addr,
-                    bits=int(a_total / n_phases), prec=pa,
-                    tag="in_a", fields=m.k_chunk,
-                ))
-                if not const_b:
+                if "in_a" not in elide:
+                    prog.append(isa.DramLoad(
+                        dram_addr=0, cram_addr=a_addr,
+                        bits=int(a_total / n_phases), prec=pa,
+                        tag=tp + "in_a", fields=m.k_chunk,
+                    ))
+                if not const_b and "in_b" not in elide:
                     # shared operand: one DRAM load, systolic NoC broadcast,
                     # H-tree shuffle-distribution to CRAMs (§III-B) — one
                     # pipelined instruction; receive still serializes against
@@ -123,7 +168,7 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
                         bits=int(b_total / n_phases), prec=pb,
                         shf=isa.ShufflePattern.STRIDE,
                         bcast_tiles=m.tiles_used,
-                        tag="in_b", fields=m.k_chunk,
+                        tag=tp + "in_b", fields=m.k_chunk,
                     ))
                 for j in range(m.k_chunk):
                     if const_b:
@@ -141,10 +186,11 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
                 prog.append(isa.ReduceIntra(dst=out_addr, src=out_addr, prec=m.out_prec, size=min(m.reduce_split, cfg.cram_cols)))
                 if m.reduce_split > cfg.cram_cols:
                     prog.append(isa.ReduceHTree(dst=out_addr, src=out_addr, prec=m.out_prec))
-            prog.append(isa.DramStore(
-                dram_addr=0, cram_addr=out_addr,
-                bits=int(out_total / m.serial_iters), prec=m.out_prec, tag="out",
-            ))
+            if "out" not in elide:
+                prog.append(isa.DramStore(
+                    dram_addr=0, cram_addr=out_addr,
+                    bits=int(out_total / m.serial_iters), prec=m.out_prec, tag=tp + "out",
+                ))
 
     elif w.op == "scan_mac":
         # linear recurrence h_t = a_t · h_{t-1} + b_t, fixed point: the
@@ -158,18 +204,18 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
         for step in range(m.serial_iters):
             prog.append(isa.DramLoad(
                 dram_addr=0, cram_addr=out_addr, bits=int(h0_total / m.serial_iters),
-                prec=ph, tag="h0",
+                prec=ph, tag=tp + "h0",
             ))
             for kc in range(n_chunks):
                 prog.append(isa.DramLoad(
                     dram_addr=0, cram_addr=a_addr,
                     bits=int(a_total / (m.serial_iters * n_chunks)), prec=pa,
-                    tag="in_a", fields=m.k_chunk,
+                    tag=tp + "in_a", fields=m.k_chunk,
                 ))
                 prog.append(isa.DramLoad(
                     dram_addr=0, cram_addr=b_addr,
                     bits=int(b_total / (m.serial_iters * n_chunks)), prec=pb,
-                    tag="in_b", fields=m.k_chunk,
+                    tag=tp + "in_b", fields=m.k_chunk,
                 ))
                 for j in range(m.k_chunk):
                     prog.append(isa.Mul(
@@ -183,7 +229,7 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
                     ))
                     prog.append(isa.DramStore(
                         dram_addr=0, cram_addr=out_addr,
-                        bits=int(out_total / (m.serial_iters * k)), prec=ph, tag="out",
+                        bits=int(out_total / (m.serial_iters * k)), prec=ph, tag=tp + "out",
                     ))
 
     elif w.op == "stencil_mac":
@@ -195,7 +241,7 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
             prog.append(_zero(out_addr, m.out_prec))
             prog.append(isa.DramLoad(
                 dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters),
-                prec=pa, tag="in_a",
+                prec=pa, tag=tp + "in_a",
             ))
             for j in range(taps):
                 if j:
@@ -207,9 +253,54 @@ def compile_workload(w: Workload, cfg: PimsabConfig, hand_tuned: bool = False) -
                 ))
             prog.append(isa.DramStore(
                 dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters),
-                prec=m.out_prec, tag="out",
+                prec=m.out_prec, tag=tp + "out",
             ))
     else:
         raise ValueError(w.op)
 
     return CompiledProgram(prog, m)
+
+
+def _data_movement_cycles(w: Workload, m: Mapping, cfg: PimsabConfig,
+                          elide: FrozenSet[str]) -> float:
+    """Modeled DRAM+NoC cycles of one node under one plan — the residency
+    planner's cost function: emit the node's stream (with the plan's elided
+    boundaries) and charge it on the analytic simulator."""
+    from repro.core.simulator import Simulator
+
+    cp = compile_workload(w, cfg, mapping=m, elide=elide)
+    res = Simulator(cfg).run(cp.program)
+    return res.cycles["dram"] + res.cycles["noc"]
+
+
+def compile_graph(g: WorkloadGraph, cfg: PimsabConfig) -> CompiledGraph:
+    """Lower a WorkloadGraph to ONE fused per-tile stream (compile-once).
+
+    Distribution, residency planning and live-range allocation run jointly
+    (:func:`distribute_graph`, with the simulator-backed data-movement cost
+    model gating each residency decision); each node then emits with the DRAM
+    instructions of its resident boundaries elided.  The consumer's elided
+    input needs no address fix-up: the live-range allocator pinned it to the
+    producer's accumulator wordlines, so the emitted compute reads the value
+    in place.
+    """
+    gm = distribute_graph(
+        g, cfg,
+        cost_fn=lambda w, m, elide: _data_movement_cycles(w, m, cfg, elide),
+    )
+    prog: List[isa.Instr] = []
+    segments: List[Tuple[str, int, int]] = []
+    for w in g.nodes:
+        dead = {e.dst_input for e in gm.resident if e.dst == w.name}
+        if gm.store_elided(w.name):
+            dead.add("out")
+        start = len(prog)
+        cp = compile_workload(
+            w, cfg,
+            mapping=gm.mappings[w.name],
+            elide=frozenset(dead),
+            tag_prefix=f"{w.name}:",
+        )
+        prog.extend(cp.program)
+        segments.append((w.name, start, len(prog)))
+    return CompiledGraph(prog, g, gm, tuple(segments))

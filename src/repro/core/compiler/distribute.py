@@ -16,15 +16,16 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.machine import PimsabConfig
-from repro.core.compiler.tensor_dsl import Workload
+from repro.core.compiler.tensor_dsl import GraphEdge, Workload, WorkloadGraph, out_buffer
 from repro.core.compiler.allocation import (
     Allocation,
     BufferReq,
     adaptive_precision,
     allocate,
+    allocate_graph,
     mul_live_window,
 )
 
@@ -176,7 +177,22 @@ def _b_tiles(w: Workload) -> int:
     return 1
 
 
-def distribute(w: Workload, cfg: PimsabConfig) -> Mapping:
+def distribute(
+    w: Workload,
+    cfg: PimsabConfig,
+    *,
+    tile_constraint: Optional[int] = None,
+    rs_constraint: Optional[int] = None,
+    strict: bool = True,
+) -> Optional[Mapping]:
+    """Pick the best feasible mapping of ``w`` onto ``cfg``.
+
+    ``tile_constraint``/``rs_constraint`` restrict the exploration (graph
+    compilation pins a consumer to its producer's tiling and a producer to
+    the lane-contiguous ``reduce_split=1`` layout so the boundary value can
+    stay CRAM-resident).  With ``strict=False`` an empty feasible set returns
+    ``None`` instead of raising (constrained probes fall back).
+    """
     lanes = cfg.pes_per_tile  # 65536 bitlines per tile
     d = w.total_out_elems()
     k = w.reduce_extent()
@@ -186,6 +202,8 @@ def distribute(w: Workload, cfg: PimsabConfig) -> Mapping:
     best: Optional[Mapping] = None
     # --- exhaustive exploration (small space, §V-B) -----------------------
     tile_options = [t for t in range(1, cfg.num_tiles + 1)]
+    if tile_constraint is not None:
+        tile_options = [tile_constraint]
     # lane-splitting a reduction: none, a CRAM sub-group, a full CRAM, or all
     # lanes of the tile (the last folds through the H-tree across CRAMs);
     # sequential scans never split — the recurrence carries per lane
@@ -193,6 +211,8 @@ def distribute(w: Workload, cfg: PimsabConfig) -> Mapping:
         rs_options = sorted({1, 16, cfg.cram_cols, lanes})
     else:
         rs_options = [1]
+    if rs_constraint is not None:
+        rs_options = [r for r in rs_options if r == rs_constraint] or []
     for tiles in tile_options:
         per_tile = -(-d // tiles)
         for reduce_split in rs_options:
@@ -224,6 +244,8 @@ def distribute(w: Workload, cfg: PimsabConfig) -> Mapping:
                 if best is None or _better(m, best):
                     best = m
     if best is None:
+        if not strict:
+            return None
         raise RuntimeError(
             f"{w.name}: no feasible parallelism distribution — the developer "
             "must supply a more conservative loop organization (§V-A feedback)"
@@ -260,3 +282,254 @@ def _better(a: Mapping, b: Mapping) -> bool:
     if abs(a.dram_bits - b.dram_bits) > 1:
         return a.dram_bits < b.dram_bits
     return _phases(a) < _phases(b)
+
+
+# ---------------------------------------------------------------------------
+# graph distribution: producer→consumer residency
+# ---------------------------------------------------------------------------
+
+# consumer ops that read their inputs lane-contiguously, one element per lane
+_MAP_OPS = ("map_add", "map_mul", "relu", "maxpool")
+
+
+@dataclass
+class GraphMapping:
+    """Per-node mappings + the residency decisions for one WorkloadGraph."""
+
+    graph: WorkloadGraph
+    mappings: Dict[str, Mapping]
+    resident: Tuple[GraphEdge, ...] = ()
+    elided_bits: Dict[str, float] = field(default_factory=dict)  # "node:stream" -> bits
+    notes: List[str] = field(default_factory=list)
+
+    def is_resident(self, dst: str, dst_input: str) -> bool:
+        return any(e.dst == dst and e.dst_input == dst_input for e in self.resident)
+
+    def store_elided(self, src: str) -> bool:
+        """The producer's DRAM store is dropped only when *every* consumer
+        reads the value in place and nothing outside the program needs it."""
+        outs = self.graph.out_edges(src)
+        return (
+            bool(outs)
+            and src not in self.graph.outputs
+            and all(e in self.resident for e in outs)
+        )
+
+    @property
+    def total_elided_bits(self) -> float:
+        return sum(self.elided_bits.values())
+
+    def to_json(self) -> Dict:
+        return {
+            "graph": self.graph.name,
+            "mappings": {n: m.to_json() for n, m in self.mappings.items()},
+            "resident": [
+                {"src": e.src, "dst": e.dst, "dst_input": e.dst_input}
+                for e in self.resident
+            ],
+            "elided_bits": dict(self.elided_bits),
+            "notes": list(self.notes),
+        }
+
+
+def _producer_layout_ok(m: Mapping) -> bool:
+    """Producer output must be lane-contiguous (element o at lane o) and fully
+    resident in one serial step, or the consumer would read stale wordlines."""
+    return m.serial_iters == 1 and m.reduce_split == 1
+
+
+def _consumer_layout_ok(mc: Mapping, mp: Mapping) -> bool:
+    return (
+        mc.serial_iters == 1
+        and mc.tiles_used == mp.tiles_used
+        and mc.lanes_used == mp.lanes_used
+    )
+
+
+def _edge_prec_ok(g: WorkloadGraph, e: GraphEdge, mappings: Dict[str, Mapping]) -> bool:
+    """The consumer must declare the chained input at exactly the precision
+    the producer's accumulator holds, or the in-place read misparses bits."""
+    w_dst = g.node(e.dst)
+    idx = 0 if e.dst_input == "in_a" else 1
+    if idx >= len(w_dst.ins):
+        return False
+    return w_dst.ins[idx].prec == mappings[e.src].out_prec
+
+
+# cost_fn(workload, mapping, elide) -> modeled data-movement cycles of the
+# node under that plan; injected by codegen.compile_graph (it owns the
+# emit + simulate machinery, and importing it here would be circular)
+CostFn = Optional[Callable[[Workload, Mapping, frozenset], float]]
+
+
+def _store_may_elide(g: WorkloadGraph, src: str) -> bool:
+    """Planning-time approximation of GraphMapping.store_elided: the store
+    can only go away if nothing outside the program reads the value and every
+    consumer is at least *eligible* for residency."""
+    outs = g.out_edges(src)
+    return bool(outs) and src not in g.outputs and all(e.resident_ok for e in outs)
+
+
+def distribute_graph(
+    g: WorkloadGraph, cfg: PimsabConfig, cost_fn: CostFn = None
+) -> GraphMapping:
+    """Distribute every node of ``g``, keeping eligible producer outputs
+    CRAM-resident for their consumers.
+
+    For each ``resident_ok`` edge the planner (1) re-pins the producer to the
+    lane-contiguous single-step layout, (2) constrains the consumer to the
+    producer's tiling, (3) checks — via ``cost_fn`` when provided — that the
+    fused plan models strictly fewer data-movement cycles than the eager pair
+    (re-pinning a lane-split reduction can add DRAM phases that outweigh the
+    elided store/load, e.g. when the per-lane reduction no longer fits one
+    k-chunk), and (4) runs the live-range allocator with the boundary buffer
+    pinned.  Any failure drops the edge back to the DRAM round-trip — the
+    program still compiles, just without the elision.
+    """
+    mappings: Dict[str, Mapping] = {}
+    resident: List[GraphEdge] = []
+    notes: List[str] = []
+
+    for w in g.nodes:
+        incoming = [e for e in g.in_edges(w.name) if e.resident_ok]
+        m = None
+        m_free: Optional[Mapping] = None  # unconstrained best, if computed
+        taken: List[GraphEdge] = []
+        cand = [
+            e for e in incoming
+            if e.src in mappings
+            and e.dst_input in ("in_a", "in_b")
+            and w.op in _MAP_OPS
+        ]
+        if cand:
+            # producers must be lane-contiguous; re-pin them if they are not
+            # (into `repins` — committed only if the plan is accepted)
+            repins: Dict[str, Mapping] = {}
+            ok: List[GraphEdge] = []
+            for e in cand:
+                mp = mappings[e.src]
+                if not _producer_layout_ok(mp):
+                    repinned = distribute(
+                        g.node(e.src), cfg,
+                        tile_constraint=mp.tiles_used, rs_constraint=1,
+                        strict=False,
+                    )
+                    if repinned is None or not _producer_layout_ok(repinned):
+                        notes.append(
+                            f"{e.src}->{e.dst}: producer cannot take the "
+                            "lane-contiguous layout, DRAM round-trip kept"
+                        )
+                        continue
+                    repinned.notes.append(
+                        "reduce_split pinned to 1: output stays CRAM-resident "
+                        f"for {e.dst}"
+                    )
+                    repins[e.src] = repinned
+                ok.append(e)
+            # all resident producers of this node must share a tiling
+            if ok:
+                pmap = lambda e: repins.get(e.src, mappings[e.src])
+                tiles = pmap(ok[0]).tiles_used
+                ok = [e for e in ok if pmap(e).tiles_used == tiles]
+                m_try = distribute(w, cfg, tile_constraint=tiles, strict=False)
+                accept = m_try is not None and all(
+                    _consumer_layout_ok(m_try, pmap(e)) for e in ok
+                )
+                if accept and cost_fn is not None:
+                    m_free = distribute(w, cfg)
+                    fused = cost_fn(
+                        w, m_try, frozenset(e.dst_input for e in ok)
+                    )
+                    eager = cost_fn(w, m_free, frozenset())
+                    for src in {e.src for e in ok}:
+                        w_src = g.node(src)
+                        src_elide = (
+                            frozenset({"out"}) if _store_may_elide(g, src)
+                            else frozenset()
+                        )
+                        fused += cost_fn(w_src, repins.get(src, mappings[src]), src_elide)
+                        eager += cost_fn(w_src, mappings[src], frozenset())
+                    if fused >= eager:
+                        accept = False
+                        notes.append(
+                            f"{w.name}: residency declined — fused plan models "
+                            f"{fused:.0f} data-movement cycles vs {eager:.0f} "
+                            "eager (re-pinned reduction adds DRAM phases)"
+                        )
+                if accept:
+                    m = m_try
+                    taken = ok
+                    mappings.update(repins)
+                elif m_try is None or not all(
+                    _consumer_layout_ok(m_try, pmap(e)) for e in ok
+                ):
+                    notes.append(
+                        f"{w.name}: consumer layout incompatible with "
+                        "producer tiling, DRAM round-trip kept"
+                    )
+        if m is None:
+            m = m_free if m_free is not None else distribute(w, cfg)
+        mappings[w.name] = m
+        resident.extend(
+            e for e in taken if _edge_prec_ok(g, e, mappings)
+        )
+
+    gm = GraphMapping(graph=g, mappings=mappings, resident=tuple(resident), notes=notes)
+    _allocate_graph_mappings(gm, cfg)
+    _account_elision(gm)
+    return gm
+
+
+def _allocate_graph_mappings(gm: GraphMapping, cfg: PimsabConfig) -> None:
+    """Joint live-range allocation; drops residency edges that don't fit."""
+    g = gm.graph
+    while True:
+        items = []
+        for w in g.nodes:
+            m = gm.mappings[w.name]
+            reqs = _buffer_reqs(
+                w, m.k_chunk, m.out_prec,
+                reduce_split=m.reduce_split, cram_cols=cfg.cram_cols,
+            )
+            pins = {
+                e.dst_input: f"{e.src}:{out_buffer(g.node(e.src))}"
+                for e in gm.resident if e.dst == w.name
+            }
+            items.append((w.name, reqs, pins))
+        allocs = allocate_graph(items, cfg.cram_rows)
+        bad = [n for n, a in allocs.items() if not a.feasible]
+        if not bad:
+            for name, a in allocs.items():
+                gm.mappings[name].allocation = a
+            return
+        # drop every resident edge whose live intermediate squeezes a failing
+        # node — including edges that merely *span* it (A→C reserving rows
+        # while B allocates), not just edges ending there
+        order = {w.name: i for i, w in enumerate(g.nodes)}
+        bad_idx = {order[n] for n in bad}
+        dropped = tuple(
+            e for e in gm.resident
+            if not any(order[e.src] < b <= order[e.dst] for b in bad_idx)
+        )
+        if dropped == gm.resident:  # infeasible without pins: should not happen
+            raise RuntimeError(
+                f"graph {g.name}: allocation infeasible for {bad} even "
+                "without residency — per-op distribute() admitted a mapping "
+                "the joint allocator rejects"
+            )
+        gm.notes.append(
+            f"residency around {bad} dropped: live intermediates exceed CRAM rows"
+        )
+        gm.resident = dropped
+
+
+def _account_elision(gm: GraphMapping) -> None:
+    """Record the DRAM bits each residency decision removes (the number the
+    aggregated SimReport pins as the fused-vs-eager win)."""
+    for e in gm.resident:
+        stream = "a" if e.dst_input == "in_a" else "b"
+        bits = gm.mappings[e.dst].dram_split.get(stream, 0.0)
+        gm.elided_bits[f"{e.dst}:{stream}"] = bits
+    for w in gm.graph.nodes:
+        if gm.store_elided(w.name):
+            gm.elided_bits[f"{w.name}:out"] = gm.mappings[w.name].dram_split.get("out", 0.0)

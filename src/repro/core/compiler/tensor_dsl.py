@@ -7,6 +7,15 @@ organization: ``split`` and ``reorder`` produce new loop lists; binding to
 hardware levels is the *compiler's* job (distribute.py), with the user's loop
 order acting as the hint (§V: developers control organization/layout, the
 compiler controls parallelism distribution + buffers).
+
+Multi-op programs are a :class:`WorkloadGraph`: a topologically-ordered
+sequence of Workloads plus producer→consumer edges.  An edge names the
+consumer's *canonical input buffer* (``"in_a"``/``"in_b"`` — the compiler's
+buffer names, not the Ref names) and may be flagged ``resident_ok``: the
+lowering layer asserts the value crosses the boundary in the raw integer
+domain, so the compiler is allowed to keep it CRAM-resident and elide the
+producer's DRAM store + the consumer's DRAM load (the paper's spatially-aware
+communication of intermediates, applied at the kernel boundary).
 """
 from __future__ import annotations
 
@@ -72,6 +81,65 @@ class Workload:
         for l in self.reduce_loops:
             n *= l.extent
         return n
+
+
+# ---------------------------------------------------------------------------
+# multi-op graphs
+# ---------------------------------------------------------------------------
+
+
+def out_buffer(w: Workload) -> str:
+    """The canonical allocation-buffer name holding ``w``'s output values."""
+    return "acc" if w.op in ("mac", "scan_mac", "stencil_mac") else "out"
+
+
+@dataclass(frozen=True)
+class GraphEdge:
+    """Producer→consumer dataflow edge between two graph nodes.
+
+    ``dst_input`` is the consumer's canonical buffer ("in_a" = ins[0],
+    "in_b" = ins[1]).  ``resident_ok`` is the *lowering layer's* assertion
+    that the boundary value is domain-compatible for CRAM residency (raw
+    integers, matching precision); the mapping layer still checks layout.
+    """
+
+    src: str
+    dst: str
+    dst_input: str
+    resident_ok: bool = False
+
+
+@dataclass(frozen=True)
+class WorkloadGraph:
+    """Topologically-ordered multi-op workload (one compiled program)."""
+
+    name: str
+    nodes: Tuple[Workload, ...]
+    edges: Tuple[GraphEdge, ...] = ()
+    outputs: Tuple[str, ...] = ()  # node names whose results leave the chip
+
+    def __post_init__(self):
+        names = [w.name for w in self.nodes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate node names in graph {self.name!r}: {names}")
+        order = {n: i for i, n in enumerate(names)}
+        for e in self.edges:
+            if e.src not in order or e.dst not in order:
+                raise ValueError(f"edge {e} references unknown node")
+            if order[e.src] >= order[e.dst]:
+                raise ValueError(f"edge {e} is not topologically ordered")
+
+    def node(self, name: str) -> Workload:
+        for w in self.nodes:
+            if w.name == name:
+                return w
+        raise KeyError(name)
+
+    def in_edges(self, dst: str) -> List["GraphEdge"]:
+        return [e for e in self.edges if e.dst == dst]
+
+    def out_edges(self, src: str) -> List["GraphEdge"]:
+        return [e for e in self.edges if e.src == src]
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,10 @@
 """Kernel package — the public surface is :mod:`repro.kernels.api`.
 
 ``api`` exposes the unified execution API (``SlicedTensor``,
-``PrecisionSpec``, ``use_backend`` and the backend registry); ``ops`` holds
-the deprecated ``impl=``-kwarg shims kept for one release.
+``PrecisionSpec``, ``use_backend`` + the backend registry) and, on top of it,
+the Program API (``trace`` / ``compile`` / ``Executor`` with a global compile
+cache).  The deprecated ``repro.kernels.ops`` ``impl=`` shims have been
+removed — ``scripts/check_api.py`` rejects imports of that module.
 """
 from repro.kernels.api import (  # noqa: F401
     PrecisionSpec,
@@ -16,10 +18,13 @@ from repro.kernels.api import (  # noqa: F401
 from repro.kernels.api import (  # noqa: F401
     matmul,
     quantized_matmul,
-)
-from repro.kernels.ops import (  # noqa: F401
-    bitslice_matmul,
-    htree_reduce,
-    rglru_scan,
     zero_slice_pairs,
+)
+from repro.kernels.api import (  # noqa: F401
+    Executor,
+    Program,
+    TracedFunction,
+    clear_compile_cache,
+    compile_cache_info,
+    trace,
 )

@@ -27,8 +27,19 @@ kwargs through every layer:
 Validation tests and benchmark enumeration are generated from the registry
 (:func:`registered_kernels`) instead of hand-maintained lists.
 
-The legacy ``impl="..."`` kwargs on :mod:`repro.kernels.ops` are deprecated
-shims over this module and will be removed after one release.
+On top of per-call dispatch sits the **Program API** (:mod:`repro.kernels.
+program`): :func:`trace` captures a chain of registry kernel calls into a
+:class:`~repro.kernels.program.Program`, :func:`compile` lowers it once for
+the active backend and returns a cached
+:class:`~repro.kernels.program.Executor` — on the pimsab backend the whole
+chain compiles to one fused ISA stream with integer intermediates kept
+CRAM-resident (the producer's DRAM store and consumer's DRAM load are
+elided).  Eager dispatch stays the default; programs are the opt-in fast
+path and are bit-exact against it.
+
+(The ``repro.kernels.ops`` ``impl=`` compatibility shims from the first API
+release have been removed; ``scripts/check_api.py`` rejects imports of that
+module.)
 """
 from __future__ import annotations
 
@@ -57,6 +68,7 @@ __all__ = [
     "dispatch",
     "active_pairs",
     "skip_pairs",
+    "zero_slice_pairs",
     "bitslice_matmul_oracle",
     "matmul",
     "quantized_matmul",
@@ -67,6 +79,16 @@ __all__ = [
     "static_value",
     "last_executed_pairs",
     "last_sim_report",
+    # Program API (re-exported from repro.kernels.program)
+    "trace",
+    "compile",
+    "Program",
+    "Executor",
+    "TracedFunction",
+    "TraceError",
+    "compile_cache_info",
+    "clear_compile_cache",
+    "PimsabTracerError",
 ]
 
 
@@ -423,14 +445,38 @@ def registered_kernels() -> Mapping[str, KernelDef]:
     return dict(_REGISTRY)
 
 
+class PimsabTracerError(ValueError):
+    """A pimsab-backend kernel was reached with jax tracers (e.g. under
+    ``jax.jit``).  Raised *before* lowering starts, naming the kernel."""
+
+
+def _require_concrete_operands(name: str, args: Tuple[Any, ...]) -> None:
+    for i, a in enumerate(args):
+        if hasattr(a, "shape") and hasattr(a, "dtype") and static_value(a) is None:
+            raise PimsabTracerError(
+                f"kernel {name!r} on the 'pimsab' backend needs concrete "
+                f"operands, but operand {i} is a jax tracer (the call sits "
+                "under jax.jit/vmap/grad). Either run the kernel eagerly "
+                "outside the transform, or capture the kernel chain with "
+                "api.trace(fn) and execute the compiled Program instead — "
+                "programs lower once and replay without jax tracing."
+            )
+
+
 def dispatch(name: str, *args, pallas_kwargs: Optional[Dict[str, Any]] = None, **kwargs):
     """Run kernel ``name`` on the currently-active backend.
 
     ``kwargs`` reach both implementations; ``pallas_kwargs`` (block sizes
     and other tiling knobs the oracle has no business seeing) only the
     Pallas call.  This is the single backend branch — the public wrappers
-    below all go through it.
+    below all go through it.  Inside :func:`trace` the call is recorded into
+    the Program under construction instead of executing.
     """
+    from repro.kernels import program as _program
+
+    ctx = _program.active_trace()
+    if ctx is not None:
+        return ctx.record(name, args, kwargs, pallas_kwargs)
     k = get_kernel(name)
     backend = current_backend()
     if backend == "xla":
@@ -441,6 +487,7 @@ def dispatch(name: str, *args, pallas_kwargs: Optional[Dict[str, Any]] = None, *
                 f"kernel {name!r} has no pimsab lowering "
                 "(register one with api.register_pimsab_impl)"
             )
+        _require_concrete_operands(name, args)
         # tiling knobs in pallas_kwargs are TPU-specific; the DSL compiler
         # chooses its own distribution (§V-B)
         return k.pimsab(*args, **kwargs)
@@ -474,6 +521,37 @@ def skip_pairs(x: SlicedTensor, w: SlicedTensor) -> Tuple[Tuple[int, int], ...]:
         for t in range(w.n_slices)
         if s in x.zero_slices or t in w.zero_slices
     )
+
+
+def zero_slice_pairs(
+    x_slices: Optional[np.ndarray], w_slices: Optional[np.ndarray]
+) -> Tuple[Tuple[int, int], ...]:
+    """Statically-zero (s, t) pairs of raw slice stacks — PIMSAB ``mul_const``
+    zero-bit skipping for callers that haven't built :class:`SlicedTensor`s.
+
+    Only possible when operands are concrete (inference-time constants);
+    tracers are conservatively assumed dense.  Staticness is probed with
+    :func:`static_value` (version-safe — no ``jax.core.Tracer`` isinstance
+    checks, which break across JAX relocations).
+    """
+
+    def dead(arr):
+        a = static_value(arr)
+        if a is None:
+            return None
+        return [s for s in range(a.shape[0]) if not a[s].any()]
+
+    xs, ws = dead(x_slices), dead(w_slices)
+    if not xs and not ws:
+        return ()
+    nx = x_slices.shape[0] if x_slices is not None else 1
+    nw = w_slices.shape[0] if w_slices is not None else 1
+    skip = []
+    for s in range(nx):
+        for t in range(nw):
+            if (xs and s in xs) or (ws and t in ws):
+                skip.append((s, t))
+    return tuple(skip)
 
 
 # Debug/observability: the pair list handed to the most recent bit-sliced
@@ -586,7 +664,28 @@ def relu(x: jnp.ndarray, *, block: int = 512) -> jnp.ndarray:
 
 def last_sim_report():
     """The :class:`~repro.kernels.pimsab_backend.SimReport` of the most recent
-    pimsab-backend kernel call on this thread (``None`` before any)."""
+    pimsab-backend kernel call *or Program execution* on this thread
+    (``None`` before any)."""
     from repro.kernels import pimsab_backend
 
     return pimsab_backend.last_sim_report()
+
+
+# ---------------------------------------------------------------------------
+# Program API: trace → compile-once → execute (repro.kernels.program)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.program import (  # noqa: E402  (after dispatch: program.py
+    Executor,                        # lazily imports this module back)
+    Program,
+    TraceError,
+    TracedFunction,
+    clear_compile_cache,
+    compile_cache_info,
+    compile_program,
+    trace,
+)
+
+# ``api.compile(program)`` — the documented spelling; the module-level name
+# deliberately shadows the (unused here) builtin.
+compile = compile_program

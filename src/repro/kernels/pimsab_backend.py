@@ -23,8 +23,30 @@ quantized — `frac` fraction bits — for float kernels, allclose to the
 oracle).  The modeled numbers attach to the call through
 :func:`last_sim_report` (thread-local, mirroring ``api.last_executed_pairs``).
 
-Float operands cannot be tracers: the simulator needs concrete values, so
-calling a pimsab-backed kernel under ``jax.jit`` raises.
+Operands cannot be tracers: the simulator needs concrete values, so calling a
+pimsab-backed kernel under ``jax.jit`` raises ``api.PimsabTracerError`` early
+(from ``api.dispatch``), naming the kernel and pointing at ``api.trace``.
+
+**Program lowering and DRAM elision.**  Eager dispatch lowers one kernel per
+call through :func:`execute_workload`; a traced ``api.Program`` instead
+lowers through :func:`compile_traced_program` into one
+``tensor_dsl.WorkloadGraph`` compiled as a single fused ISA stream.  On a
+producer→consumer edge whose boundary value lives in the **raw integer
+domain** (``frac == 0``, no dequantization epilogue — e.g. an unscaled
+``bitslice_matmul`` accumulator feeding ``ewise_add``/``relu``), the
+compiler keeps the value CRAM-resident: the live-range allocator pins the
+consumer's input buffer to the producer's accumulator wordlines, and the
+producer's ``DramStore`` + consumer's ``DramLoad`` are *elided* from the
+stream (spatially-aware communication of intermediates).  Fixed-point
+(float) boundaries keep the DRAM round-trip — each node re-quantizes exactly
+as the eager path would — so program execution stays bit-exact against
+running the same kernels eagerly.  One more semantic difference: eager
+lowering sizes integer precision from operand *values* (per-call
+calibration), while program lowering sizes it from the *dtype* so a cached
+executor replays safely with fresh values; results are identical, modeled
+cycles differ slightly.  The aggregated :class:`SimReport` of a program
+carries per-kernel cycle segments and a cross-kernel DRAM-traffic breakdown
+(``dram_traffic``/``elided_dram_bits``/``resident_edges``).
 """
 from __future__ import annotations
 
@@ -39,12 +61,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import isa
-from repro.core.compiler.codegen import CompiledProgram, compile_workload
-from repro.core.compiler.tensor_dsl import Loop, Ref, Workload
+from repro.core.compiler.allocation import adaptive_precision
+from repro.core.compiler.codegen import (
+    CompiledGraph,
+    CompiledProgram,
+    compile_graph,
+    compile_workload,
+)
+from repro.core.compiler.tensor_dsl import (
+    GraphEdge,
+    Loop,
+    Ref,
+    Workload,
+    WorkloadGraph,
+)
 from repro.core.machine import PIMSAB, PimsabConfig
 from repro.core.simulator import Simulator
 from repro.core import timing as core_timing
-from repro.kernels.api import register_pimsab_impl, static_value
+from repro.kernels.api import PimsabTracerError, register_pimsab_impl, static_value
 
 # the lowerings attach to already-registered kernels: importing the kernel
 # modules here makes a direct `import repro.kernels.pimsab_backend` work the
@@ -61,6 +95,11 @@ __all__ = [
     "FUNCTIONAL_CFG",
     "execute_workload",
     "timing_report",
+    "ValueMeta",
+    "OpLowering",
+    "CompiledTracedProgram",
+    "compile_traced_program",
+    "execute_traced_program",
 ]
 
 # Functional machine: a small mesh so bit-exact bit-serial execution stays
@@ -95,7 +134,10 @@ def _functional_cfg() -> PimsabConfig:
 
 @dataclass(frozen=True)
 class SimReport:
-    """Modeled execution of one kernel call on the PIMSAB architecture."""
+    """Modeled execution of one kernel call — or one multi-kernel Program —
+    on the PIMSAB architecture.  The program-mode fields (``kernels``,
+    ``per_kernel``, ``dram_traffic``, ``elided_dram_bits``,
+    ``resident_edges``) stay empty for eager single-kernel calls."""
 
     kernel: str
     workload: str
@@ -109,9 +151,15 @@ class SimReport:
     instr_mix: Dict[str, int]           # instruction class -> count
     mapping: Dict[str, Any]             # distribute() decision (to_json)
     functional_instrs: int              # instructions executed bit-exactly
+    # --- aggregated program-mode fields -----------------------------------
+    kernels: Tuple[str, ...] = ()               # kernel per node, in order
+    per_kernel: Tuple[Dict[str, Any], ...] = () # per-node cycle segments
+    dram_traffic: Dict[str, Any] = field(default_factory=dict)  # node -> stream bits
+    elided_dram_bits: float = 0.0
+    resident_edges: Tuple[str, ...] = ()        # "src->dst" elided boundaries
 
     def to_json(self) -> Dict[str, Any]:
-        return {
+        out = {
             "kernel": self.kernel,
             "workload": self.workload,
             "total_cycles": self.total_cycles,
@@ -125,6 +173,13 @@ class SimReport:
             "mapping": self.mapping,
             "functional_instrs": self.functional_instrs,
         }
+        if self.kernels:
+            out["kernels"] = list(self.kernels)
+            out["per_kernel"] = [dict(p) for p in self.per_kernel]
+            out["dram_traffic"] = {k: dict(v) for k, v in self.dram_traffic.items()}
+            out["elided_dram_bits"] = self.elided_dram_bits
+            out["resident_edges"] = list(self.resident_edges)
+        return out
 
 
 def _require_concrete(name: str, *arrays) -> List[np.ndarray]:
@@ -403,6 +458,27 @@ def _from_slices_np(slices: np.ndarray, slice_bits: int) -> np.ndarray:
     return acc
 
 
+def _dead_slice_ints(
+    xs: np.ndarray, ws: np.ndarray, skip, slice_bits: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pairwise skip semantics shared by the eager and program matmul
+    lowerings (they must agree for bit-exactness): a slice dead against
+    *every* partner never reaches the integer reconstruction (those slices
+    are all-zero in every real flow — the skip list is derived from cached
+    zero-slice metadata)."""
+    sx, sw = xs.shape[0], ws.shape[0]
+    dead = set(skip)
+    xs = xs.astype(np.int64).copy()
+    ws = ws.astype(np.int64).copy()
+    for s in range(sx):
+        if all((s, t) in dead for t in range(sw)):
+            xs[s] = 0
+    for t in range(sw):
+        if all((s, t) in dead for s in range(sx)):
+            ws[t] = 0
+    return _from_slices_np(xs, slice_bits), _from_slices_np(ws, slice_bits)
+
+
 # ---------------------------------------------------------------------------
 # kernel lowerings
 # ---------------------------------------------------------------------------
@@ -419,20 +495,7 @@ def _bitslice_matmul_pimsab(
     sx, mm, kk = xs.shape
     sw, kk2, nn = ws.shape
     assert kk == kk2, (kk, kk2)
-    # pairwise skip semantics: a slice dead against *every* partner never
-    # reaches the integer reconstruction (those slices are all-zero in every
-    # real flow — the skip list is derived from cached zero-slice metadata)
-    dead = set(skip)
-    xs = xs.astype(np.int64).copy()
-    ws = ws.astype(np.int64).copy()
-    for s in range(sx):
-        if all((s, t) in dead for t in range(sw)):
-            xs[s] = 0
-    for t in range(sw):
-        if all((s, t) in dead for s in range(sx)):
-            ws[t] = 0
-    x_int = _from_slices_np(xs, slice_bits)
-    w_int = _from_slices_np(ws, slice_bits)
+    x_int, w_int = _dead_slice_ints(xs, ws, skip, slice_bits)
     pa = sx * slice_bits + 1  # balanced signed digits slightly exceed 2^(s·b-1)
     pb = sw * slice_bits + 1
     w = Workload(
@@ -575,3 +638,543 @@ def _relu_pimsab(x, **_) -> jnp.ndarray:
     if is_int:
         return jnp.asarray(out.reshape(xv.shape).astype(np.asarray(x).dtype))
     return jnp.asarray((out.reshape(xv.shape).astype(np.float64) / (1 << frac)).astype(np.float32))
+
+
+# ===========================================================================
+# Program lowering: traced kernel chains → one fused WorkloadGraph
+# ===========================================================================
+
+
+@dataclass(frozen=True)
+class ValueMeta:
+    """How a node's raw CRAM value relates to its logical value at a graph
+    boundary: ``prec`` CRAM bits, ``frac`` fixed-point fraction bits (0 = raw
+    integer domain), and the logical numpy dtype/shape."""
+
+    shape: Tuple[int, ...]
+    prec: int
+    frac: int
+    kind: str   # "int" | "fixed"
+    dtype: str  # logical numpy dtype of the finalized value
+
+
+@dataclass(frozen=True)
+class InDesc:
+    """One program-node input as the builder sees it: the logical aval, plus
+    the producer's ValueMeta when the input is a *chainable* node output."""
+
+    aval: Tuple[Tuple[int, ...], str]
+    meta: Optional[ValueMeta] = None
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.aval[0])
+
+    @property
+    def np_dtype(self) -> np.dtype:
+        return np.dtype(self.aval[1])
+
+    @property
+    def is_int(self) -> bool:
+        if self.meta is not None:
+            return self.meta.kind == "int"
+        return np.issubdtype(self.np_dtype, np.integer)
+
+
+@dataclass
+class OpLowering:
+    """One program node lowered to a Workload + its value-plane glue.
+
+    ``chained`` maps a canonical buffer ("in_a"/"in_b") to the input position
+    the builder constructed *in chain precision* — the mapping layer may
+    still drop the edge to a DRAM round-trip, in which case the same buffer
+    simply loads the producer's finalized value at that precision.
+    ``bind(vals)`` quantizes concrete input values into data-plane arrays
+    (positions the executor knows are CRAM-resident arrive as ``None``);
+    ``finalize(raw, state)`` turns the collected plane output back into the
+    logical value.
+    """
+
+    workload: Workload
+    out_meta: ValueMeta
+    chainable: bool
+    chained: Dict[str, int]
+    bind: Callable[[List[Optional[np.ndarray]]], Tuple[Dict[str, Optional[np.ndarray]], Optional[np.ndarray], Any]]
+    finalize: Callable[[np.ndarray, Any], np.ndarray]
+
+
+_PROGRAM_LOWERINGS: Dict[str, Callable[..., OpLowering]] = {}
+
+
+def _program_lowering(name: str):
+    def deco(fn):
+        _PROGRAM_LOWERINGS[name] = fn
+        return fn
+    return deco
+
+
+def _dtype_bits(dt: np.dtype) -> int:
+    """Signature-stable integer precision: the dtype's width (program mode
+    cannot calibrate from values — a cached executor replays fresh ones)."""
+    return np.dtype(dt).itemsize * 8
+
+
+def _int_in_prec(d: InDesc) -> int:
+    return d.meta.prec if d.meta is not None else _dtype_bits(d.np_dtype)
+
+
+@_program_lowering("bitslice_matmul")
+def _pl_bitslice_matmul(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    slice_bits = int(kwargs.get("slice_bits", 8))
+    skip = tuple(kwargs.get("skip", ()))
+    (sx, mm, kk) = ins[0].shape
+    (sw, kk2, nn) = ins[1].shape
+    assert kk == kk2, (kk, kk2)
+    pa = sx * slice_bits + 1
+    pb = sw * slice_bits + 1
+    out_prec = min(adaptive_precision(pa, pb, kk, "mac"), 32)
+    w = Workload(
+        name=node,
+        loops=(Loop("x", mm, "data"), Loop("y", nn, "data"), Loop("k", kk, "reduce")),
+        out=Ref("c", ("x", "y"), prec=32),
+        ins=(Ref("a", ("x", "k"), prec=pa), Ref("b", ("k", "y"), prec=pb)),
+        op="mac",
+        acc_prec=32,
+    )
+
+    def bind(vals):
+        x_int, w_int = _dead_slice_ints(
+            np.asarray(vals[0]), np.asarray(vals[1]), skip, slice_bits
+        )
+        return {"a": x_int, "b": w_int}, None, None
+
+    def finalize(raw, _state):
+        return raw.reshape(mm, nn).astype(np.int32)
+
+    return OpLowering(
+        workload=w,
+        out_meta=ValueMeta((mm, nn), out_prec, 0, "int", "int32"),
+        chainable=True,
+        chained={},
+        bind=bind,
+        finalize=finalize,
+    )
+
+
+@_program_lowering("ewise_add")
+def _pl_ewise_add(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    assert ins[0].shape == ins[1].shape, (ins[0].shape, ins[1].shape)
+    shape = ins[0].shape
+    n = int(np.prod(shape)) if shape else 1
+    is_int = ins[0].is_int and ins[1].is_int
+    if is_int:
+        pa, pb = _int_in_prec(ins[0]), _int_in_prec(ins[1])
+        out_prec = max(pa, pb) + 1
+        chained = {
+            buf: pos for buf, pos in (("in_a", 0), ("in_b", 1))
+            if ins[pos].meta is not None
+        }
+        out_dtype = ins[0].aval[1]
+
+        def bind(vals):
+            arrays = {}
+            for key, v in zip(("a", "b"), vals):
+                arrays[key] = None if v is None else np.asarray(v).reshape(n).astype(np.int64)
+            return arrays, None, None
+
+        def finalize(raw, _state):
+            return raw.reshape(shape).astype(np.dtype(out_dtype))
+
+        meta = ValueMeta(shape, out_prec, 0, "int", out_dtype)
+        chainable = True
+    else:
+        pa = pb = 16
+        out_prec = pa + 1
+        chained = {}
+
+        def bind(vals):
+            (xq, yq), frac = _to_fixed_shared(
+                [np.asarray(v).reshape(n) for v in vals], pa
+            )
+            return {"a": xq, "b": yq}, None, frac
+
+        def finalize(raw, frac):
+            return (raw.reshape(shape).astype(np.float64) / (1 << frac)).astype(np.float32)
+
+        meta = ValueMeta(shape, out_prec, -1, "fixed", "float32")
+        chainable = False
+    w = Workload(
+        name=node,
+        loops=(Loop("i", n, "data"),),
+        out=Ref("y", ("i",), prec=out_prec),
+        ins=(Ref("a", ("i",), prec=pa), Ref("b", ("i",), prec=pb)),
+        op="map_add",
+        acc_prec=out_prec,
+    )
+    return OpLowering(w, meta, chainable, chained, bind, finalize)
+
+
+@_program_lowering("relu")
+def _pl_relu(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    shape = ins[0].shape
+    n = int(np.prod(shape)) if shape else 1
+    is_int = ins[0].is_int
+    if is_int:
+        pa = _int_in_prec(ins[0])
+        chained = {"in_a": 0} if ins[0].meta is not None else {}
+        out_dtype = ins[0].aval[1]
+
+        def bind(vals):
+            v = vals[0]
+            return (
+                {"a": None if v is None else np.asarray(v).reshape(n).astype(np.int64)},
+                None,
+                None,
+            )
+
+        def finalize(raw, _state):
+            return raw.reshape(shape).astype(np.dtype(out_dtype))
+
+        meta = ValueMeta(shape, pa, 0, "int", out_dtype)
+        chainable = True
+    else:
+        pa = 16
+        chained = {}
+
+        def bind(vals):
+            xq, frac = _to_fixed(np.asarray(vals[0]).reshape(n), pa)
+            return {"a": xq}, None, frac
+
+        def finalize(raw, frac):
+            return (raw.reshape(shape).astype(np.float64) / (1 << frac)).astype(np.float32)
+
+        meta = ValueMeta(shape, pa, -1, "fixed", "float32")
+        chainable = False
+    w = Workload(
+        name=node,
+        loops=(Loop("i", n, "data"),),
+        out=Ref("y", ("i",), prec=pa),
+        ins=(
+            Ref("a", ("i",), prec=pa),
+            Ref("z", (), prec=pa, is_const=True, const_value=0),
+        ),
+        op="relu",
+        acc_prec=pa,
+    )
+    return OpLowering(w, meta, chainable, chained, bind, finalize)
+
+
+@_program_lowering("htree_reduce")
+def _pl_htree_reduce(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    nred, dd = ins[0].shape
+    is_int = ins[0].is_int
+    if is_int:
+        pa = _int_in_prec(ins[0])
+        out_prec = min(adaptive_precision(pa, 2, nred, "mac"), 32)
+        out_dtype = ins[0].aval[1]
+
+        def bind(vals):
+            return {"a": np.asarray(vals[0]).astype(np.int64)}, None, None
+
+        def finalize(raw, _state):
+            return raw.reshape(dd).astype(np.dtype(out_dtype))
+
+        meta = ValueMeta((dd,), out_prec, 0, "int", out_dtype)
+        chainable = True
+    else:
+        pa = 16
+        out_prec = min(adaptive_precision(pa, 2, nred, "mac"), 32)
+
+        def bind(vals):
+            xq, frac = _to_fixed(np.asarray(vals[0]), pa)
+            return {"a": xq}, None, frac
+
+        def finalize(raw, frac):
+            return (raw.reshape(dd).astype(np.float64) / (1 << frac)).astype(np.float32)
+
+        meta = ValueMeta((dd,), out_prec, -1, "fixed", "float32")
+        chainable = False
+    w = Workload(
+        name=node,
+        loops=(Loop("d", dd, "data"), Loop("n", nred, "reduce")),
+        out=Ref("y", ("d",), prec=32),
+        ins=(
+            Ref("a", ("n", "d"), prec=pa),
+            Ref("one", (), prec=2, is_const=True, const_value=1),
+        ),
+        op="mac",
+        acc_prec=32,
+    )
+    return OpLowering(w, meta, chainable, {}, bind, finalize)
+
+
+@_program_lowering("rglru_scan")
+def _pl_rglru_scan(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    bsz, tt, ww = ins[0].shape
+    # signature-stable conservative fixed-point format (no value calibration:
+    # a cached executor must replay with fresh trajectories)
+    pa, fa = 16, 14
+    fb, ph = 12, 24
+
+    def bind(vals):
+        av, bv, hv = (np.asarray(v) for v in vals)
+        quant = lambda v: _quantize(v, fb, ph)
+        arrays = {
+            "a": _quantize(av, fa, pa).transpose(0, 2, 1),
+            "b": quant(bv).transpose(0, 2, 1),
+        }
+        return arrays, quant(hv), None
+
+    def finalize(raw, _state):
+        hs = raw.reshape(bsz, ww, tt).transpose(0, 2, 1)
+        return (hs.astype(np.float64) / (1 << fb)).astype(np.float32)
+
+    w = Workload(
+        name=node,
+        loops=(Loop("b", bsz, "data"), Loop("w", ww, "data"), Loop("t", tt, "reduce")),
+        out=Ref("h", ("b", "w"), prec=ph),
+        ins=(
+            Ref("a", ("b", "w", "t"), prec=pa, frac=fa),
+            Ref("b", ("b", "w", "t"), prec=ph),
+        ),
+        op="scan_mac",
+        acc_prec=ph,
+    )
+    meta = ValueMeta((bsz, tt, ww), ph, -1, "fixed", "float32")
+    return OpLowering(w, meta, False, {}, bind, finalize)
+
+
+# ---------------------------------------------------------------------------
+# graph assembly, compilation, execution
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CompiledTracedProgram:
+    """An ``api.Program`` lowered once for both machines: the functional
+    fused stream (bit-exact execution) and the static aggregated report from
+    the full-scale timing stream."""
+
+    program: Any                      # repro.kernels.program.Program
+    node_names: Tuple[str, ...]
+    lowerings: Tuple[OpLowering, ...]
+    cg_fn: CompiledGraph
+    report: SimReport
+    cfg_fn: PimsabConfig
+
+
+def compile_traced_program(
+    program,
+    cfg_fn: Optional[PimsabConfig] = None,
+    cfg_timing: Optional[PimsabConfig] = None,
+) -> CompiledTracedProgram:
+    """Lower a traced Program into one WorkloadGraph and compile it for the
+    functional machine (execution) and the full-scale machine (report)."""
+    cfg_fn = cfg_fn or _functional_cfg()
+    cfg_t = cfg_timing or TIMING_CFG
+
+    node_names: List[str] = [f"n{i}.{op.kernel}" for i, op in enumerate(program.ops)]
+    lowerings: List[OpLowering] = []
+    edges: List[GraphEdge] = []
+    for i, op in enumerate(program.ops):
+        builder = _PROGRAM_LOWERINGS.get(op.kernel)
+        if builder is None:
+            raise NotImplementedError(
+                f"kernel {op.kernel!r} has no program lowering for the pimsab "
+                "backend (add one to pimsab_backend._PROGRAM_LOWERINGS)"
+            )
+        descs: List[InDesc] = []
+        for (kind, j) in op.inputs:
+            if kind == "node":
+                lw = lowerings[j]
+                descs.append(InDesc(
+                    aval=(lw.out_meta.shape, lw.out_meta.dtype),
+                    meta=lw.out_meta if lw.chainable else None,
+                ))
+            elif kind == "slot":
+                descs.append(InDesc(aval=program.slot_avals[j]))
+            else:
+                c = program.consts[j]
+                descs.append(InDesc(aval=(tuple(c.shape), str(c.dtype))))
+        low = builder(node_names[i], descs, dict(op.kwargs))
+        lowerings.append(low)
+        chained_pos = set(low.chained.values())
+        pos_to_buf = {pos: buf for buf, pos in low.chained.items()}
+        for pos, (kind, j) in enumerate(op.inputs):
+            if kind != "node":
+                continue
+            buf = pos_to_buf.get(pos) or ("in_a" if pos == 0 else "in_b" if pos == 1 else f"in{pos}")
+            edges.append(GraphEdge(
+                src=node_names[j], dst=node_names[i], dst_input=buf,
+                resident_ok=pos in chained_pos,
+            ))
+
+    outputs = tuple(dict.fromkeys(
+        node_names[j] for (kind, j) in program.out_refs if kind == "node"
+    ))
+    graph = WorkloadGraph(
+        name=program.name,
+        nodes=tuple(low.workload for low in lowerings),
+        edges=tuple(edges),
+        outputs=outputs,
+    )
+    cg_fn = compile_graph(graph, cfg_fn)
+    cg_t = compile_graph(graph, cfg_t)
+    report = _program_report(program, cg_t, cfg_t, functional_instrs=len(cg_fn.program))
+    return CompiledTracedProgram(
+        program=program,
+        node_names=tuple(node_names),
+        lowerings=tuple(lowerings),
+        cg_fn=cg_fn,
+        report=report,
+        cfg_fn=cfg_fn,
+    )
+
+
+def _program_report(
+    program, cg_t: CompiledGraph, cfg: PimsabConfig, functional_instrs: int
+) -> SimReport:
+    """Aggregated timing/energy over the fused stream, attributed per node
+    via the codegen segments, with the cross-kernel DRAM-traffic breakdown."""
+    sim = Simulator(cfg)
+    per_kernel: List[Dict[str, Any]] = []
+    prev: Dict[str, float] = {}
+    for (node, start, end), op in zip(cg_t.segments, program.ops):
+        for ins in cg_t.program[start:end]:
+            sim.step(ins)
+        snap = dict(sim.res.cycles)
+        delta = {k: snap.get(k, 0.0) - prev.get(k, 0.0) for k in snap}
+        per_kernel.append({
+            "kernel": op.kernel,
+            "node": node,
+            "cycles": delta,
+            "total_cycles": sum(delta.values()),
+            "dram_cycles": delta.get("dram", 0.0),
+        })
+        prev = snap
+    res = sim.res
+    gm = cg_t.gm
+    traffic: Dict[str, Dict[str, float]] = {}
+    for w in gm.graph.nodes:
+        eff = dict(gm.mappings[w.name].dram_split)
+        for stream in list(eff):
+            if f"{w.name}:{stream}" in gm.elided_bits:
+                eff[stream] = 0.0
+        traffic[w.name] = eff
+    return SimReport(
+        kernel="program",
+        workload=program.name,
+        total_cycles=res.total_cycles,
+        cycles=dict(res.cycles),
+        cycle_breakdown=res.breakdown(),
+        energy_pj=dict(res.energy.pj),
+        energy_j=res.energy.total_j,
+        modeled_seconds=res.seconds(cfg),
+        instrs=res.instrs,
+        instr_mix=dict(Counter(type(i).__name__ for i in cg_t.program)),
+        mapping=gm.to_json(),
+        functional_instrs=functional_instrs,
+        kernels=program.kernels,
+        per_kernel=tuple(per_kernel),
+        dram_traffic=traffic,
+        elided_dram_bits=gm.total_elided_bits,
+        resident_edges=tuple(f"{e.src}->{e.dst}" for e in gm.resident),
+    )
+
+
+def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> List[Any]:
+    """Run the fused functional stream with fresh slot values; returns the
+    program's output leaves (JAX arrays) and stashes the aggregated report
+    for :func:`last_sim_report`."""
+    import dataclasses
+
+    program = ctp.program
+    gm = ctp.cg_fn.gm
+    cfg = ctp.cfg_fn
+    idx_of = {n: i for i, n in enumerate(ctp.node_names)}
+    planes: Dict[str, _DataPlane] = {}
+    states: Dict[int, Any] = {}
+    values: Dict[int, np.ndarray] = {}
+
+    def slot_value(j: int) -> np.ndarray:
+        v = static_value(leaves[j])
+        if v is None:
+            raise PimsabTracerError(
+                f"program {program.name!r} executed on the pimsab backend "
+                f"needs concrete operands, but input leaf {j} is a jax tracer"
+            )
+        return np.asarray(v)
+
+    def node_value(j: int) -> np.ndarray:
+        if j not in values:
+            node = ctp.node_names[j]
+            plane = planes.get(node)
+            if plane is None:
+                raise RuntimeError(
+                    f"value of {node} requested before its stores executed "
+                    "(graph not topologically ordered?)"
+                )
+            values[j] = ctp.lowerings[j].finalize(plane.out, states.get(j))
+        return values[j]
+
+    def resolve(ref) -> np.ndarray:
+        kind, j = ref
+        if kind == "slot":
+            return slot_value(j)
+        if kind == "const":
+            return np.asarray(program.consts[j])
+        return node_value(j)
+
+    def bind_node(i: int) -> _DataPlane:
+        node = ctp.node_names[i]
+        low = ctp.lowerings[i]
+        resident_pos = {
+            pos for buf, pos in low.chained.items() if gm.is_resident(node, buf)
+        }
+        vals = [
+            None if pos in resident_pos else resolve(ref)
+            for pos, ref in enumerate(program.ops[i].inputs)
+        ]
+        arrays, h0, state = low.bind(vals)
+        states[i] = state
+        plane = _DataPlane(low.workload, gm.mappings[node], cfg, arrays, h0=h0)
+        planes[node] = plane
+        return plane
+
+    def plane_for(tag: str) -> Tuple[_DataPlane, str, int]:
+        node, stream = tag.split(":", 1)
+        plane = planes.get(node)
+        if plane is None:
+            plane = bind_node(idx_of[node])
+        return plane, stream, idx_of[node]
+
+    sim = Simulator(cfg, functional=True)
+    for ins in ctp.cg_fn.program:
+        if isinstance(ins, isa.DramLoad) and ins.tag:
+            plane, stream, i = plane_for(ins.tag)
+            m = gm.mappings[ctp.node_names[i]]
+            stripped = dataclasses.replace(ins, tag=stream)
+            for t in range(m.tiles_used):
+                slab, prec = plane.load(stripped, t)
+                for j in range(slab.shape[0]):
+                    _write_lanes(sim, t, ins.cram_addr + j * prec, slab[j], prec)
+        sim.step(ins)
+        if isinstance(ins, isa.DramStore) and ins.tag and ins.tag.endswith(":out"):
+            plane, stream, i = plane_for(ins.tag)
+            m = gm.mappings[ctp.node_names[i]]
+            stripped = dataclasses.replace(ins, tag=stream)
+            for t in range(m.tiles_used):
+                plane.collect(
+                    stripped, t,
+                    lambda addr, prec, _t=t: _read_lanes(sim, _t, addr, prec, m.lanes_used),
+                )
+    out_leaves = []
+    for (kind, j) in program.out_refs:
+        if kind == "node":
+            out_leaves.append(jnp.asarray(node_value(j)))
+        elif kind == "slot":
+            out_leaves.append(leaves[j])
+        else:
+            out_leaves.append(jnp.asarray(program.consts[j]))
+    _tls.report = ctp.report
+    return out_leaves

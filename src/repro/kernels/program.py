@@ -1,0 +1,476 @@
+"""Graph-level Program API: trace → compile-once → execute.
+
+Eager registry dispatch (``api.use_backend`` + one kernel per call) lowers
+every call in isolation and, on the ``pimsab`` backend, round-trips every
+intermediate through DRAM.  This module adds the opt-in fast path:
+
+* :func:`trace` wraps a function of registry-kernel calls; calling the traced
+  function captures the kernel sequence into a :class:`Program` (a small
+  dataflow IR over slots / captured constants / node outputs).
+* :func:`compile_program` (exported as ``api.compile``) lowers a Program for
+  the active backend **once** and returns a cached :class:`Executor`:
+
+  - ``xla``/``interpret``/``pallas`` — the whole chain replays inside a
+    single ``jax.jit``, so repeated calls never re-trace;
+  - ``pimsab`` — the chain becomes one ``tensor_dsl.WorkloadGraph`` and is
+    distributed/allocated/codegen'd jointly (``pimsab_backend``): integer
+    producer→consumer intermediates stay CRAM-resident and the DRAM
+    store/load pair at the kernel boundary is elided.
+
+* The compile cache is keyed on the program signature (kernel names, operand
+  shapes/dtypes, kwargs such as ``slice_bits``/``skip``, captured-constant
+  fingerprints) plus the backend and — for pimsab — the functional machine
+  config.  :func:`compile_cache_info` exposes hit/miss/size counters so
+  "second compile was a cache hit" is assertable; :func:`cached_executable`
+  shares the same cache with coarser consumers (the serve engine's
+  prefill/decode steps).
+
+Precision note: eager pimsab lowering sizes integer operands from their
+*values* (per-call calibration); program mode must replay with fresh values,
+so it sizes them from the *dtype* — results stay bit-exact, modeled cycles
+differ slightly.
+"""
+from __future__ import annotations
+
+import contextvars
+import hashlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = [
+    "TraceError",
+    "ProgramValue",
+    "OpCall",
+    "Program",
+    "TracedFunction",
+    "trace",
+    "Executor",
+    "compile_program",
+    "compile_cache_info",
+    "clear_compile_cache",
+    "cached_executable",
+    "CacheInfo",
+]
+
+
+class TraceError(TypeError):
+    """A traced function did something the Program IR cannot capture."""
+
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+
+# input references: ("slot", i) — i-th leaf of the call arguments;
+# ("node", i) — output of the i-th captured kernel call;
+# ("const", i) — array captured from the traced function's closure.
+InRef = Tuple[str, int]
+
+
+@dataclass(frozen=True)
+class OpCall:
+    """One captured registry-kernel call."""
+
+    kernel: str
+    inputs: Tuple[InRef, ...]
+    kwargs: Tuple[Tuple[str, Any], ...]
+    pallas_kwargs: Tuple[Tuple[str, Any], ...]
+    out_aval: Tuple[Tuple[int, ...], str]  # (shape, dtype)
+
+
+@dataclass(frozen=True)
+class Program:
+    """A traced sequence of registry kernel calls (the compile unit)."""
+
+    name: str
+    ops: Tuple[OpCall, ...]
+    n_slots: int
+    slot_avals: Tuple[Tuple[Tuple[int, ...], str], ...]
+    consts: Tuple[np.ndarray, ...]
+    in_tree: Any  # jax PyTreeDef of (args, kwargs)
+    out_tree: Any
+    out_refs: Tuple[InRef, ...]
+
+    @property
+    def kernels(self) -> Tuple[str, ...]:
+        return tuple(op.kernel for op in self.ops)
+
+    def signature(self) -> Tuple:
+        """Hashable compile key: everything lowering depends on except the
+        slot *values* — ops, slot avals, both pytree structures, the output
+        refs (programs differing only in what they return must not share an
+        Executor), and a content fingerprint per captured constant (their
+        values are baked into the executor).  Memoized: constant hashing is
+        paid once per Program, not per compile lookup."""
+        sig = getattr(self, "_signature_cache", None)
+        if sig is None:
+            const_fp = tuple(
+                (c.shape, str(c.dtype), hashlib.sha1(np.ascontiguousarray(c)).hexdigest())
+                for c in self.consts
+            )
+            sig = (self.name, self.ops, self.slot_avals, self.in_tree,
+                   self.out_tree, self.out_refs, const_fp)
+            object.__setattr__(self, "_signature_cache", sig)
+        return sig
+
+
+class ProgramValue:
+    """Placeholder for a kernel output inside :func:`trace`.
+
+    It can only be passed to another registry kernel; any other use (jnp
+    arithmetic, ``astype``, materialization) raises :class:`TraceError` with
+    the capture position, so failures are early and named.
+    """
+
+    def __init__(self, node: int, aval: Tuple[Tuple[int, ...], str], kernel: str):
+        self._node = node
+        self._aval = aval
+        self._kernel = kernel
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self._aval[0]
+
+    @property
+    def dtype(self):
+        return np.dtype(self._aval[1])
+
+    @property
+    def ndim(self) -> int:
+        return len(self._aval[0])
+
+    def _refuse(self, what: str):
+        raise TraceError(
+            f"the output of kernel {self._kernel!r} (node {self._node}) is a "
+            f"program-trace placeholder and does not support {what}; inside "
+            "api.trace(...) kernel outputs can only feed other registry "
+            "kernels (or be returned). Compute everything else outside the "
+            "traced function."
+        )
+
+    def __array__(self, *a, **k):
+        self._refuse("materialization")
+
+    def __getattr__(self, name):
+        raise TraceError(
+            f"the output of kernel {self._kernel!r} (node {self._node}) is a "
+            f"program-trace placeholder (no attribute {name!r}); inside "
+            "api.trace(...) kernel outputs can only feed other registry "
+            "kernels or be returned."
+        )
+
+    for _op in ("add", "radd", "sub", "rsub", "mul", "rmul", "truediv",
+                "rtruediv", "matmul", "neg", "lt", "le", "gt", "ge"):
+        exec(  # noqa: S102 - tiny metaprogram, keeps the refusal list in one place
+            f"def __{_op}__(self, *a): self._refuse('arithmetic (__{_op}__)')"
+        )
+    del _op
+
+
+def _aval_of(x: Any) -> Tuple[Tuple[int, ...], str]:
+    if isinstance(x, ProgramValue):
+        return x._aval
+    a = np.asarray(x) if not hasattr(x, "dtype") else x
+    return (tuple(a.shape), str(a.dtype))
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+
+class _TraceCtx:
+    def __init__(self, name: str, leaves: List[Any]):
+        self.name = name
+        self.slots_by_id = {id(l): i for i, l in enumerate(leaves)}
+        self.slot_avals = tuple(_aval_of(l) for l in leaves)
+        self.ops: List[OpCall] = []
+        self.consts: List[Any] = []  # original objects (keeps ids alive)
+        self.consts_by_id: Dict[int, int] = {}
+
+    def _ref(self, a: Any) -> InRef:
+        if isinstance(a, ProgramValue):
+            return ("node", a._node)
+        aid = id(a)
+        if aid in self.slots_by_id:
+            return ("slot", self.slots_by_id[aid])
+        if aid not in self.consts_by_id:
+            self.consts_by_id[aid] = len(self.consts)
+            self.consts.append(a)
+        return ("const", self.consts_by_id[aid])
+
+    @staticmethod
+    def _freeze_kwargs(kw: Optional[Dict[str, Any]]) -> Tuple[Tuple[str, Any], ...]:
+        items = tuple(sorted((kw or {}).items()))
+        try:
+            hash(items)
+        except TypeError:
+            raise TraceError(
+                f"kernel kwargs {kw!r} are not hashable — program signatures "
+                "require static (hashable) kwargs"
+            ) from None
+        return items
+
+    def record(self, kernel: str, args: Tuple[Any, ...], kwargs: Dict[str, Any],
+               pallas_kwargs: Optional[Dict[str, Any]]) -> ProgramValue:
+        from repro.kernels import api
+
+        refs = tuple(self._ref(a) for a in args)
+        # stand-ins for shape inference (node refs use the recorded aval)
+        structs = []
+        for (kind, i), a in zip(refs, args):
+            shp, dt = self.ops[i].out_aval if kind == "node" else _aval_of(a)
+            structs.append(jax.ShapeDtypeStruct(shp, np.dtype(dt)))
+        oracle = api.get_kernel(kernel).oracle
+        out = jax.eval_shape(lambda *xs: oracle(*xs, **(kwargs or {})), *structs)
+        self.ops.append(OpCall(
+            kernel=kernel,
+            inputs=refs,
+            kwargs=self._freeze_kwargs(kwargs),
+            pallas_kwargs=self._freeze_kwargs(pallas_kwargs),
+            out_aval=(tuple(out.shape), str(out.dtype)),
+        ))
+        return ProgramValue(len(self.ops) - 1, (tuple(out.shape), str(out.dtype)), kernel)
+
+
+_trace_ctx: contextvars.ContextVar[Optional[_TraceCtx]] = contextvars.ContextVar(
+    "repro_program_trace_ctx", default=None
+)
+
+
+def active_trace() -> Optional[_TraceCtx]:
+    """The trace context ``api.dispatch`` must record into (None = eager)."""
+    return _trace_ctx.get()
+
+
+class TracedFunction:
+    """``trace(fn)`` wrapper: call it like ``fn`` — each distinct input
+    signature is traced once, compiled once (per backend), then replayed."""
+
+    def __init__(self, fn: Callable[..., Any], name: Optional[str] = None):
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", "program")
+        self._programs: Dict[Tuple, Program] = {}
+        self._lock = threading.Lock()
+
+    def trace(self, *args, **kwargs) -> Program:
+        """Capture a fresh Program for these arguments (no caching)."""
+        leaves, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        return self._trace(leaves, in_tree, args, kwargs)
+
+    def _trace(self, leaves, in_tree, args, kwargs) -> Program:
+        ctx = _TraceCtx(self.name, leaves)
+        token = _trace_ctx.set(ctx)
+        try:
+            result = self.fn(*args, **kwargs)
+        finally:
+            _trace_ctx.reset(token)
+        if not ctx.ops:
+            raise TraceError(
+                f"trace({self.name}) captured no registry kernel calls — "
+                "nothing to compile; call kernels via repro.kernels.api"
+            )
+        out_leaves, out_tree = jax.tree_util.tree_flatten(result)
+        out_refs = tuple(ctx._ref(l) for l in out_leaves)
+        return Program(
+            name=self.name,
+            ops=tuple(ctx.ops),
+            n_slots=len(leaves),
+            slot_avals=ctx.slot_avals,
+            consts=tuple(np.asarray(c) for c in ctx.consts),
+            in_tree=in_tree,
+            out_tree=out_tree,
+            out_refs=out_refs,
+        )
+
+    def program_for(self, *args, **kwargs) -> Program:
+        """The (cached) Program this call signature maps to.
+
+        The per-signature trace cache assumes captured constants (closure
+        arrays) are stable; use this for introspection or when you own that
+        guarantee — ``__call__`` re-traces instead, so it never replays stale
+        constants.
+        """
+        leaves, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        key = (in_tree, tuple(_aval_of(l) for l in leaves))
+        with self._lock:
+            prog = self._programs.get(key)
+        if prog is None:
+            prog = self._trace(leaves, in_tree, args, kwargs)
+            with self._lock:
+                prog = self._programs.setdefault(key, prog)
+        return prog
+
+    def __call__(self, *args, **kwargs):
+        # Re-trace on every call: capture is cheap (one eval_shape per
+        # kernel) and it keeps captured constants honest — an array computed
+        # *from the arguments* inside fn is frozen into the program as a
+        # constant, so replaying a cached trace would silently reuse the old
+        # value.  Fresh constants change the signature's content fingerprint,
+        # which routes to a correct (re)compile instead; only the expensive
+        # lowering is cached.
+        prog = self.trace(*args, **kwargs)
+        ex = compile_program(prog)
+        leaves, _ = jax.tree_util.tree_flatten((args, kwargs))
+        return ex._execute_leaves(leaves)
+
+
+def trace(fn: Callable[..., Any], *, name: Optional[str] = None) -> TracedFunction:
+    """Wrap ``fn`` (a chain of ``repro.kernels.api`` kernel calls) so each
+    call signature is captured once and executed through a cached, compiled
+    :class:`Executor` on the backend active at call time."""
+    return TracedFunction(fn, name=name)
+
+
+# ---------------------------------------------------------------------------
+# executors + compile cache
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CacheInfo:
+    hits: int
+    misses: int
+    size: int
+
+
+class Executor:
+    """A compiled Program bound to one backend.  Call it with the same
+    argument structure the traced function took; re-lowering never happens
+    (``jax.jit`` replay for the TPU-side backends, a fused
+    ``WorkloadGraph`` program for pimsab)."""
+
+    def __init__(self, program: Program, backend: str,
+                 run: Callable[[List[Any]], Any],
+                 report: Optional[Any] = None):
+        self.program = program
+        self.backend = backend
+        self._run = run
+        self.report = report  # aggregated SimReport (pimsab), else None
+
+    def __call__(self, *args, **kwargs):
+        leaves, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        if in_tree != self.program.in_tree:
+            raise TypeError(
+                f"Executor({self.program.name!r}) called with a different "
+                f"argument structure than it was traced with:\n"
+                f"  traced: {self.program.in_tree}\n  got:    {in_tree}"
+            )
+        avals = tuple(_aval_of(l) for l in leaves)
+        if avals != self.program.slot_avals:
+            diffs = [
+                f"  leaf {i}: traced {t}, got {g}"
+                for i, (t, g) in enumerate(zip(self.program.slot_avals, avals))
+                if t != g
+            ]
+            raise TypeError(
+                f"Executor({self.program.name!r}) called with different leaf "
+                "shapes/dtypes than it was compiled for (compile a new "
+                "program for this signature):\n" + "\n".join(diffs)
+            )
+        return self._execute_leaves(leaves)
+
+    def _execute_leaves(self, leaves: List[Any]):
+        out_leaves = self._run(leaves)
+        return jax.tree_util.tree_unflatten(self.program.out_tree, out_leaves)
+
+
+_cache_lock = threading.Lock()
+_cache: Dict[Any, Any] = {}
+_hits = 0
+_misses = 0
+
+
+def compile_cache_info() -> CacheInfo:
+    """Hit/miss/size counters of the global compile cache (Executors + other
+    cached executables such as serve steps)."""
+    with _cache_lock:
+        return CacheInfo(hits=_hits, misses=_misses, size=len(_cache))
+
+
+def clear_compile_cache() -> None:
+    global _hits, _misses
+    with _cache_lock:
+        _cache.clear()
+        _hits = 0
+        _misses = 0
+
+
+def cached_executable(key: Any, build: Callable[[], Any]) -> Any:
+    """Generic compile-once: return the cached artifact for ``key`` or build
+    it (outside the lock — builds can be slow and re-entrant)."""
+    global _hits, _misses
+    with _cache_lock:
+        if key in _cache:
+            _hits += 1
+            return _cache[key]
+    artifact = build()
+    with _cache_lock:
+        if key in _cache:  # lost a race: keep the first, still a miss for us
+            _misses += 1
+            return _cache[key]
+        _misses += 1
+        _cache[key] = artifact
+    return artifact
+
+
+def _jax_run(program: Program, backend: str) -> Callable[[List[Any]], Any]:
+    """Replay the whole program inside one jitted function (compile-once for
+    the jax-side backends)."""
+    from repro.kernels import api
+
+    def replay(leaves, consts):
+        env: Dict[int, Any] = {}
+
+        def resolve(ref):
+            kind, i = ref
+            if kind == "slot":
+                return leaves[i]
+            if kind == "const":
+                return consts[i]
+            return env[i]
+
+        with api.use_backend(backend):
+            for idx, op in enumerate(program.ops):
+                vals = [resolve(r) for r in op.inputs]
+                env[idx] = api.dispatch(
+                    op.kernel, *vals,
+                    pallas_kwargs=dict(op.pallas_kwargs) or None,
+                    **dict(op.kwargs),
+                )
+        return [resolve(r) for r in program.out_refs]
+
+    jitted = jax.jit(replay)
+    consts = [np.asarray(c) for c in program.consts]
+    return lambda leaves: jitted(leaves, consts)
+
+
+def compile_program(program: Program, backend: Optional[str] = None) -> Executor:
+    """Lower ``program`` for ``backend`` (default: the active backend) and
+    return the Executor — cached on (signature, backend[, machine config]),
+    so an identical second compile is a pure cache hit."""
+    from repro.kernels import api
+
+    backend = api._check_backend(backend or api.current_backend())
+    key: Tuple = ("program", program.signature(), backend)
+    if backend == "pimsab":
+        from repro.kernels import pimsab_backend as pb
+
+        key = key + (pb._functional_cfg(),)
+
+        def build() -> Executor:
+            compiled = pb.compile_traced_program(program)
+            return Executor(
+                program, backend,
+                run=lambda leaves: pb.execute_traced_program(compiled, leaves),
+                report=compiled.report,
+            )
+    else:
+        def build() -> Executor:
+            return Executor(program, backend, run=_jax_run(program, backend))
+
+    return cached_executable(key, build)

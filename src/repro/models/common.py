@@ -154,6 +154,50 @@ def linear_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params
     return p
 
 
+# ---------------------------------------------------------------------------
+# Program-built blocks (trace → compile-once → execute)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_relu_chain(x_st: SlicedTensor, w_st: SlicedTensor) -> jnp.ndarray:
+    # scale-less operands: the integer accumulator feeds relu directly, so on
+    # the pimsab backend the intermediate stays CRAM-resident (DRAM elided)
+    return api.relu(api.matmul(x_st, w_st))
+
+
+_matmul_relu = api.trace(_matmul_relu_chain, name="quant_linear_relu")
+
+
+def quant_linear_relu(
+    p: Params, x: jnp.ndarray, spec: Optional[PrecisionSpec] = None
+) -> jnp.ndarray:
+    """``relu(x @ W)`` over a quantized weight, built as one traced Program.
+
+    The matmul→relu chain compiles once per (shape, PrecisionSpec, backend)
+    signature and replays through the cached Executor; on the pimsab backend
+    the linear's accumulator never round-trips through DRAM before the relu.
+    Scales factor out of relu (they are positive by construction), so the
+    program runs in the raw integer domain and dequantizes afterwards.
+    Falls back to the eager composition for tracers (under ``jax.jit``),
+    unquantized params, or a bias (relu doesn't commute with ``+ b``).
+    """
+    spec = spec or PrecisionSpec.int8
+    if "w_q" not in p or "b" in p or api.static_value(x) is None:
+        return jnp.maximum(linear(p, x, spec), 0)
+    lead = x.shape[:-1]
+    x_st = SlicedTensor.quantize(x.reshape(-1, x.shape[-1]), spec)
+    x_raw = SlicedTensor(  # scale-less view: keep zero-slice skip metadata
+        slices=x_st.slices, slice_bits=x_st.slice_bits,
+        orig_bits=x_st.orig_bits, zero_slices=x_st.zero_slices,
+    )
+    w_st = SlicedTensor.from_int(
+        p["w_q"].astype(jnp.int32), spec.weight_bits, slice_bits=spec.slice_bits
+    )
+    raw = _matmul_relu(x_raw, w_st)
+    out = raw.astype(jnp.float32) * x_st.scale.reshape(-1, 1) * p["w_scale"].reshape(1, -1)
+    return out.reshape(*lead, -1).astype(x.dtype)
+
+
 def maybe_quantize_tree(params, cfg, path: str = "") -> Any:
     """Transform a param tree for serving: every linear {'w': ...} leaf-dict
     becomes {'w_q': int8, 'w_scale': f32} (PIMSAB: weights live bit-sliced).

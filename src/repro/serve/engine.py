@@ -6,6 +6,12 @@ term vs. bf16.  Kernel dispatch goes through the backend registry: pass
 ``backend=`` ("xla" on CPU, "pallas" on TPU) to the step builders or
 :class:`ServeEngine` and every registry kernel traced under that step runs
 there (the ``use_backend`` scope is active during tracing).
+
+Prefill/decode steps are compiled **once per signature** through the kernel
+API's global compile cache (``repro.kernels.program.cached_executable``, the
+same cache backing ``api.compile``): constructing a second ServeEngine with
+the same (config, flags, backend, max_len) reuses the jitted steps instead
+of re-tracing/re-lowering them — visible in ``api.compile_cache_info()``.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import MeshRules, cache_entry_spec, param_specs
 from repro.kernels.api import use_backend
+from repro.kernels.program import cached_executable
 from repro.models.common import maybe_quantize_tree
 from repro.models.runtime import DEFAULT_FLAGS, RunFlags
 from repro.models.transformer import (
@@ -111,8 +118,17 @@ class ServeEngine:
         self.cfg, self.flags, self.max_len, self.eos = cfg, flags, max_len, eos
         self.backend = backend
         self.params = maybe_quantize_tree(params, cfg) if flags.quant_serve else params
-        self._prefill = jax.jit(make_prefill_step(cfg, flags, max_len=max_len, backend=backend))
-        self._decode = jax.jit(make_decode_step(cfg, flags, backend=backend))
+        # compile-once: identical engine signatures share the jitted steps
+        # (jax re-traces a fresh lambda per jit object — caching the jitted
+        # callable, not just the XLA executable, avoids that too)
+        self._prefill = cached_executable(
+            ("serve_step", "prefill", repr(cfg), repr(flags), backend, max_len),
+            lambda: jax.jit(make_prefill_step(cfg, flags, max_len=max_len, backend=backend)),
+        )
+        self._decode = cached_executable(
+            ("serve_step", "decode", repr(cfg), repr(flags), backend),
+            lambda: jax.jit(make_decode_step(cfg, flags, backend=backend)),
+        )
 
     def run(self, requests: List[Request]) -> List[Request]:
         b = len(requests)

@@ -3,14 +3,13 @@ context nesting/threading, registry-driven oracle-vs-interpret validation,
 and the zero-slice-skipping regression (the seed computed skip pairs and
 dropped them)."""
 import threading
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import api, ops, ref
+from repro.kernels import api, ref
 from repro.kernels.api import PrecisionSpec, SlicedTensor
 
 
@@ -300,12 +299,12 @@ def test_tracer_weights_disable_static_skip_but_stay_correct():
 
 def test_zero_slice_pairs_version_safe_on_tracers():
     def traced(ws):
-        assert ops.zero_slice_pairs(None, ws) == ()
+        assert api.zero_slice_pairs(None, ws) == ()
         return ws
 
     jax.jit(traced)(jnp.ones((2, 4, 4), jnp.int8))
     concrete = np.stack([np.ones((4, 4)), np.zeros((4, 4))]).astype(np.int8)
-    assert ops.zero_slice_pairs(None, concrete) == ((0, 1),)
+    assert api.zero_slice_pairs(None, concrete) == ((0, 1),)
 
 
 def test_quant_linear_multi_slice_spec():
@@ -327,19 +326,14 @@ def test_quant_linear_multi_slice_spec():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# shim removal
 # ---------------------------------------------------------------------------
 
 
-def test_ops_impl_kwarg_warns_and_matches():
-    x = _int_tensor((128, 128), 8)
-    w = _int_tensor((128, 128), 8, seed=1)
-    xs, ws = ref.to_slices(x, 8), ref.to_slices(w, 8)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        with pytest.raises(DeprecationWarning):
-            ops.bitslice_matmul(xs, ws, impl="xla")
-    got = ops.bitslice_matmul(xs, ws, impl="interpret", block=(128, 128, 128))
-    np.testing.assert_array_equal(
-        np.asarray(ref.int_matmul_wide_ref(x, w, 8, 8)), np.asarray(got)
-    )
+def test_ops_shim_module_is_gone():
+    """The PR-1 `impl=` compatibility shims were kept for one release and are
+    now removed — importing them must fail loudly."""
+    import importlib
+
+    with pytest.raises(ImportError):
+        importlib.import_module("repro.kernels.ops")

@@ -239,11 +239,14 @@ def test_rglru_longer_sequence_error_bounded():
 
 
 def test_pimsab_backend_rejects_tracers():
+    """The refusal is early (from dispatch, before lowering), typed, names
+    the kernel, and points at api.trace / eager mode."""
     x = SlicedTensor.from_int(_ints((8, 8), -10, 10), 8)
     w = SlicedTensor.from_int(_ints((8, 8), -10, 10, seed=1), 8)
     with api.use_backend("pimsab"):
-        with pytest.raises(ValueError, match="concrete operands"):
+        with pytest.raises(api.PimsabTracerError, match="concrete operands") as ei:
             jax.jit(api.matmul)(x, w)
+    assert "'bitslice_matmul'" in str(ei.value) and "api.trace" in str(ei.value)
 
 
 def test_sim_report_is_per_thread_and_refreshed():

@@ -1,0 +1,404 @@
+"""Program API: trace → compile-once → execute.
+
+Covers the acceptance criteria of the graph-level redesign: a traced
+`matmul → ewise_add → relu` chain is bit-exact against the same kernels run
+eagerly on the pimsab backend, its aggregated SimReport shows strictly fewer
+DRAM-traffic cycles than the sum of the eager per-kernel reports (the elided
+store/load pairs), and a second `api.compile` with an identical signature is
+a pure cache hit.  Plus: cache miss behaviour on shape/precision changes,
+thread isolation of `use_backend` with shared cached Executors, the early
+`PimsabTracerError` under `jax.jit`, and the jax-side (jit-replay)
+executors.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import api, ref
+from repro.kernels.api import SlicedTensor
+from repro.kernels import program as kprogram
+
+
+def _ints(shape, lo=-100, hi=100, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, shape), jnp.int32)
+
+
+def _chain(xs, ws, y):
+    return api.relu(api.ewise_add(api.matmul(xs, ws), y))
+
+
+def _chain_operands(m=8, k=8, n=8, seed=0):
+    # K=8 keeps the lane-contiguous matmul layout optimal (reduce_split=1 is
+    # the only legal split), so both chain boundaries are pure elision wins;
+    # larger K exercises the planner's cost-gate instead (see below)
+    x = _ints((m, k), seed=seed)
+    w = _ints((k, n), seed=seed + 1)
+    y = _ints((m, n), seed=seed + 2)
+    return SlicedTensor.from_int(x, 8), SlicedTensor.from_int(w, 8), y
+
+
+# ---------------------------------------------------------------------------
+# acceptance: bit-exactness, DRAM win, compile-cache hit
+# ---------------------------------------------------------------------------
+
+
+def test_traced_chain_bit_exact_and_fewer_dram_cycles_than_eager():
+    xs, ws, y = _chain_operands()
+    with api.use_backend("pimsab"):
+        acc = api.matmul(xs, ws)
+        r_mm = api.last_sim_report()
+        s = api.ewise_add(acc, y)
+        r_add = api.last_sim_report()
+        eager = api.relu(s)
+        r_relu = api.last_sim_report()
+    eager_dram = sum(r.cycles["dram"] for r in (r_mm, r_add, r_relu))
+
+    traced = api.trace(_chain)
+    with api.use_backend("pimsab"):
+        got = traced(xs, ws, y)
+    rep = api.last_sim_report()
+
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(got))
+    # strictly fewer DRAM-traffic cycles: both boundaries were elided
+    assert rep.cycles["dram"] < eager_dram, (rep.cycles["dram"], eager_dram)
+    assert rep.kernel == "program"
+    assert rep.kernels == ("bitslice_matmul", "ewise_add", "relu")
+    assert len(rep.resident_edges) == 2
+    assert rep.elided_dram_bits > 0
+    # cross-kernel DRAM-traffic breakdown: matmul's store and the chained
+    # loads are gone; only external streams remain
+    mm_node, add_node, relu_node = (f"n{i}.{k}" for i, k in enumerate(rep.kernels))
+    assert rep.dram_traffic[mm_node]["out"] == 0.0
+    assert rep.dram_traffic[add_node]["a"] == 0.0
+    assert rep.dram_traffic[add_node]["b"] > 0      # the external y operand
+    assert rep.dram_traffic[relu_node]["a"] == 0.0
+    assert rep.dram_traffic[relu_node]["out"] > 0   # final result leaves chip
+    # per-kernel segments cover the whole fused stream
+    assert [p["kernel"] for p in rep.per_kernel] == list(rep.kernels)
+    assert sum(p["total_cycles"] for p in rep.per_kernel) == pytest.approx(rep.total_cycles)
+
+
+def test_second_compile_with_identical_signature_is_cache_hit():
+    xs, ws, y = _chain_operands(seed=10)
+    traced = api.trace(_chain, name="cache_hit_chain")
+    with api.use_backend("pimsab"):
+        prog = traced.program_for(xs, ws, y)
+        before = api.compile_cache_info()
+        ex1 = api.compile(prog)
+        mid = api.compile_cache_info()
+        ex2 = api.compile(prog)
+        after = api.compile_cache_info()
+    assert mid.misses == before.misses + 1
+    assert after.hits == mid.hits + 1 and after.misses == mid.misses
+    assert ex1 is ex2  # no re-lowering: the very same Executor comes back
+    # identical values through a re-traced-but-equal program also hit
+    prog2 = traced.trace(xs, ws, y)
+    assert prog2.signature() == prog.signature()
+    with api.use_backend("pimsab"):
+        assert api.compile(prog2) is ex1
+
+
+def test_cache_miss_on_shape_and_precision_change():
+    traced = api.trace(_chain, name="cache_miss_chain")
+    with api.use_backend("pimsab"):
+        base = api.compile(traced.program_for(*_chain_operands(seed=20)))
+        info0 = api.compile_cache_info()
+        # same shapes, fresh values: hit
+        api.compile(traced.program_for(*_chain_operands(seed=21)))
+        info1 = api.compile_cache_info()
+        assert info1.hits == info0.hits + 1 and info1.misses == info0.misses
+        # different shape: miss
+        api.compile(traced.program_for(*_chain_operands(m=4, seed=22)))
+        info2 = api.compile_cache_info()
+        assert info2.misses == info1.misses + 1
+        # different precision (int16 activations → two slices): miss
+        xs16 = SlicedTensor.from_int(_ints((8, 8), -3000, 3000, seed=23), 16)
+        _, ws, y = _chain_operands(seed=24)
+        ex16 = api.compile(traced.program_for(xs16, ws, y))
+        info3 = api.compile_cache_info()
+        assert info3.misses == info2.misses + 1
+        assert ex16 is not base
+
+
+def test_executor_replays_with_fresh_values():
+    traced = api.trace(_chain, name="replay_chain")
+    xs, ws, y = _chain_operands(seed=30)
+    with api.use_backend("pimsab"):
+        ex = api.compile(traced.program_for(xs, ws, y))
+        got1 = ex(xs, ws, y)
+        xs2, ws2, y2 = _chain_operands(seed=31)
+        got2 = ex(xs2, ws2, y2)
+        want2 = _chain(xs2, ws2, y2)  # eager chain, same backend
+    np.testing.assert_array_equal(np.asarray(want2), np.asarray(got2))
+    assert not np.array_equal(np.asarray(got1), np.asarray(got2))
+
+
+def test_executor_rejects_wrong_argument_structure():
+    traced = api.trace(_chain, name="structure_chain")
+    xs, ws, y = _chain_operands(seed=40)
+    with api.use_backend("xla"):
+        ex = api.compile(traced.program_for(xs, ws, y))
+        with pytest.raises(TypeError, match="argument structure"):
+            ex(xs, ws)
+        # same structure, different leaf shapes: also a typed refusal, not a
+        # crash deep inside the data plane
+        xs4, ws4, y4 = _chain_operands(m=4, seed=41)
+        with pytest.raises(TypeError, match="leaf shapes"):
+            ex(xs4, ws4, y4)
+
+
+def test_derived_input_constants_do_not_go_stale():
+    """An array computed *from the arguments* inside the traced fn is frozen
+    as a constant; __call__ re-traces per call so fresh inputs reach the
+    kernel (via a recompile), never a stale cached value."""
+    traced = api.trace(
+        lambda x, y: api.ewise_add(x + 0, y), name="derived_const"
+    )
+    y = jnp.zeros((4,), jnp.int32)
+    x1 = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    x2 = jnp.asarray([10, 20, 30, 40], jnp.int32)
+    with api.use_backend("xla"):
+        np.testing.assert_array_equal(np.asarray(traced(x1, y)), np.asarray(x1))
+        np.testing.assert_array_equal(np.asarray(traced(x2, y)), np.asarray(x2))
+
+
+def test_programs_differing_only_in_outputs_do_not_share_executors():
+    xs, ws, y = _chain_operands(seed=45)
+
+    def one(xs, ws, y):
+        s = api.ewise_add(api.matmul(xs, ws), y)
+        return api.relu(s)
+
+    def both(xs, ws, y):
+        s = api.ewise_add(api.matmul(xs, ws), y)
+        return s, api.relu(s)
+
+    p1 = api.trace(one, name="outs").program_for(xs, ws, y)
+    p2 = api.trace(both, name="outs").program_for(xs, ws, y)
+    assert p1.signature() != p2.signature()
+    with api.use_backend("xla"):
+        ex1, ex2 = api.compile(p1), api.compile(p2)
+    assert ex1 is not ex2
+    out2 = ex2(xs, ws, y)
+    assert isinstance(out2, tuple) and len(out2) == 2
+
+
+# ---------------------------------------------------------------------------
+# backends: jit replay (xla/interpret) and thread isolation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_traced_chain_matches_eager_on_jax_backends(backend):
+    xs, ws, y = _chain_operands(seed=50)
+    with api.use_backend(backend):
+        want = _chain(xs, ws, y)
+    traced = api.trace(_chain, name=f"jax_chain_{backend}")
+    with api.use_backend(backend):
+        got = traced(xs, ws, y)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_use_backend_thread_isolation_with_cached_executors():
+    """Each thread compiles under its own backend scope (the cache key
+    includes the backend); the cached Executors are shared objects."""
+    traced = api.trace(_chain, name="thread_chain")
+    xs, ws, y = _chain_operands(seed=60)
+    prog = traced.program_for(xs, ws, y)
+    results = {}
+
+    def worker(backend):
+        with api.use_backend(backend):
+            ex = api.compile(prog)
+            results[backend] = (ex, np.asarray(ex(xs, ws, y)))
+
+    threads = [threading.Thread(target=worker, args=(b,)) for b in ("xla", "interpret")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results["xla"][0].backend == "xla"
+    assert results["interpret"][0].backend == "interpret"
+    assert results["xla"][0] is not results["interpret"][0]
+    np.testing.assert_array_equal(results["xla"][1], results["interpret"][1])
+    # re-compiling on the main thread under either scope hits the shared cache
+    before = api.compile_cache_info()
+    with api.use_backend("interpret"):
+        assert api.compile(prog) is results["interpret"][0]
+    after = api.compile_cache_info()
+    assert after.hits == before.hits + 1
+
+
+def test_cached_executable_is_generic_compile_once():
+    builds = []
+
+    def build():
+        builds.append(1)
+        return object()
+
+    key = ("test_generic", id(build))
+    a = kprogram.cached_executable(key, build)
+    b = kprogram.cached_executable(key, build)
+    assert a is b and len(builds) == 1
+
+
+# ---------------------------------------------------------------------------
+# early tracer error + trace placeholder errors
+# ---------------------------------------------------------------------------
+
+
+def test_pimsab_under_jit_raises_early_named_error():
+    x, y = _ints((4, 8), seed=70), _ints((4, 8), seed=71)
+
+    with api.use_backend("pimsab"):
+        with pytest.raises(api.PimsabTracerError, match="'ewise_add'") as ei:
+            jax.jit(api.ewise_add)(x, y)
+    msg = str(ei.value)
+    assert "api.trace" in msg and "concrete operands" in msg
+
+
+def test_program_value_refuses_non_kernel_use():
+    xs, ws, y = _chain_operands(seed=80)
+
+    def bad(xs, ws, y):
+        acc = api.matmul(xs, ws)
+        return acc + 1  # arithmetic on a trace placeholder
+
+    with pytest.raises(api.TraceError, match="bitslice_matmul"):
+        api.trace(bad)(xs, ws, y)
+
+    def empty(xs):
+        return xs
+
+    with pytest.raises(api.TraceError, match="no registry kernel"):
+        api.trace(empty)(xs)
+
+
+# ---------------------------------------------------------------------------
+# graph shapes beyond the linear chain
+# ---------------------------------------------------------------------------
+
+
+def test_multi_consumer_output_keeps_store_but_elides_consumer_load():
+    """The matmul result is both a program output and relu's input: its DRAM
+    store must stay (the value leaves the chip) while the relu edge can still
+    read it in place."""
+
+    def fanout(xs, ws):
+        acc = api.matmul(xs, ws)
+        return acc, api.relu(acc)
+
+    xs, ws, _ = _chain_operands(seed=90)
+    with api.use_backend("pimsab"):
+        want_acc = api.matmul(xs, ws)
+        want_relu = api.relu(want_acc)
+        got_acc, got_relu = api.trace(fanout)(xs, ws)
+    rep = api.last_sim_report()
+    np.testing.assert_array_equal(np.asarray(want_acc), np.asarray(got_acc))
+    np.testing.assert_array_equal(np.asarray(want_relu), np.asarray(got_relu))
+    mm_node = "n0.bitslice_matmul"
+    assert rep.dram_traffic[mm_node]["out"] > 0          # store kept
+    assert rep.dram_traffic["n1.relu"]["a"] == 0.0       # load still elided
+    assert len(rep.resident_edges) == 1
+
+
+def test_residency_cost_gate_declines_when_repinning_adds_phases():
+    """At K=16 the lane-contiguous producer layout no longer fits one k-chunk
+    (two DRAM phases instead of one): the planner must model that, decline
+    the matmul→add residency, note why — and still win on the add→relu edge,
+    so the program stays strictly below the eager DRAM sum."""
+    xs, ws, y = _chain_operands(k=16, seed=95)
+    with api.use_backend("pimsab"):
+        acc = api.matmul(xs, ws)
+        r_mm = api.last_sim_report()
+        s = api.ewise_add(acc, y)
+        r_add = api.last_sim_report()
+        eager = api.relu(s)
+        r_relu = api.last_sim_report()
+        got = api.trace(_chain, name="cost_gate_chain")(xs, ws, y)
+    rep = api.last_sim_report()
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(got))
+    assert rep.resident_edges == ("n1.ewise_add->n2.relu",)
+    assert any("residency declined" in n for n in rep.mapping["notes"])
+    eager_dram = sum(r.cycles["dram"] for r in (r_mm, r_add, r_relu))
+    assert rep.cycles["dram"] < eager_dram
+
+
+def test_float_chain_keeps_dram_round_trip_and_matches_eager():
+    """Fixed-point boundaries are not resident: each node re-quantizes from
+    the round-tripped value exactly as the eager path does."""
+    x = jax.random.normal(jax.random.key(0), (8, 16), jnp.float32)
+    y = jax.random.normal(jax.random.key(1), (8, 16), jnp.float32)
+
+    def fchain(x, y):
+        return api.relu(api.ewise_add(x, y))
+
+    with api.use_backend("pimsab"):
+        want = fchain(x, y)
+        got = api.trace(fchain)(x, y)
+    rep = api.last_sim_report()
+    assert rep.resident_edges == ()
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    np.testing.assert_allclose(
+        np.asarray(jnp.maximum(x + y, 0)), np.asarray(got), atol=1e-3
+    )
+
+
+def test_traced_htree_reduce_and_rglru_on_pimsab():
+    """Program lowering covers the non-map kernels too (no residency, but
+    one compile + cached replay)."""
+    xr = _ints((8, 16), -50, 50, seed=100)
+    with api.use_backend("pimsab"):
+        got = api.trace(lambda v: api.htree_reduce(v), name="prog_htree")(xr)
+    np.testing.assert_array_equal(np.asarray(xr).sum(axis=0), np.asarray(got))
+
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(2), (1, 6, 12)))
+    b = jax.random.normal(jax.random.key(3), (1, 6, 12))
+    h0 = jax.random.normal(jax.random.key(4), (1, 12))
+    with api.use_backend("pimsab"):
+        got = api.trace(
+            lambda a, b, h0: api.rglru_scan(a, b, h0), name="prog_rglru"
+        )(a, b, h0)
+    np.testing.assert_allclose(
+        np.asarray(ref.rglru_scan_ref(a, b, h0)), np.asarray(got), atol=5e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# model-layer integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pimsab"])
+def test_quant_linear_relu_program_block(backend):
+    from repro.models.common import quant_linear_relu, quantize_weight
+
+    # d_in=8 keeps the matmul in the pure-elision regime (reduce_split=1 is
+    # its only legal layout), so the accumulator→relu boundary goes resident
+    x = jax.random.normal(jax.random.key(5), (8, 8), jnp.float32)
+    w = jax.random.normal(jax.random.key(6), (8, 16), jnp.float32) * 0.1
+    p = quantize_weight(w, 8)
+    want = jnp.maximum(x @ w, 0)
+    with api.use_backend(backend):
+        got = quant_linear_relu(p, x)
+    rel = float(jnp.abs(got - want).max() / (jnp.abs(want).max() + 1e-9))
+    assert rel < 0.05, rel
+    if backend == "pimsab":
+        rep = api.last_sim_report()
+        assert rep.kernel == "program" and len(rep.resident_edges) == 1
+
+
+def test_quant_linear_relu_falls_back_under_jit():
+    from repro.models.common import quant_linear_relu, quantize_weight
+
+    x = jax.random.normal(jax.random.key(7), (4, 16), jnp.float32)
+    w = jax.random.normal(jax.random.key(8), (16, 8), jnp.float32) * 0.1
+    p = quantize_weight(w, 8)
+    got = jax.jit(lambda xx: quant_linear_relu(p, xx))(x)
+    want = jnp.maximum(x @ w, 0)
+    rel = float(jnp.abs(got - want).max() / (jnp.abs(want).max() + 1e-9))
+    assert rel < 0.05, rel
