@@ -19,15 +19,29 @@ A **program-mode** section runs the `matmul → ewise_add → relu` chain throug
 fused-vs-eager DRAM-cycle win (the elided store/load pairs) plus the compile
 cache behaviour — pinning the Program API's headline number as an artifact.
 
+Since the phase-timeline refactor, every pimsab entry carries both clocks:
+``modeled_cycles`` is the overlapped makespan (double-buffered / staggered
+schedules hide DRAM streaming behind compute), ``serialized_cycles`` the
+fully-dependent sum, ``overlapped_cycles`` the win, plus the critical-path
+breakdown and per-resource utilization.  A **large_shapes** section models
+real layer shapes (256×1024×1024 matmul, 64k-element elementwise) timing-only
+at full chip scale — the shapes that actually exercise multi-phase
+pipelining, far beyond what bit-serial functional simulation can chew.
+
 ``run()`` returns the row list for benchmarks/run.py; ``main()`` also writes
 ``BENCH_kernels.json`` at the repo root so future PRs have a baseline to
 compare against.  ``main(check=True)`` (CLI: ``--check``) first diffs the
-fresh *modeled* cycles against the committed baseline and fails on a >5%
-regression — wall-clock numbers are machine-dependent and are not gated.
+fresh *modeled* cycles (per-kernel, large-shape, and program-mode) against
+the committed baseline and fails on a >5% regression — wall-clock numbers
+are machine-dependent and are not gated.  ``main(profile=True)`` (CLI:
+``--profile``) additionally records per-instruction scheduling intervals and
+writes them to ``BENCH_kernels_timeline.json`` (uploaded by CI) — the
+per-phase timeline artifact.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 from pathlib import Path
@@ -41,6 +55,7 @@ from repro.kernels import api, ref
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 OUT_PATH = REPO_ROOT / "BENCH_kernels.json"
+TIMELINE_PATH = REPO_ROOT / "BENCH_kernels_timeline.json"
 
 # Bench operand builders per registered kernel: (bench shape, reduced
 # validation shape).  A kernel registered without an entry here still fails
@@ -221,8 +236,12 @@ def run() -> List[Dict]:
             "matches_oracle": matches,
             "workload": rep.workload,
             "modeled_cycles": rep.total_cycles,
+            "serialized_cycles": rep.serialized_cycles,
+            "overlapped_cycles": rep.overlapped_cycles,
             "modeled_seconds": rep.modeled_seconds,
             "cycle_breakdown": {k: round(v, 4) for k, v in rep.cycle_breakdown.items()},
+            "critical_path": {k: round(v, 1) for k, v in rep.critical_path.items()},
+            "utilization": {k: round(v, 4) for k, v in rep.utilization.items()},
             "energy_j": rep.energy_j,
             "instrs": rep.instrs,
             "functional_instrs": rep.functional_instrs,
@@ -231,10 +250,78 @@ def run() -> List[Dict]:
     return rows
 
 
-def program_mode() -> Dict:
+# real layer shapes (timing-only — the functional bit-serial machine cannot
+# chew them, but the full-scale analytic model can): these are the shapes
+# where multi-phase pipelining actually matters
+def _large_shape_workloads():
+    from repro.core.compiler.tensor_dsl import Loop, Ref, Workload
+
+    gemm = Workload(
+        name="matmul_256x1024x1024_i8",
+        loops=(Loop("x", 256, "data"), Loop("y", 1024, "data"),
+               Loop("k", 1024, "reduce")),
+        out=Ref("c", ("x", "y"), prec=32),
+        ins=(Ref("a", ("x", "k"), prec=9), Ref("b", ("k", "y"), prec=9)),
+        op="mac",
+        acc_prec=32,
+    )
+    ewise = Workload(
+        name="ewise_add_65536_i16",
+        loops=(Loop("i", 65536, "data"),),
+        out=Ref("y", ("i",), prec=17),
+        ins=(Ref("xa", ("i",), prec=16), Ref("xb", ("i",), prec=16)),
+        op="map_add",
+        acc_prec=17,
+    )
+    relu = Workload(
+        name="relu_65536_i16",
+        loops=(Loop("i", 65536, "data"),),
+        out=Ref("y", ("i",), prec=16),
+        ins=(Ref("xa", ("i",), prec=16),
+             Ref("z", ("i",), prec=16, is_const=True, const_value=0)),
+        op="relu",
+        acc_prec=16,
+    )
+    return [gemm, ewise, relu]
+
+
+def large_shapes(timelines: Optional[Dict] = None) -> List[Dict]:
+    """Model the large shapes; when a ``timelines`` dict is passed (and
+    profiling is active, see main), harvest each report's per-instruction
+    scheduling intervals into it — same pass, no re-modeling."""
+    from repro.kernels import pimsab_backend as pb
+
+    rows = []
+    for w in _large_shape_workloads():
+        rep = pb.timing_report(w, kernel=w.name)
+        rows.append({
+            "workload": w.name,
+            "modeled_cycles": rep.total_cycles,
+            "serialized_cycles": rep.serialized_cycles,
+            "overlapped_cycles": rep.overlapped_cycles,
+            "modeled_seconds": rep.modeled_seconds,
+            "cycle_breakdown": {k: round(v, 4) for k, v in rep.cycle_breakdown.items()},
+            "critical_path": {k: round(v, 1) for k, v in rep.critical_path.items()},
+            "utilization": {k: round(v, 4) for k, v in rep.utilization.items()},
+            "double_buffered": rep.mapping["double_buffered"],
+            "serial_iters": rep.mapping["serial_iters"],
+            "instrs": rep.instrs,
+        })
+        if timelines is not None and rep.timeline:
+            timelines[w.name] = {
+                "modeled_cycles": rep.total_cycles,
+                "overlapped_cycles": rep.overlapped_cycles,
+                "utilization": {k: round(v, 4) for k, v in rep.utilization.items()},
+                "timeline": [dict(t) for t in rep.timeline],
+            }
+    return rows
+
+
+def program_mode(timelines: Optional[Dict] = None) -> Dict:
     """The traced `matmul → ewise_add → relu` chain on the pimsab backend:
     fused DRAM cycles vs the eager per-kernel sum, bit-exactness, and the
-    compile-cache hit on the second identical compile."""
+    compile-cache hit on the second identical compile.  ``timelines`` as in
+    :func:`large_shapes` — the fused chain's schedule joins the artifact."""
     rng = np.random.default_rng(_SEED)
     # K small enough that the lane-contiguous (reduce_split=1) producer
     # layout still fits one k-chunk — the regime where residency wins; the
@@ -266,10 +353,21 @@ def program_mode() -> Dict:
         rep = api.last_sim_report()
         api.compile(traced.program_for(xs, ws, y))  # identical signature
     after = api.compile_cache_info()
+    if timelines is not None and rep.timeline:
+        timelines["program:" + "->".join(rep.kernels)] = {
+            "modeled_cycles": rep.total_cycles,
+            "overlapped_cycles": rep.overlapped_cycles,
+            "utilization": {k: round(v, 4) for k, v in rep.utilization.items()},
+            "timeline": [dict(t) for t in rep.timeline],
+        }
     return {
         "chain": list(rep.kernels),
         "bit_exact_vs_eager": bool((np.asarray(got) == np.asarray(eager)).all()),
         "modeled_cycles": rep.total_cycles,
+        "serialized_cycles": rep.serialized_cycles,
+        "overlapped_cycles": rep.overlapped_cycles,
+        "critical_path": {k: round(v, 1) for k, v in rep.critical_path.items()},
+        "utilization": {k: round(v, 4) for k, v in rep.utilization.items()},
         "dram_cycles": rep.cycles["dram"],
         "eager_dram_cycles_sum": eager_dram,
         "eager_modeled_cycles_sum": eager_total,
@@ -314,6 +412,10 @@ def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> L
     for row in result["kernels"]:
         old = base_rows.get(row["kernel"], {}).get("pimsab", {}).get("modeled_cycles")
         gate(row["kernel"], row["pimsab"]["modeled_cycles"], old)
+    base_large = {r["workload"]: r for r in baseline.get("large_shapes", [])}
+    for row in result["large_shapes"]:
+        old = base_large.get(row["workload"], {}).get("modeled_cycles")
+        gate(f"large:{row['workload']}", row["modeled_cycles"], old)
     gate(
         "program:modeled",
         result["program"]["modeled_cycles"],
@@ -327,8 +429,18 @@ def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> L
     return failures
 
 
-def main(check: bool = False) -> Dict:
-    result = {"kernels": run(), "program": program_mode()}
+def main(check: bool = False, profile: bool = False) -> Dict:
+    # per-phase timeline artifact: collected from the SAME modeling pass the
+    # bench rows come from (no double compile) — the large shapes plus the
+    # fused program chain
+    timelines: Optional[Dict] = {} if profile else None
+    profile_ctx = api.profile_timelines() if profile else contextlib.nullcontext()
+    with profile_ctx:
+        result = {
+            "kernels": run(),
+            "large_shapes": large_shapes(timelines),
+            "program": program_mode(timelines),
+        }
     if check:
         if not OUT_PATH.exists():
             raise SystemExit(f"--check: no committed baseline at {OUT_PATH}")
@@ -341,7 +453,12 @@ def main(check: bool = False) -> Dict:
             raise SystemExit(1)
         print("kernels_bench --check: OK (modeled cycles within 5% of baseline)")
     OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+    if profile:
+        TIMELINE_PATH.write_text(json.dumps(timelines, indent=2) + "\n")
+        print(f"wrote {TIMELINE_PATH}")
     for r in result["kernels"]:
+        print(r)
+    for r in result["large_shapes"]:
         print(r)
     print("program:", result["program"])
     print(f"wrote {OUT_PATH}")
@@ -355,4 +472,10 @@ if __name__ == "__main__":
         help="diff modeled cycles against the committed BENCH_kernels.json "
         "baseline and exit 1 on a >5%% regression before overwriting it",
     )
-    main(check=ap.parse_args().check)
+    ap.add_argument(
+        "--profile", action="store_true",
+        help="also write BENCH_kernels_timeline.json: per-instruction "
+        "scheduling intervals (the per-phase timeline artifact CI uploads)",
+    )
+    args = ap.parse_args()
+    main(check=args.check, profile=args.profile)

@@ -65,7 +65,11 @@ def run_workload(
         "name": w.name,
         "time_s": res.seconds(cfg),
         "cycles": res.total_cycles,
+        "serialized_cycles": res.serialized_cycles,
+        "overlapped_cycles": res.overlapped_cycles,
         "cycle_breakdown": res.breakdown(),
+        "critical_path": res.critical_breakdown(),
+        "utilization": res.utilization(),
         "energy_j": res.energy.total_j,
         "energy_breakdown": res.energy.breakdown(),
         "mapping": cp.mapping.to_json(),

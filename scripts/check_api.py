@@ -59,6 +59,7 @@ API_SYMBOLS = [
     "ewise_add",
     "relu",
     "last_sim_report",
+    "profile_timelines",
     "zero_slice_pairs",
     # Program API
     "trace",

@@ -15,6 +15,12 @@ CRAM-resident for a downstream consumer, whose wordlines are reserved from
 the producing op through the consuming op.  A consumer's chained input is
 *pinned* to the producer's output range (same wordlines, no new space), which
 is what lets codegen elide the DRAM store/load pair at the boundary.
+
+Double-buffered schedules (``distribute.mapping_buffer_reqs``) append
+``<name>.alt`` requests — the second A/B chunk region the prefetched DRAM
+transfer lands in while compute reads the primary.  They allocate like any
+other buffer (first-fit, fragmentable) and simply drop out of the plan when
+the capacity check fails: overlap is an upgrade, never a requirement.
 """
 from __future__ import annotations
 

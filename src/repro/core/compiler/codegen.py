@@ -2,9 +2,26 @@
 
 The emitted stream is the per-tile SIMD program (every tile executes it on
 its own data slice; the simulator charges DRAM/NoC instructions with
-chip-total bits).  Schedules are conservative/synchronous — data-transfer
-phases serialize against compute, matching the paper's compiler (the Fig. 14
-hand-tuned gap comes exactly from this).
+chip-total bits).  Schedules are *phased*: every instruction carries a
+``phase`` completion token and ``after`` dependency tokens (core.isa), so
+the phase-timeline simulator can overlap DRAM streaming, the systolic NoC
+broadcast pipeline (Fig. 5) and H-tree distribution with bit-serial compute
+wherever the dependencies allow:
+
+* multi-phase kernels (serial output chunks, k-chunked reductions) emit
+  **double-buffered** schedules when the mapping allocated second A/B chunk
+  regions (``Mapping.double_buffered``): the next chunk's DRAM load waits on
+  the compute that is *two* chunks back, prefetching during the current
+  chunk's MACs/adds;
+* single-step streaming elementwise kernels split their tiles into
+  staggered groups — each group's per-tile controllers start computing as
+  soon as that group's DRAM slice lands, and its store drains while the next
+  group computes (loads/stores still serialize on the one DRAM channel).
+
+The emission *order* of dependent instructions is unchanged from the
+serialized schedule — the functional machine executes in program order, so
+results are bit-exact regardless of the modeled overlap; only the tags (and
+buffer parity addresses) differ.
 
 Programs are *functionally executable*: DRAM instructions carry a data-plane
 ``tag`` ("in_a"/"in_b"/"h0"/"out") and a ``fields`` count so a binder (see
@@ -18,9 +35,10 @@ the half-width live window and was not executable).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import FrozenSet, List, Optional, Tuple
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
 from repro.core import isa
 from repro.core.compiler.allocation import mul_live_window
@@ -32,6 +50,11 @@ from repro.core.compiler.distribute import (
 )
 from repro.core.compiler.tensor_dsl import Workload, WorkloadGraph
 from repro.core.machine import PimsabConfig
+
+# staggered tile groups for single-step streaming elementwise kernels: the
+# DRAM stream is cut into this many per-tile-group slices so compute/store
+# of one group overlaps the next group's load
+_MAP_STREAM_GROUPS = 4
 
 
 @dataclass
@@ -51,7 +74,10 @@ class CompiledGraph:
     the simulator can attribute cycles per kernel; DRAM instructions carry
     node-prefixed tags (``"node:in_a"``) for the data-plane binder.  Boundary
     DRAM store/load pairs of resident edges are *absent* from the stream —
-    the consumer's compute reads the producer's accumulator wordlines.
+    the consumer's compute reads the producer's accumulator wordlines.  The
+    first instruction of every segment is a timeline **barrier**: nodes may
+    reuse each other's dead wordlines, so modeling cross-node overlap would
+    race the reuse.
     """
 
     program: List[isa.Instr]
@@ -68,9 +94,26 @@ def _addr(mapping: Mapping, name: str) -> int:
     return rng[0][0] if rng else 0
 
 
+def _alt_addr(mapping: Mapping, name: str, fallback: int) -> int:
+    """Start of the second (B) chunk region, or the primary when absent."""
+    rng = mapping.allocation.ranges.get(f"{name}.alt") if mapping.allocation else None
+    return rng[0][0] if rng else fallback
+
+
 def _zero(addr: int, prec: int) -> isa.Instr:
     """Bit-serial zeroing idiom: x XOR x (one micro-op per wordline)."""
     return isa.Logical(dst=addr, src1=addr, prec1=prec, src2=addr, prec2=prec, op="xor")
+
+
+def _tile_groups(tiles_used: int, n_groups: int) -> List[Tuple[int, ...]]:
+    """Partition tiles [0, tiles_used) into contiguous streaming groups."""
+    n = max(1, min(n_groups, tiles_used))
+    bounds = [round(i * tiles_used / n) for i in range(n + 1)]
+    return [
+        tuple(range(bounds[i], bounds[i + 1]))
+        for i in range(n)
+        if bounds[i] < bounds[i + 1]
+    ]
 
 
 def compile_workload(
@@ -88,11 +131,22 @@ def compile_workload(
     of re-running the search.  ``elide`` ⊆ {"in_a", "in_b", "out"} drops the
     corresponding DRAM instructions — the buffer is CRAM-resident across a
     graph edge and its addresses already alias the neighbour op's allocation.
-    ``tag_prefix`` namespaces the data-plane tags per graph node.
+    ``tag_prefix`` namespaces the data-plane tags *and* the phase tokens per
+    graph node.
     """
     m = mapping if mapping is not None else distribute(w, cfg)
     tp = tag_prefix
     prog: List[isa.Instr] = []
+
+    def emit(ins: isa.Instr, phase: Optional[str] = None,
+             after: Tuple[Optional[str], ...] = (), barrier: bool = False) -> None:
+        prog.append(dataclasses.replace(
+            ins,
+            phase=(tp + phase) if phase else None,
+            after=tuple(tp + a for a in after if a),
+            barrier=barrier,
+        ))
+
     pa = w.ins[0].prec
     pb = w.ins[1].prec if len(w.ins) > 1 else pa
     d = w.total_out_elems()
@@ -110,87 +164,233 @@ def compile_workload(
     if w.op in ("map_add", "map_mul", "relu"):
         pred_addr = _addr(m, "pred")
         const_b = len(w.ins) > 1 and w.ins[1].is_const
+        loads_a = "in_a" not in elide
+        loads_b = len(w.ins) > 1 and not const_b and "in_b" not in elide
+        stores = "out" not in elide
         if const_b and w.op == "map_mul":
-            prog.append(isa.RfLoad(reg=0, value=w.ins[1].const_value or 1))
-        for step in range(m.serial_iters):
-            if "in_a" not in elide:
-                prog.append(isa.DramLoad(
-                    dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters),
-                    prec=pa, tag=tp + "in_a",
-                ))
-            if len(w.ins) > 1 and not const_b and "in_b" not in elide:
-                prog.append(isa.DramLoad(
-                    dram_addr=0, cram_addr=b_addr, bits=int(b_total / m.serial_iters),
-                    prec=pb, tag=tp + "in_b",
-                ))
+            emit(isa.RfLoad(reg=0, value=w.ins[1].const_value or 1), barrier=True)
+        a_alt = _alt_addr(m, "in_a", a_addr)
+        b_alt = _alt_addr(m, "in_b", b_addr)
+        out_alt = _alt_addr(m, "out", out_addr)
+        db_a = m.double_buffered and loads_a and a_alt != a_addr
+        db_b = m.double_buffered and loads_b and b_alt != b_addr
+        db_out = m.double_buffered and stores and out_alt != out_addr
+        # single-step kernels stream via staggered tile groups (disjoint
+        # tiles: no buffer hazard between groups); multi-step kernels stream
+        # via double-buffered serial iterations on the same tiles.  Grouping
+        # pays a (groups-1)-deep pipeline-fill tail, so it only engages when
+        # the DRAM streams are long enough to amortize it — short transfers
+        # already overlap their burst latencies on the pipelined channel.
+        stream_est = max(
+            a_total if loads_a else 0.0,
+            b_total if loads_b else 0.0,
+            out_total if stores else 0.0,
+        ) / cfg.dram_bw_bits
+        if (
+            m.serial_iters == 1 and m.tiles_used > 1
+            and (loads_a or loads_b or stores)
+            and stream_est >= 4 * _MAP_STREAM_GROUPS
+        ):
+            groups = _tile_groups(m.tiles_used, _MAP_STREAM_GROUPS)
+        else:
+            # one group spanning the mapping's tiles — explicit, so energy
+            # accounting (active tiles) is identical whether or not the
+            # stream was split into staggered groups
+            groups = [tuple(range(m.tiles_used))]
+        n_slices = m.serial_iters * len(groups)
+        # prefetching the next step's inputs while this one computes is only
+        # *emittable* (program order == functional order) when every loaded
+        # operand has a second buffer region to land in
+        prefetch = (
+            len(groups) == 1
+            and (db_a or db_b)
+            and (db_a or not loads_a)
+            and (db_b or not loads_b)
+        )
+
+        def emit_map_loads(i: int, gt: Tuple[int, ...], same_tiles: bool) -> None:
+            parity = i % 2
+            if loads_a:
+                j = (i - 2 if db_a else i - 1) if same_tiles else -1
+                emit(isa.DramLoad(
+                    tiles=gt, dram_addr=0,
+                    cram_addr=a_alt if (db_a and parity) else a_addr,
+                    bits=int(a_total / n_slices), prec=pa, tag=tp + "in_a",
+                ), phase=f"la{i}", after=(f"cp{j}",) if j >= 0 else ())
+            if loads_b:
+                j = (i - 2 if db_b else i - 1) if same_tiles else -1
+                emit(isa.DramLoad(
+                    tiles=gt, dram_addr=0,
+                    cram_addr=b_alt if (db_b and parity) else b_addr,
+                    bits=int(b_total / n_slices), prec=pb, tag=tp + "in_b",
+                ), phase=f"lb{i}", after=(f"cp{j}",) if j >= 0 else ())
+
+        def emit_map_compute(i: int, gt: Tuple[int, ...], same_tiles: bool) -> str:
+            parity = i % 2
+            aa = a_alt if (db_a and parity) else a_addr
+            bb = b_alt if (db_b and parity) else b_addr
+            oa = out_alt if (db_out and parity) else out_addr
+            war: Tuple[Optional[str], ...] = ()
+            if stores and same_tiles:
+                # the compute overwrites the out buffer the previous
+                # step's store reads (two back when out is A/B-buffered)
+                j = i - 2 if db_out else i - 1
+                if j >= 0:
+                    war = (f"st{j}",)
+            cp_after: Tuple[Optional[str], ...] = war + (
+                f"la{i}" if loads_a else None, f"lb{i}" if loads_b else None,
+            )
+            cp = f"cp{i}"
             if w.op == "map_add":
-                prog.append(isa.Add(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, src2=b_addr, prec2=pb))
+                emit(isa.Add(tiles=gt, dst=oa, prec_dst=m.out_prec,
+                             src1=aa, prec1=pa, src2=bb, prec2=pb),
+                     phase=cp, after=cp_after)
             elif w.op == "map_mul":
                 if const_b:
-                    prog.append(isa.MulConst(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, reg=0))
+                    emit(isa.MulConst(tiles=gt, dst=oa, prec_dst=m.out_prec,
+                                      src1=aa, prec1=pa, reg=0),
+                         phase=cp, after=cp_after)
                 else:
-                    prog.append(isa.Mul(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, src2=b_addr, prec2=pb))
+                    emit(isa.Mul(tiles=gt, dst=oa, prec_dst=m.out_prec,
+                                 src1=aa, prec1=pa, src2=bb, prec2=pb),
+                         phase=cp, after=cp_after)
             else:  # relu: out = a where a >= 0 else 0 (predicated copy onto zeros)
-                prog.append(_zero(out_addr, m.out_prec))
-                prog.append(isa.CmpGE(dst=pred_addr, src1=a_addr, prec1=pa, src2=out_addr, prec2=pa))
-                prog.append(isa.SetMask(src=pred_addr))
-                prog.append(isa.Copy(dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa, pred=isa.Pred.MASK))
-            if "out" not in elide:
-                prog.append(isa.DramStore(
-                    dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters),
-                    prec=m.out_prec, tag=tp + "out",
-                ))
+                # the zeroing touches only the out buffer — it runs under the
+                # DRAM fetch's shadow (no data dependence on the input)
+                emit(dataclasses.replace(_zero(oa, m.out_prec), tiles=gt),
+                     phase=cp, after=war)
+                emit(isa.CmpGE(tiles=gt, dst=pred_addr, src1=aa, prec1=pa,
+                               src2=oa, prec2=pa), phase=cp, after=cp_after)
+                emit(isa.SetMask(tiles=gt, src=pred_addr), phase=cp, after=cp_after)
+                emit(isa.Copy(tiles=gt, dst=oa, prec_dst=m.out_prec, src1=aa,
+                              prec1=pa, pred=isa.Pred.MASK), phase=cp, after=cp_after)
+            return cp
+
+        def emit_map_store(i: int, gt: Tuple[int, ...]) -> None:
+            oa = out_alt if (db_out and i % 2) else out_addr
+            emit(isa.DramStore(
+                tiles=gt, dram_addr=0, cram_addr=oa,
+                bits=int(out_total / n_slices), prec=m.out_prec, tag=tp + "out",
+            ), phase=f"st{i}", after=(f"cp{i}",))
+
+        if len(groups) > 1:
+            # all group loads first (back-to-back on the DRAM channel: a
+            # store waiting on compute must not block a later group's load),
+            # computes as each group's slice lands, stores as each finishes
+            for g, gt in enumerate(groups):
+                emit_map_loads(g, gt, same_tiles=False)
+                emit_map_compute(g, gt, same_tiles=False)
+            if stores:
+                for g, gt in enumerate(groups):
+                    emit_map_store(g, gt)
+        else:
+            gt = groups[0]
+            for step in range(m.serial_iters):
+                if step == 0 or not prefetch:
+                    emit_map_loads(step, gt, same_tiles=True)
+                if prefetch and step + 1 < m.serial_iters:
+                    # next step's inputs land in the alt regions while this
+                    # step computes and its store drains
+                    emit_map_loads(step + 1, gt, same_tiles=True)
+                emit_map_compute(step, gt, same_tiles=True)
+                if stores:
+                    emit_map_store(step, gt)
 
     elif w.op == "mac":
         k_lane = k // m.reduce_split
         n_chunks = max(1, k_lane // m.k_chunk)
         n_phases = m.serial_iters * n_chunks
         const_b = w.ins[1].is_const
+        loads_a = "in_a" not in elide
+        loads_b = (not const_b) and "in_b" not in elide
+        stores = "out" not in elide
         if const_b:
-            prog.append(isa.RfLoad(reg=0, value=w.ins[1].const_value or 1))
+            emit(isa.RfLoad(reg=0, value=w.ins[1].const_value or 1), barrier=True)
+        a_alt = _alt_addr(m, "in_a", a_addr)
+        b_alt = _alt_addr(m, "in_b", b_addr)
+        db_a = m.double_buffered and loads_a and a_alt != a_addr
+        db_b = m.double_buffered and loads_b and b_alt != b_addr
+        # software-pipelined emission: the next chunk's loads are emitted
+        # *before* the current chunk's MACs (and before the step's reduce +
+        # store), so the DRAM channel never idles behind a store that is
+        # itself waiting on compute.  Legal in program order only with A/B
+        # buffers — the prefetch lands in the region the MACs are not reading.
+        prefetch = (db_a or db_b) and (db_a or not loads_a) and (db_b or not loads_b)
+        n_total = m.serial_iters * n_chunks
+
+        def emit_mac_loads(ci: int) -> None:
+            parity = ci % 2
+            if loads_a:
+                # WAR: don't overwrite the chunk the MACs still read —
+                # two chunks back with A/B buffers (the prefetch window),
+                # one back without
+                j = ci - 2 if db_a else ci - 1
+                emit(isa.DramLoad(
+                    dram_addr=0, cram_addr=a_alt if (db_a and parity) else a_addr,
+                    bits=int(a_total / n_phases), prec=pa,
+                    tag=tp + "in_a", fields=m.k_chunk,
+                ), phase=f"la{ci}", after=(f"cp{j}",) if j >= 0 else ())
+            if loads_b:
+                # shared operand: one DRAM load, systolic NoC broadcast,
+                # H-tree shuffle-distribution to CRAMs (§III-B) — one
+                # pipelined instruction (Fig. 5); the timeline lets the
+                # receive overlap the previous chunk's compute
+                j = ci - 2 if db_b else ci - 1
+                emit(isa.DramLoad(
+                    dram_addr=0, cram_addr=b_alt if (db_b and parity) else b_addr,
+                    bits=int(b_total / n_phases), prec=pb,
+                    shf=isa.ShufflePattern.STRIDE,
+                    bcast_tiles=m.tiles_used,
+                    tag=tp + "in_b", fields=m.k_chunk,
+                ), phase=f"lb{ci}", after=(f"cp{j}",) if j >= 0 else ())
+
+        prev_tail: Optional[str] = None  # store (or reduce) of the previous step
         for step in range(m.serial_iters):
-            prog.append(_zero(out_addr, m.out_prec))  # fresh accumulator
+            # fresh accumulator; its wordlines are still being read by the
+            # previous step's store — wait for it
+            emit(_zero(out_addr, m.out_prec), phase=f"z{step}",
+                 after=(prev_tail,) if prev_tail else ())
             for kc in range(n_chunks):
-                # data-parallel operand slice for this chunk
-                if "in_a" not in elide:
-                    prog.append(isa.DramLoad(
-                        dram_addr=0, cram_addr=a_addr,
-                        bits=int(a_total / n_phases), prec=pa,
-                        tag=tp + "in_a", fields=m.k_chunk,
-                    ))
-                if not const_b and "in_b" not in elide:
-                    # shared operand: one DRAM load, systolic NoC broadcast,
-                    # H-tree shuffle-distribution to CRAMs (§III-B) — one
-                    # pipelined instruction; receive still serializes against
-                    # compute (the conservative §V sync the paper describes)
-                    prog.append(isa.DramLoad(
-                        dram_addr=0, cram_addr=b_addr,
-                        bits=int(b_total / n_phases), prec=pb,
-                        shf=isa.ShufflePattern.STRIDE,
-                        bcast_tiles=m.tiles_used,
-                        tag=tp + "in_b", fields=m.k_chunk,
-                    ))
+                ci = step * n_chunks + kc
+                if ci == 0 or not prefetch:
+                    emit_mac_loads(ci)
+                if prefetch and ci + 1 < n_total:
+                    emit_mac_loads(ci + 1)
+                aa = a_alt if (db_a and ci % 2) else a_addr
+                bb = b_alt if (db_b and ci % 2) else b_addr
+                la = f"la{ci}" if loads_a else None
+                lb = f"lb{ci}" if loads_b else None
                 for j in range(m.k_chunk):
                     if const_b:
-                        prog.append(isa.MacConst(
+                        emit(isa.MacConst(
                             dst=out_addr, prec_dst=m.out_prec,
-                            src1=a_addr + j * pa, prec1=pa, reg=0,
-                        ))
+                            src1=aa + j * pa, prec1=pa, reg=0,
+                        ), phase=f"cp{ci}", after=(la, lb))
                     else:
-                        prog.append(isa.Mac(
+                        emit(isa.Mac(
                             dst=out_addr, prec_dst=m.out_prec,
-                            src1=a_addr + j * pa, prec1=pa,
-                            src2=b_addr + j * pb, prec2=pb,
-                        ))
+                            src1=aa + j * pa, prec1=pa,
+                            src2=bb + j * pb, prec2=pb,
+                        ), phase=f"cp{ci}", after=(la, lb))
+            tail = f"cp{step * n_chunks + n_chunks - 1}"
             if m.reduce_split > 1:
-                prog.append(isa.ReduceIntra(dst=out_addr, src=out_addr, prec=m.out_prec, size=min(m.reduce_split, cfg.cram_cols)))
+                emit(isa.ReduceIntra(dst=out_addr, src=out_addr, prec=m.out_prec,
+                                     size=min(m.reduce_split, cfg.cram_cols)),
+                     phase=f"ri{step}")
+                tail = f"ri{step}"
                 if m.reduce_split > cfg.cram_cols:
-                    prog.append(isa.ReduceHTree(dst=out_addr, src=out_addr, prec=m.out_prec))
-            if "out" not in elide:
-                prog.append(isa.DramStore(
+                    emit(isa.ReduceHTree(dst=out_addr, src=out_addr, prec=m.out_prec),
+                         phase=f"rh{step}", after=(f"ri{step}",))
+                    tail = f"rh{step}"
+            if stores:
+                emit(isa.DramStore(
                     dram_addr=0, cram_addr=out_addr,
-                    bits=int(out_total / m.serial_iters), prec=m.out_prec, tag=tp + "out",
-                ))
+                    bits=int(out_total / m.serial_iters), prec=m.out_prec,
+                    tag=tp + "out",
+                ), phase=f"st{step}", after=(tail,))
+                prev_tail = f"st{step}"
+            else:
+                prev_tail = tail
 
     elif w.op == "scan_mac":
         # linear recurrence h_t = a_t · h_{t-1} + b_t, fixed point: the
@@ -201,60 +401,100 @@ def compile_workload(
         p_mul = pa + ph
         n_chunks = max(1, k // m.k_chunk)
         h0_total = m.dram_split.get("h0", 0.0)
+        a_alt = _alt_addr(m, "in_a", a_addr)
+        b_alt = _alt_addr(m, "in_b", b_addr)
+        db_a = m.double_buffered and a_alt != a_addr
+        db_b = m.double_buffered and b_alt != b_addr
+        prefetch = db_a and db_b  # scan always loads both streams
+        n_total = m.serial_iters * n_chunks
+        chunk_tail: Dict[int, str] = {}  # global chunk -> its last Add token
+
+        def emit_scan_loads(ci: int) -> None:
+            parity = ci % 2
+            ja = ci - 2 if db_a else ci - 1
+            jb = ci - 2 if db_b else ci - 1
+            emit(isa.DramLoad(
+                dram_addr=0, cram_addr=a_alt if (db_a and parity) else a_addr,
+                bits=int(a_total / n_total), prec=pa,
+                tag=tp + "in_a", fields=m.k_chunk,
+            ), phase=f"la{ci}", after=(chunk_tail.get(ja),))
+            emit(isa.DramLoad(
+                dram_addr=0, cram_addr=b_alt if (db_b and parity) else b_addr,
+                bits=int(b_total / n_total), prec=pb,
+                tag=tp + "in_b", fields=m.k_chunk,
+            ), phase=f"lb{ci}", after=(chunk_tail.get(jb),))
+
+        ti = 0  # global timestep counter
         for step in range(m.serial_iters):
-            prog.append(isa.DramLoad(
-                dram_addr=0, cram_addr=out_addr, bits=int(h0_total / m.serial_iters),
-                prec=ph, tag=tp + "h0",
-            ))
+            emit(isa.DramLoad(
+                dram_addr=0, cram_addr=out_addr,
+                bits=int(h0_total / m.serial_iters), prec=ph, tag=tp + "h0",
+            ), phase=f"lh{step}", after=(f"st{ti - 1}",) if ti else ())
             for kc in range(n_chunks):
-                prog.append(isa.DramLoad(
-                    dram_addr=0, cram_addr=a_addr,
-                    bits=int(a_total / (m.serial_iters * n_chunks)), prec=pa,
-                    tag=tp + "in_a", fields=m.k_chunk,
-                ))
-                prog.append(isa.DramLoad(
-                    dram_addr=0, cram_addr=b_addr,
-                    bits=int(b_total / (m.serial_iters * n_chunks)), prec=pb,
-                    tag=tp + "in_b", fields=m.k_chunk,
-                ))
+                ci = step * n_chunks + kc
+                aa = a_alt if (db_a and ci % 2) else a_addr
+                bb = b_alt if (db_b and ci % 2) else b_addr
+                la, lb = f"la{ci}", f"lb{ci}"
+                if ci == 0 or not prefetch:
+                    emit_scan_loads(ci)
+                if prefetch and ci + 1 < n_total:
+                    # next chunk's gate/input streams land in the alt regions
+                    # while this chunk's recurrence steps run
+                    emit_scan_loads(ci + 1)
                 for j in range(m.k_chunk):
-                    prog.append(isa.Mul(
+                    emit(isa.Mul(
                         dst=tmp_addr, prec_dst=p_mul,
-                        src1=a_addr + j * pa, prec1=pa, src2=out_addr, prec2=ph,
-                    ))
-                    prog.append(isa.Copy(dst=out_addr, prec_dst=ph, src1=tmp_addr + fa, prec1=ph))
-                    prog.append(isa.Add(
+                        src1=aa + j * pa, prec1=pa, src2=out_addr, prec2=ph,
+                    ), phase=f"mu{ti}",
+                        after=(la, lb, f"lh{step}") if j == 0 and kc == 0 else (la, lb))
+                    # the copy overwrites h while the previous timestep's
+                    # store still reads it — wait for the CRAM read to drain
+                    emit(isa.Copy(dst=out_addr, prec_dst=ph, src1=tmp_addr + fa,
+                                  prec1=ph),
+                         phase=f"cw{ti}", after=(f"st{ti - 1}",) if ti else ())
+                    emit(isa.Add(
                         dst=out_addr, prec_dst=ph, src1=out_addr, prec1=ph,
-                        src2=b_addr + j * pb, prec2=pb,
-                    ))
-                    prog.append(isa.DramStore(
+                        src2=bb + j * pb, prec2=pb,
+                    ), phase=f"ad{ti}")
+                    emit(isa.DramStore(
                         dram_addr=0, cram_addr=out_addr,
-                        bits=int(out_total / (m.serial_iters * k)), prec=ph, tag=tp + "out",
-                    ))
+                        bits=int(out_total / (m.serial_iters * k)), prec=ph,
+                        tag=tp + "out",
+                    ), phase=f"st{ti}", after=(f"ad{ti}",))
+                    ti += 1
+                chunk_tail[ci] = f"ad{ti - 1}"
 
     elif w.op == "stencil_mac":
         taps = max(r.stencil for r in w.ins)
         # filter coefficients live in the RF (constants): mul_const path
         for j in range(min(taps, cfg.rf_regs)):
-            prog.append(isa.RfLoad(reg=j, value=2 * j + 1))
+            emit(isa.RfLoad(reg=j, value=2 * j + 1), barrier=True)
+        prev_cp: Optional[str] = None
+        prev_st: Optional[str] = None
         for step in range(m.serial_iters):
-            prog.append(_zero(out_addr, m.out_prec))
-            prog.append(isa.DramLoad(
+            emit(_zero(out_addr, m.out_prec), phase=f"z{step}",
+                 after=(prev_st,) if prev_st else ())
+            # the window slides in place (cross-CRAM shifts mutate in_a), so
+            # the next load waits for the previous step's last MAC
+            emit(isa.DramLoad(
                 dram_addr=0, cram_addr=a_addr, bits=int(a_total / m.serial_iters),
                 prec=pa, tag=tp + "in_a",
-            ))
+            ), phase=f"la{step}", after=(prev_cp,) if prev_cp else ())
             for j in range(taps):
                 if j:
                     # slide the window one lane: cross-CRAM shift (§III-B)
-                    prog.append(isa.Shift(dst=a_addr, src=a_addr, prec=pa, amount=1))
-                prog.append(isa.MacConst(
+                    emit(isa.Shift(dst=a_addr, src=a_addr, prec=pa, amount=1),
+                         phase=f"cp{step}", after=(f"la{step}",))
+                emit(isa.MacConst(
                     dst=out_addr, prec_dst=m.out_prec, src1=a_addr, prec1=pa,
                     reg=j % cfg.rf_regs,
-                ))
-            prog.append(isa.DramStore(
+                ), phase=f"cp{step}", after=(f"la{step}",))
+            prev_cp = f"cp{step}"
+            emit(isa.DramStore(
                 dram_addr=0, cram_addr=out_addr, bits=int(out_total / m.serial_iters),
                 prec=m.out_prec, tag=tp + "out",
-            ))
+            ), phase=f"st{step}", after=(f"cp{step}",))
+            prev_st = f"st{step}"
     else:
         raise ValueError(w.op)
 
@@ -265,7 +505,8 @@ def _data_movement_cycles(w: Workload, m: Mapping, cfg: PimsabConfig,
                           elide: FrozenSet[str]) -> float:
     """Modeled DRAM+NoC cycles of one node under one plan — the residency
     planner's cost function: emit the node's stream (with the plan's elided
-    boundaries) and charge it on the analytic simulator."""
+    boundaries) and charge it on the analytic simulator.  Uses the *charged*
+    buckets (overlap-independent), so the gate is stable under scheduling."""
     from repro.core.simulator import Simulator
 
     cp = compile_workload(w, cfg, mapping=m, elide=elide)
@@ -282,7 +523,8 @@ def compile_graph(g: WorkloadGraph, cfg: PimsabConfig) -> CompiledGraph:
     instructions of its resident boundaries elided.  The consumer's elided
     input needs no address fix-up: the live-range allocator pinned it to the
     producer's accumulator wordlines, so the emitted compute reads the value
-    in place.
+    in place.  Segment boundaries are timeline barriers (wordline reuse
+    across nodes must not race the modeled overlap).
     """
     gm = distribute_graph(
         g, cfg,
@@ -301,6 +543,9 @@ def compile_graph(g: WorkloadGraph, cfg: PimsabConfig) -> CompiledGraph:
             elide=frozenset(dead),
             tag_prefix=f"{w.name}:",
         )
-        prog.extend(cp.program)
+        seg = list(cp.program)
+        if seg:
+            seg[0] = dataclasses.replace(seg[0], barrier=True)
+        prog.extend(seg)
         segments.append((w.name, start, len(prog)))
     return CompiledGraph(prog, g, gm, tuple(segments))

@@ -15,6 +15,7 @@ occupancy, then DRAM traffic.
 from __future__ import annotations
 
 import math
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -43,6 +44,7 @@ class Mapping:
     dram_bits: float = 0.0
     dram_split: Dict[str, float] = field(default_factory=dict)  # a/b/out bits
     occupancy: float = 0.0
+    double_buffered: bool = False  # A/B operand chunks (second CRAM region)
     notes: List[str] = field(default_factory=list)
 
     def to_json(self):
@@ -56,6 +58,7 @@ class Mapping:
             "out_prec": self.out_prec,
             "occupancy": self.occupancy,
             "dram_bits": self.dram_bits,
+            "double_buffered": self.double_buffered,
             "allocation": self.allocation.to_json() if self.allocation else None,
             "notes": self.notes,
         }
@@ -113,6 +116,38 @@ def _buffer_reqs(
         reqs.append(BufferReq("mul_tmp", window, p_mul))
     else:
         raise ValueError(w.op)
+    return reqs
+
+
+# streamed operand buffers that may take a second (A/B) region so the next
+# chunk's DRAM transfer overlaps the current chunk's compute; accumulators
+# and in-place-shifted windows are excluded (their values carry across phases)
+_DB_BUFFERS = {
+    "mac": ("in_a", "in_b"),
+    "scan_mac": ("in_a", "in_b"),
+    "map_add": ("in_a", "in_b", "out"),
+    "map_mul": ("in_a", "in_b", "out"),
+    "relu": ("in_a", "out"),
+}
+
+
+def mapping_buffer_reqs(
+    w: Workload, m: "Mapping", cfg: PimsabConfig, *,
+    double_buffered: Optional[bool] = None,
+) -> List[BufferReq]:
+    """The wordline requirements of ``m``'s plan, including the second A/B
+    chunk regions when the mapping is double-buffered."""
+    reqs = _buffer_reqs(
+        w, m.k_chunk, m.out_prec,
+        reduce_split=m.reduce_split, cram_cols=cfg.cram_cols,
+    )
+    db = m.double_buffered if double_buffered is None else double_buffered
+    if db:
+        by = {r.name: r for r in reqs}
+        for name in _DB_BUFFERS.get(w.op, ()):
+            r = by.get(name)
+            if r is not None:
+                reqs.append(BufferReq(f"{name}.alt", r.wordlines, r.naive_wordlines))
     return reqs
 
 
@@ -252,6 +287,40 @@ def distribute(
         )
     if best.reduce_split > 1:
         best.notes.append(f"reduction split {best.reduce_split}x across lanes, folded via intra-CRAM tree + H-tree")
+    # --- double-buffering upgrade (§III overlap): a multi-phase schedule
+    # gets second A/B chunk regions when the CRAM capacity allows, letting
+    # codegen prefetch the next chunk's operands during the current compute.
+    # If the alt regions don't fit at the chosen k_chunk, *shrink* the chunk
+    # (more, smaller phases): half the resident reduction window buys the
+    # second buffer, and the extra per-burst latencies pipeline away.
+    if _phases(best) > 1 and _DB_BUFFERS.get(w.op):
+        k_lane = max(1, w.reduce_extent() // best.reduce_split)
+        kc_options = sorted(
+            {kc for kc in range(1, best.k_chunk + 1) if k_lane % kc == 0},
+            reverse=True,
+        )
+        for kc in kc_options:
+            trial = dataclasses.replace(best, k_chunk=kc, notes=list(best.notes))
+            db_alloc = allocate(
+                mapping_buffer_reqs(w, trial, cfg, double_buffered=True),
+                cfg.cram_rows,
+            )
+            if db_alloc.feasible:
+                trial.double_buffered = True
+                trial.allocation = db_alloc
+                note = (
+                    "double-buffered A/B operand chunks: next chunk's DRAM "
+                    "transfer overlaps current compute"
+                )
+                if kc < best.k_chunk:
+                    note += f" (k_chunk {best.k_chunk}->{kc} to fit the alt regions)"
+                trial.notes.append(note)
+                best = trial
+                break
+        else:
+            best.notes.append(
+                "double buffering declined: alt chunk buffers exceed CRAM rows"
+            )
     naive = sum(r.naive_wordlines for r in _buffer_reqs(
         w, best.k_chunk, w.acc_prec, use_lifetime=False,
         reduce_split=best.reduce_split, cram_cols=cfg.cram_cols))
@@ -487,14 +556,16 @@ def _allocate_graph_mappings(gm: GraphMapping, cfg: PimsabConfig) -> None:
         items = []
         for w in g.nodes:
             m = gm.mappings[w.name]
-            reqs = _buffer_reqs(
-                w, m.k_chunk, m.out_prec,
-                reduce_split=m.reduce_split, cram_cols=cfg.cram_cols,
-            )
             pins = {
                 e.dst_input: f"{e.src}:{out_buffer(g.node(e.src))}"
                 for e in gm.resident if e.dst == w.name
             }
+            # a pinned (CRAM-resident) input issues no DRAM loads: its alt
+            # chunk region would never be written, so don't allocate one
+            reqs = [
+                r for r in mapping_buffer_reqs(w, m, cfg)
+                if not (r.name.endswith(".alt") and r.name[:-4] in pins)
+            ]
             items.append((w.name, reqs, pins))
         allocs = allocate_graph(items, cfg.cram_rows)
         bad = [n for n, a in allocs.items() if not a.feasible]
@@ -502,6 +573,17 @@ def _allocate_graph_mappings(gm: GraphMapping, cfg: PimsabConfig) -> None:
             for name, a in allocs.items():
                 gm.mappings[name].allocation = a
             return
+        # first relief valve: give up double buffering on the failing nodes
+        # (overlap is a luxury; residency elides whole DRAM round-trips)
+        db_bad = [n for n in bad if gm.mappings[n].double_buffered]
+        if db_bad:
+            for n in db_bad:
+                gm.mappings[n].double_buffered = False
+            gm.notes.append(
+                f"double buffering dropped on {db_bad}: alt chunk buffers "
+                "don't fit around the live intermediates"
+            )
+            continue
         # drop every resident edge whose live intermediate squeezes a failing
         # node — including edges that merely *span* it (A→C reserving rows
         # while B allocates), not just edges ending there

@@ -32,6 +32,17 @@ class ShufflePattern(enum.Enum):
 @dataclass(frozen=True)
 class Instr:
     tiles: Tuple[int, ...] = ()  # empty = all tiles
+    # --- phase-timeline scheduling tags (§III overlap) ---------------------
+    # The *functional* machine executes instructions in program order; these
+    # tags only drive the clock model.  ``phase`` publishes a completion
+    # token; ``after`` lists tokens that must complete before this
+    # instruction may start (on top of its resource being free).  An
+    # instruction with no ``phase`` and no ``after`` — or with ``barrier``
+    # set — serializes against *all* earlier work, reproducing the legacy
+    # bucket-sum clock exactly.
+    phase: Optional[str] = None
+    after: Tuple[str, ...] = ()
+    barrier: bool = False
 
 
 # --- compute -------------------------------------------------------------
@@ -171,6 +182,8 @@ class DramStore(Instr):
     prec: int = 8
     tr: bool = True
     tag: str = ""              # data-plane binding ("out")
+    gather_tiles: int = 1      # >1: funnel from this many tiles (reverse of
+                               # DramLoad's systolic broadcast pipeline)
 
 
 @dataclass(frozen=True)

@@ -37,6 +37,14 @@ def systolic_bcast_cycles(cfg: PimsabConfig, bits: int, n_dest: int) -> int:
     return timing.cycles_noc_systolic_bcast(cfg, bits, n_dest)
 
 
+def systolic_gather_cycles(cfg: PimsabConfig, bits: int, n_src: int) -> int:
+    """Reverse of the systolic broadcast: `n_src` tiles funnel their slices
+    toward the memory-controller row through the same near-neighbour
+    pipeline, so the cost is symmetric — fill (n_src hops) + payload once.
+    Used by DramStore's gather path (the load/store timing symmetry)."""
+    return timing.cycles_noc_systolic_bcast(cfg, bits, n_src)
+
+
 def naive_bcast_cycles(cfg: PimsabConfig, src: int, dests: List[int], bits: int) -> int:
     return timing.cycles_noc_naive_bcast(cfg, bits, [hops(cfg, src, d) for d in dests])
 

@@ -8,12 +8,33 @@ Two coupled modes, selected per run:
 * ``functional`` (small machines / tests) — bit-exact execution on
   core.cram.Cram state, lazily allocating CRAMs as instructions touch them.
 
-The timing model charges each *tile's* instruction stream; tiles run the same
-SIMD program (the compiler emits one stream, §III-A), so chip time = one
-tile's serial time + serialized DRAM/NoC phases where the program says so.
-Compute/transfer overlap is modeled by the compiler emitting explicit phases
-(synchronous conservative schedule — matches the paper's compiler, Fig. 14
-discussion, which also serializes receive-vs-compute).
+**The clock is a phase-timeline engine, not a bucket sum.**  Each
+instruction occupies one or more *resources* (the compute micro-op
+sequencer — per staggered tile group when the compiler splits one —, the
+DRAM channel, the NoC, the H-tree, the sync network) for its stage
+durations; it may start once its declared ``after`` dependency tokens have
+completed and its resources are free.  Chip time (``SimResult.makespan`` ==
+``total_cycles``) is the completion time of the last instruction, so
+schedules whose phases carry explicit dependency tokens (``Instr.phase`` /
+``Instr.after`` — codegen emits prefetch-next-chunk-during-compute,
+double-buffered schedules) model DRAM↔compute overlap, while untagged
+programs — or any program run with ``serialize=True`` — reproduce the old
+fully-serialized totals exactly (every instruction is a barrier).
+
+Three views of the same run:
+
+* ``cycles``        — *charged* cycles per category, exactly the legacy
+  buckets (each DRAM burst pays its full stream + latency here);
+  ``serialized_cycles`` is their sum, the no-overlap clock.
+* ``busy``          — per-resource *occupancy* on the timeline (a DRAM
+  burst occupies the channel only for its streaming cycles; its access
+  latency delays the dependent's start, pipelined across bursts).
+* ``critical_path`` — the makespan attributed to the category that was
+  advancing the clock when it moved.
+
+Functional execution is order-based and never consults the timeline: the
+tags change the clock model only, so results are bit-exact regardless of
+modeled overlap.
 """
 from __future__ import annotations
 
@@ -29,24 +50,66 @@ from repro.core.energy import EnergyLedger
 from repro.core.machine import PimsabConfig
 
 
+class UninitializedRfError(RuntimeError):
+    """A MacConst/MulConst consulted an RF register never RfLoad-ed —
+    the program would silently compute with an arbitrary constant."""
+
+
 @dataclass
 class SimResult:
+    # charged cycles per category — the legacy buckets (serialized view)
     cycles: Dict[str, float] = field(default_factory=lambda: {
         "compute": 0.0, "dram": 0.0, "noc": 0.0, "htree": 0.0, "sync": 0.0,
     })
     energy: EnergyLedger = field(default_factory=EnergyLedger)
     instrs: int = 0
+    # phase-timeline views
+    makespan: float = 0.0                      # modeled chip time
+    busy: Dict[str, float] = field(default_factory=dict)           # per resource
+    critical_path: Dict[str, float] = field(default_factory=dict)  # per category
+    timeline: Optional[List[Dict]] = None      # populated when recording
 
     @property
     def total_cycles(self) -> float:
+        """Modeled chip time = the timeline makespan (== the serialized sum
+        for fully-dependent schedules)."""
+        return self.makespan
+
+    @property
+    def serialized_cycles(self) -> float:
+        """What a fully-serialized machine would pay: the charged-bucket sum
+        (the pre-timeline ``total_cycles``)."""
         return sum(self.cycles.values())
+
+    @property
+    def overlapped_cycles(self) -> float:
+        """Cycles the schedule hid behind other resources' work."""
+        return max(0.0, self.serialized_cycles - self.makespan)
 
     def seconds(self, cfg: PimsabConfig) -> float:
         return timing.seconds(cfg, self.total_cycles)
 
     def breakdown(self) -> Dict[str, float]:
-        t = max(self.total_cycles, 1e-30)
+        """Charged-cycle fraction per category (busy share of the serialized
+        clock — the Fig-11 view; overlap does not change it)."""
+        t = max(self.serialized_cycles, 1e-30)
         return {k: v / t for k, v in self.cycles.items()}
+
+    def critical_breakdown(self) -> Dict[str, float]:
+        """Fraction of the *makespan* each category was responsible for
+        advancing — the critical-path view of the pipelined machine."""
+        t = max(self.makespan, 1e-30)
+        return {k: v / t for k, v in self.critical_path.items()}
+
+    def utilization(self) -> Dict[str, float]:
+        """Per-resource busy fraction of the makespan (≤ 1 by construction:
+        a resource cannot be occupied longer than the clock ran)."""
+        t = max(self.makespan, 1e-30)
+        return {k: v / t for k, v in self.busy.items()}
+
+
+def _category(resource: str) -> str:
+    return resource.split("@", 1)[0]
 
 
 class Simulator:
@@ -55,15 +118,24 @@ class Simulator:
         cfg: Optional[PimsabConfig] = None,
         functional: bool = False,
         exact_bits: bool = False,
+        serialize: bool = False,
+        record_timeline: bool = False,
     ):
         from repro.core.machine import PIMSAB
 
         self.cfg = cfg if cfg is not None else PIMSAB
         self.functional = functional
         self.exact_bits = exact_bits
+        self.serialize = serialize  # compat mode: ignore phase tags entirely
         self.crams: Dict[tuple, Cram] = {}  # (tile, cram) -> Cram, lazy
         self.rf: Dict[tuple, int] = {}      # (tile, reg) -> value
         self.res = SimResult()
+        if record_timeline:
+            self.res.timeline = []
+        # timeline state
+        self._free: Dict[str, float] = {}    # resource -> channel-free time
+        self._tokens: Dict[str, float] = {}  # phase token -> completion time
+        self._floor: float = 0.0             # last barrier's completion
 
     # -- functional state access (tests drive these) -----------------------
     def cram(self, tile: int = 0, idx: int = 0) -> Cram:
@@ -87,6 +159,68 @@ class Simulator:
         idxs = sorted({c for (t, c) in self.crams if t == tile} | {0})
         return idxs
 
+    # -- the timeline scheduler --------------------------------------------
+    def _schedule(
+        self,
+        ins: isa.Instr,
+        stages: Dict[str, float],
+        charge: Dict[str, float],
+        latency: float = 0.0,
+        early_token: bool = False,
+    ) -> None:
+        """Place ``ins`` on the timeline.
+
+        ``stages`` maps each resource the instruction occupies to its
+        occupancy; the instruction completes ``max(stages) + latency`` after
+        it starts (``latency`` delays dependents without holding a channel —
+        the pipelined DRAM-burst model).  ``charge`` is the legacy bucket
+        accounting.  ``early_token`` publishes the completion token at
+        occupancy end instead (a DramStore's WAR hazard on its source buffer
+        ends when the CRAM read finishes, not when DRAM acknowledges).
+        """
+        res = self.res
+        for k, v in charge.items():
+            res.cycles[k] = res.cycles.get(k, 0.0) + v
+        dur = max(stages.values(), default=0.0)
+        is_barrier = (
+            self.serialize or ins.barrier or (ins.phase is None and not ins.after)
+        )
+        if is_barrier:
+            start = res.makespan  # after *everything* issued so far
+        else:
+            start = self._floor
+            for tok in ins.after:
+                start = max(start, self._tokens.get(tok, 0.0))
+            for r in stages:
+                start = max(start, self._free.get(r, 0.0))
+        for r, v in stages.items():
+            self._free[r] = start + v
+            res.busy[r] = res.busy.get(r, 0.0) + v
+        done = start + dur + latency
+        if not self.serialize and ins.phase is not None:
+            token_at = start + dur if early_token else done
+            self._tokens[ins.phase] = max(
+                self._tokens.get(ins.phase, 0.0), token_at
+            )
+        if is_barrier:
+            self._floor = done
+        if done > res.makespan:
+            primary = _category(max(stages, key=stages.__getitem__)) if stages else "sync"
+            res.critical_path[primary] = (
+                res.critical_path.get(primary, 0.0) + done - res.makespan
+            )
+            res.makespan = done
+        if res.timeline is not None:
+            res.timeline.append({
+                "i": res.instrs - 1,
+                "op": type(ins).__name__,
+                "phase": ins.phase,
+                "after": list(ins.after),
+                "start": start,
+                "end": done,
+                "stages": {r: start + v for r, v in stages.items()},
+            })
+
     # -- execution ----------------------------------------------------------
     def run(self, program) -> SimResult:
         for ins in program:
@@ -97,6 +231,16 @@ class Simulator:
         for t in tiles:
             for c in self._active_crams(t):
                 yield t, self.cram(t, c)
+
+    def _rf_value(self, tile: int, reg: int, ins: isa.Instr) -> int:
+        key = (tile, reg)
+        if key not in self.rf:
+            raise UninitializedRfError(
+                f"{type(ins).__name__} reads RF[{reg}] on tile {tile} but no "
+                "RfLoad ever initialized it — the constant-operand path would "
+                "silently compute with an arbitrary value"
+            )
+        return self.rf[key]
 
     def step(self, ins: isa.Instr) -> None:
         cfg, res = self.cfg, self.res
@@ -116,20 +260,24 @@ class Simulator:
                                ins.prec_dst, cen=ins.cen, cst=ins.cst, pred=ins.pred.value)
         elif isinstance(ins, isa.MacConst):
             c = timing.cycles_mac_const(
-                ins.prec1, self.rf.get((tiles[0], ins.reg), 1), ins.prec_dst
+                ins.prec1, self._rf_value(tiles[0], ins.reg, ins), ins.prec_dst
             )
             self._compute(ins, c)
             res.energy.rf(len(tiles))
             if self.functional:
                 for t, cr in self._crams(tiles):
-                    cr.mac_const(ins.dst, ins.src1, self.rf[(t, ins.reg)], ins.prec1, ins.prec_dst)
+                    cr.mac_const(ins.dst, ins.src1, self._rf_value(t, ins.reg, ins),
+                                 ins.prec1, ins.prec_dst)
         elif isinstance(ins, isa.MulConst):
-            z_cycles = timing.cycles_mul_const(ins.prec1, self.rf.get((tiles[0], ins.reg), 1))
+            z_cycles = timing.cycles_mul_const(
+                ins.prec1, self._rf_value(tiles[0], ins.reg, ins)
+            )
             self._compute(ins, z_cycles)
             res.energy.rf(len(tiles))
             if self.functional:
                 for t, cr in self._crams(tiles):
-                    cr.mul_const(ins.dst, ins.src1, self.rf[(t, ins.reg)], ins.prec1, ins.prec_dst)
+                    cr.mul_const(ins.dst, ins.src1, self._rf_value(t, ins.reg, ins),
+                                 ins.prec1, ins.prec_dst)
         elif isinstance(ins, isa.Mac):
             c = timing.cycles_mac(ins.prec1, ins.prec2, ins.prec_dst)
             self._compute(ins, c)
@@ -169,9 +317,9 @@ class Simulator:
                     cr.reduce_intra(ins.dst, ins.src, ins.prec, ins.size)
         elif isinstance(ins, isa.ReduceHTree):
             c = timing.cycles_htree_reduce(cfg, ins.prec)
-            res.cycles["htree"] += c
             bits = cfg.crams_per_tile * cfg.cram_cols * ins.prec
             res.energy.htree(bits * len(tiles))
+            self._schedule(ins, {"htree": c}, {"htree": c})
             if self.functional:
                 # elementwise per-bitline sum over the tile's populated CRAMs
                 # (H-tree summation order — integers, so order is immaterial),
@@ -186,50 +334,83 @@ class Simulator:
                 for _, cr in self._crams(tiles):
                     cr.shift_lanes(ins.dst, ins.src, ins.prec, ins.amount)
         elif isinstance(ins, isa.RfLoad):
-            res.cycles["compute"] += 1
             res.energy.rf(len(tiles))
+            self._schedule(ins, {"compute": 1.0}, {"compute": 1.0})
             for t in tiles:
                 self.rf[(t, ins.reg)] = ins.value
         elif isinstance(ins, isa.DramLoad):
-            stream = timing.cycles_dram(cfg, ins.bits) - cfg.dram_latency_cycles
+            lat = cfg.dram_latency_cycles
+            stream = timing.cycles_dram_stream(cfg, ins.bits)
             if ins.bcast_tiles > 1:
                 # broadcast path is a pipeline: DRAM → systolic NoC ring →
                 # per-tile H-tree (each tile's shuffle slice = bits/tiles);
                 # the slowest stage bounds throughput, + burst latency fill
                 noc_c = noc.systolic_bcast_cycles(cfg, ins.bits, ins.bcast_tiles)
                 tree_c = timing.cycles_htree_bcast(cfg, ins.bits // max(ins.bcast_tiles, 1))
-                c = max(stream, noc_c, tree_c) + cfg.dram_latency_cycles
+                c = max(stream, noc_c, tree_c) + lat
                 res.energy.noc(ins.bits, ins.bcast_tiles)
                 res.energy.htree(ins.bits)
-                res.cycles["noc"] += c - stream - cfg.dram_latency_cycles
-                res.cycles["dram"] += stream + cfg.dram_latency_cycles
+                self._schedule(
+                    ins,
+                    {"dram": stream, "noc": noc_c, "htree": tree_c},
+                    {"dram": stream + lat, "noc": c - stream - lat},
+                    latency=lat,
+                )
             else:
-                res.cycles["dram"] += stream + cfg.dram_latency_cycles
+                self._schedule(ins, {"dram": stream}, {"dram": stream + lat}, latency=lat)
             res.energy.dram(ins.bits, transpose=ins.tr)
             res.energy.noc(ins.bits, noc.avg_dram_hops(cfg))
         elif isinstance(ins, isa.DramStore):
-            res.cycles["dram"] += timing.cycles_dram(cfg, ins.bits)
+            # symmetric with DramLoad: explicit stream/latency split, and the
+            # gather funnel (per-tile H-tree collect → systolic NoC → DRAM
+            # stream) mirrors the broadcast pipeline when gather_tiles > 1
+            lat = cfg.dram_latency_cycles
+            stream = timing.cycles_dram_stream(cfg, ins.bits)
+            if ins.gather_tiles > 1:
+                noc_c = noc.systolic_gather_cycles(cfg, ins.bits, ins.gather_tiles)
+                tree_c = timing.cycles_htree_bcast(cfg, ins.bits // max(ins.gather_tiles, 1))
+                c = max(stream, noc_c, tree_c) + lat
+                res.energy.noc(ins.bits, ins.gather_tiles)
+                res.energy.htree(ins.bits)
+                self._schedule(
+                    ins,
+                    {"dram": stream, "noc": noc_c, "htree": tree_c},
+                    {"dram": stream + lat, "noc": c - stream - lat},
+                    latency=lat,
+                    early_token=True,
+                )
+            else:
+                self._schedule(
+                    ins, {"dram": stream}, {"dram": stream + lat},
+                    latency=lat, early_token=True,
+                )
             res.energy.dram(ins.bits, transpose=ins.tr)
             res.energy.noc(ins.bits, noc.avg_dram_hops(cfg))
         elif isinstance(ins, isa.TileBcast):
             c = noc.systolic_bcast_cycles(cfg, ins.bits, ins.n_dest)
-            res.cycles["noc"] += c
             res.energy.noc(ins.bits, ins.n_dest)
+            self._schedule(ins, {"noc": c}, {"noc": c})
         elif isinstance(ins, isa.TileSend):
-            res.cycles["noc"] += noc.p2p_cycles(cfg, ins.src_tile, ins.dst_tile, ins.bits)
+            c = noc.p2p_cycles(cfg, ins.src_tile, ins.dst_tile, ins.bits)
             res.energy.noc(ins.bits, noc.hops(cfg, ins.src_tile, ins.dst_tile))
+            self._schedule(ins, {"noc": c}, {"noc": c})
         elif isinstance(ins, isa.CramBcast):
-            res.cycles["htree"] += timing.cycles_htree_bcast(cfg, ins.bits)
+            c = timing.cycles_htree_bcast(cfg, ins.bits)
             res.energy.htree(ins.bits)
+            self._schedule(ins, {"htree": c}, {"htree": c})
         elif isinstance(ins, isa.CramCopy):
-            res.cycles["htree"] += math.ceil(ins.bits / cfg.c2c_bw_bits)
+            c = math.ceil(ins.bits / cfg.c2c_bw_bits)
             res.energy.htree(ins.bits, levels=2)
+            self._schedule(ins, {"htree": c}, {"htree": c})
         elif isinstance(ins, (isa.Signal, isa.Wait)):
-            res.cycles["sync"] += 2
+            self._schedule(ins, {"sync": 2.0}, {"sync": 2.0})
         else:
             raise ValueError(f"unhandled instruction {ins}")
 
     def _compute(self, ins, cycles: float) -> None:
-        self.res.cycles["compute"] += cycles
         active = self.cfg.crams_per_tile * len(self._tiles(ins))
         self.res.energy.compute(cycles, active)
+        # staggered tile groups compute independently: a tiles-restricted
+        # instruction occupies its group's micro-op sequencer, not the chip's
+        resource = "compute" if not ins.tiles else f"compute@{ins.tiles[0]}"
+        self._schedule(ins, {resource: float(cycles)}, {"compute": float(cycles)})

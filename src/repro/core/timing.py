@@ -89,6 +89,17 @@ def cycles_dram(cfg: PimsabConfig, bits: int, bursts: int = 1) -> int:
     return math.ceil(bits / cfg.dram_bw_bits) + cfg.dram_latency_cycles * bursts
 
 
+def cycles_dram_stream(cfg: PimsabConfig, bits: int) -> int:
+    """Channel-occupancy cycles of a transfer: the streaming time alone.
+
+    The access latency (``dram_latency_cycles``) delays the *completion* of
+    each burst but does not hold the channel — back-to-back bursts pipeline —
+    so the phase-timeline simulator charges occupancy and latency separately
+    (``cycles_dram`` == stream + latency remains the serialized burst cost).
+    """
+    return math.ceil(bits / cfg.dram_bw_bits)
+
+
 def cycles_noc_p2p(cfg: PimsabConfig, bits: int, hops: int) -> int:
     """Wormhole: head latency (hops) + serialization."""
     return hops + math.ceil(bits / cfg.t2t_bw_bits)

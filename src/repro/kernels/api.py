@@ -79,6 +79,7 @@ __all__ = [
     "static_value",
     "last_executed_pairs",
     "last_sim_report",
+    "profile_timelines",
     # Program API (re-exported from repro.kernels.program)
     "trace",
     "compile",
@@ -665,10 +666,22 @@ def relu(x: jnp.ndarray, *, block: int = 512) -> jnp.ndarray:
 def last_sim_report():
     """The :class:`~repro.kernels.pimsab_backend.SimReport` of the most recent
     pimsab-backend kernel call *or Program execution* on this thread
-    (``None`` before any)."""
+    (``None`` before any).  Reports carry the phase-timeline views: modeled
+    ``total_cycles`` is the overlapped makespan, ``serialized_cycles`` the
+    no-overlap clock, ``overlapped_cycles`` their difference, plus
+    ``critical_path`` / per-resource ``utilization``."""
     from repro.kernels import pimsab_backend
 
     return pimsab_backend.last_sim_report()
+
+
+def profile_timelines(enable: bool = True):
+    """Context manager: pimsab timing runs inside it record per-instruction
+    scheduling intervals on their :class:`SimReport` (``report.timeline``) —
+    what ``kernels_bench --profile`` dumps as the per-phase artifact."""
+    from repro.kernels import pimsab_backend
+
+    return pimsab_backend.profile_timelines(enable)
 
 
 # ---------------------------------------------------------------------------

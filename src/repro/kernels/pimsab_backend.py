@@ -92,6 +92,7 @@ __all__ = [
     "SimReport",
     "last_sim_report",
     "functional_config",
+    "profile_timelines",
     "FUNCTIONAL_CFG",
     "execute_workload",
     "timing_report",
@@ -132,6 +133,24 @@ def _functional_cfg() -> PimsabConfig:
     return getattr(_tls, "fcfg", None) or FUNCTIONAL_CFG
 
 
+@contextlib.contextmanager
+def profile_timelines(enable: bool = True) -> Iterator[None]:
+    """Scope in which pimsab timing runs record per-instruction timelines:
+    every :class:`SimReport` produced inside carries a ``timeline`` tuple of
+    scheduled intervals ({op, phase, start, end, stages}) — the raw material
+    for the ``kernels_bench --profile`` per-phase artifact."""
+    prev = getattr(_tls, "profile", False)
+    _tls.profile = enable
+    try:
+        yield
+    finally:
+        _tls.profile = prev
+
+
+def _profiling() -> bool:
+    return bool(getattr(_tls, "profile", False))
+
+
 @dataclass(frozen=True)
 class SimReport:
     """Modeled execution of one kernel call — or one multi-kernel Program —
@@ -141,9 +160,9 @@ class SimReport:
 
     kernel: str
     workload: str
-    total_cycles: float                 # timing mode, full-scale machine
-    cycles: Dict[str, float]            # per category (compute/dram/noc/...)
-    cycle_breakdown: Dict[str, float]   # normalized
+    total_cycles: float                 # timeline makespan, full-scale machine
+    cycles: Dict[str, float]            # charged cycles per category
+    cycle_breakdown: Dict[str, float]   # charged fraction (busy share)
     energy_pj: Dict[str, float]
     energy_j: float
     modeled_seconds: float
@@ -151,6 +170,12 @@ class SimReport:
     instr_mix: Dict[str, int]           # instruction class -> count
     mapping: Dict[str, Any]             # distribute() decision (to_json)
     functional_instrs: int              # instructions executed bit-exactly
+    # --- phase-timeline views ---------------------------------------------
+    serialized_cycles: float = 0.0      # charged sum = no-overlap clock
+    overlapped_cycles: float = 0.0      # cycles hidden by the schedule
+    critical_path: Dict[str, float] = field(default_factory=dict)
+    utilization: Dict[str, float] = field(default_factory=dict)  # busy/makespan
+    timeline: Tuple[Dict[str, Any], ...] = ()  # per-instr intervals (--profile)
     # --- aggregated program-mode fields -----------------------------------
     kernels: Tuple[str, ...] = ()               # kernel per node, in order
     per_kernel: Tuple[Dict[str, Any], ...] = () # per-node cycle segments
@@ -172,7 +197,13 @@ class SimReport:
             "instr_mix": dict(self.instr_mix),
             "mapping": self.mapping,
             "functional_instrs": self.functional_instrs,
+            "serialized_cycles": self.serialized_cycles,
+            "overlapped_cycles": self.overlapped_cycles,
+            "critical_path": {k: round(v, 1) for k, v in self.critical_path.items()},
+            "utilization": {k: round(v, 4) for k, v in self.utilization.items()},
         }
+        if self.timeline:
+            out["timeline"] = [dict(t) for t in self.timeline]
         if self.kernels:
             out["kernels"] = list(self.kernels)
             out["per_kernel"] = [dict(p) for p in self.per_kernel]
@@ -353,27 +384,31 @@ def execute_workload(
     kernel: str = "",
     cfg_fn: Optional[PimsabConfig] = None,
     cfg_timing: Optional[PimsabConfig] = None,
+    serialize: bool = False,
 ) -> Tuple[np.ndarray, SimReport]:
     """Compile ``w``, execute it bit-exactly, and model it at chip scale.
 
     Returns the raw integer outputs (flat over the data loops; ``(d, k)`` for
     ``scan_mac``) and the :class:`SimReport` (also stashed for
-    :func:`last_sim_report`).
+    :func:`last_sim_report`).  ``serialize=True`` runs the functional machine
+    in the fully-serialized compatibility clock — results must be identical
+    (scheduling never changes execution order), which the invariant tests
+    assert.
     """
     cfg_fn = cfg_fn or _functional_cfg()
     cp = compile_workload(w, cfg_fn)
     m = cp.mapping
-    sim = Simulator(cfg_fn, functional=True)
+    sim = Simulator(cfg_fn, functional=True, serialize=serialize)
     plane = _DataPlane(w, m, cfg_fn, arrays, h0=h0)
     for ins in cp.program:
         if isinstance(ins, isa.DramLoad) and ins.tag:
-            for t in range(m.tiles_used):
+            for t in (ins.tiles or range(m.tiles_used)):
                 slab, prec = plane.load(ins, t)
                 for j in range(slab.shape[0]):
                     _write_lanes(sim, t, ins.cram_addr + j * prec, slab[j], prec)
         sim.step(ins)
         if isinstance(ins, isa.DramStore) and ins.tag == "out":
-            for t in range(m.tiles_used):
+            for t in (ins.tiles or range(m.tiles_used)):
                 plane.collect(
                     ins, t,
                     lambda addr, prec, _t=t: _read_lanes(sim, _t, addr, prec, m.lanes_used),
@@ -394,7 +429,7 @@ def timing_report(
 ) -> SimReport:
     """Compile ``w`` for the full-scale machine and run the analytic model."""
     cp = compile_workload(w, cfg)
-    res = Simulator(cfg).run(cp.program)
+    res = Simulator(cfg, record_timeline=_profiling()).run(cp.program)
     return SimReport(
         kernel=kernel,
         workload=w.name,
@@ -408,6 +443,11 @@ def timing_report(
         instr_mix=dict(Counter(type(i).__name__ for i in cp.program)),
         mapping=cp.mapping.to_json(),
         functional_instrs=functional_instrs,
+        serialized_cycles=res.serialized_cycles,
+        overlapped_cycles=res.overlapped_cycles,
+        critical_path=dict(res.critical_path),
+        utilization=res.utilization(),
+        timeline=tuple(res.timeline) if res.timeline else (),
     )
 
 
@@ -1035,10 +1075,14 @@ def _program_report(
     program, cg_t: CompiledGraph, cfg: PimsabConfig, functional_instrs: int
 ) -> SimReport:
     """Aggregated timing/energy over the fused stream, attributed per node
-    via the codegen segments, with the cross-kernel DRAM-traffic breakdown."""
-    sim = Simulator(cfg)
+    via the codegen segments, with the cross-kernel DRAM-traffic breakdown.
+    ``total_cycles`` per node is its *makespan* share (segment boundaries are
+    timeline barriers, so shares are well-defined and sum to the total);
+    ``cycles`` stays the charged per-category delta."""
+    sim = Simulator(cfg, record_timeline=_profiling())
     per_kernel: List[Dict[str, Any]] = []
     prev: Dict[str, float] = {}
+    prev_makespan = 0.0
     for (node, start, end), op in zip(cg_t.segments, program.ops):
         for ins in cg_t.program[start:end]:
             sim.step(ins)
@@ -1048,10 +1092,12 @@ def _program_report(
             "kernel": op.kernel,
             "node": node,
             "cycles": delta,
-            "total_cycles": sum(delta.values()),
+            "total_cycles": sim.res.makespan - prev_makespan,
+            "serialized_cycles": sum(delta.values()),
             "dram_cycles": delta.get("dram", 0.0),
         })
         prev = snap
+        prev_makespan = sim.res.makespan
     res = sim.res
     gm = cg_t.gm
     traffic: Dict[str, Dict[str, float]] = {}
@@ -1074,6 +1120,11 @@ def _program_report(
         instr_mix=dict(Counter(type(i).__name__ for i in cg_t.program)),
         mapping=gm.to_json(),
         functional_instrs=functional_instrs,
+        serialized_cycles=res.serialized_cycles,
+        overlapped_cycles=res.overlapped_cycles,
+        critical_path=dict(res.critical_path),
+        utilization=res.utilization(),
+        timeline=tuple(res.timeline) if res.timeline else (),
         kernels=program.kernels,
         per_kernel=tuple(per_kernel),
         dram_traffic=traffic,
@@ -1154,7 +1205,7 @@ def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> Lis
             plane, stream, i = plane_for(ins.tag)
             m = gm.mappings[ctp.node_names[i]]
             stripped = dataclasses.replace(ins, tag=stream)
-            for t in range(m.tiles_used):
+            for t in (ins.tiles or range(m.tiles_used)):
                 slab, prec = plane.load(stripped, t)
                 for j in range(slab.shape[0]):
                     _write_lanes(sim, t, ins.cram_addr + j * prec, slab[j], prec)
@@ -1163,7 +1214,7 @@ def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> Lis
             plane, stream, i = plane_for(ins.tag)
             m = gm.mappings[ctp.node_names[i]]
             stripped = dataclasses.replace(ins, tag=stream)
-            for t in range(m.tiles_used):
+            for t in (ins.tiles or range(m.tiles_used)):
                 plane.collect(
                     stripped, t,
                     lambda addr, prec, _t=t: _read_lanes(sim, _t, addr, prec, m.lanes_used),

@@ -90,22 +90,29 @@ def test_exact_bits_simulator_matches_vectorized():
 
 
 def test_golden_gemm_fig11_breakdown():
-    """Pin the full-scale cycle breakdown of the fixed GEMM (Fig. 11 shape)."""
+    """Pin the full-scale cycle breakdown of the fixed GEMM (Fig. 11 shape):
+    both the charged (serialized) buckets and the phase-timeline makespan /
+    overlap / critical-path numbers of the double-buffered schedule."""
     golden = json.loads(GOLDEN.read_text())
     cp = compile_workload(_gemm(), PIMSAB)
     res = Simulator(PIMSAB).run(cp.program)
     assert res.instrs == golden["instrs"]
     assert res.total_cycles == pytest.approx(golden["total_cycles"], rel=1e-9)
+    assert res.serialized_cycles == pytest.approx(golden["serialized_cycles"], rel=1e-9)
+    assert res.overlapped_cycles == pytest.approx(golden["overlapped_cycles"], rel=1e-9)
     for cat, cycles in golden["cycles"].items():
         assert res.cycles[cat] == pytest.approx(cycles, rel=1e-9), cat
     for cat, frac in golden["breakdown"].items():
         assert res.breakdown()[cat] == pytest.approx(frac, abs=1e-5), cat
+    for cat, cycles in golden["critical_path"].items():
+        assert res.critical_path[cat] == pytest.approx(cycles, rel=1e-9), cat
     m = cp.mapping
-    assert (m.tiles_used, m.reduce_split, m.serial_iters, m.out_prec) == (
+    assert (m.tiles_used, m.reduce_split, m.serial_iters, m.out_prec, m.double_buffered) == (
         golden["mapping"]["tiles_used"],
         golden["mapping"]["reduce_split"],
         golden["mapping"]["serial_iters"],
         golden["mapping"]["out_prec"],
+        golden["mapping"]["double_buffered"],
     )
 
 

@@ -1,0 +1,308 @@
+"""Phase-timeline engine invariants (tentpole of the overlap PR).
+
+Three families:
+
+1. **Scheduling invariants** over every compiled microbench, at full chip
+   scale and on a small machine: per-resource occupancy never exceeds the
+   makespan, the makespan never exceeds the fully-serialized charged sum,
+   and the charged buckets are schedule-independent.
+2. **Compatibility**: untagged (fully-dependent) programs and the
+   ``serialize=True`` compat mode reproduce the legacy bucket-sum totals
+   *exactly* — the old clock is a special case of the new one.
+3. **Functional independence**: execution is order-based, so results are
+   bit-identical no matter how much overlap the clock models.
+
+Plus the satellite regressions: DramLoad/DramStore timing symmetry and the
+uninitialized-RF guard on the constant-operand compute path.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from benchmarks import workloads
+from repro.core import isa
+from repro.core.compiler.codegen import _tile_groups, compile_workload
+from repro.core.compiler.tensor_dsl import Loop, Ref, Workload
+from repro.core.machine import PIMSAB, PimsabConfig
+from repro.core.simulator import Simulator, UninitializedRfError
+
+SMALL_CFG = PimsabConfig(mesh_cols=2, mesh_rows=2, crams_per_tile=1)
+
+MICROBENCHES = [
+    ("vecadd", lambda: workloads.vecadd()),
+    ("fir", lambda: workloads.fir()),
+    ("gemv", lambda: workloads.gemv()),
+    ("gemm", lambda: workloads.gemm()),
+    ("conv2d", lambda: workloads.conv2d()),
+    ("relu64k", lambda: workloads.relu(65536)),
+    ("gemm_layer", lambda: workloads.gemm(m=256, n=1024, k=1024, prec=8, acc=32)),
+]
+
+# paper-scale shapes explode into million-instruction streams on the 4-tile
+# machine — the small config checks the same invariants at small shapes
+SMALL_BENCHES = [
+    ("vecadd4k", lambda: workloads.vecadd(n=4096)),
+    ("fir2k", lambda: workloads.fir(n=2048, taps=4)),
+    ("gemv512", lambda: workloads.gemv(m=512, k=64)),
+    ("gemm256", lambda: workloads.gemm(m=256, n=8, k=64, prec=8, acc=32)),
+]
+
+
+_COMPILED = {}
+
+
+def _compiled(name, mk, cfg):
+    """distribute() search is the slow part — compile each case once."""
+    key = (name, id(cfg))
+    if key not in _COMPILED:
+        _COMPILED[key] = compile_workload(mk(), cfg)
+    return _COMPILED[key]
+
+
+def _untag(program):
+    return [
+        dataclasses.replace(i, phase=None, after=(), barrier=False) for i in program
+    ]
+
+
+# ---------------------------------------------------------------------------
+# 1. scheduling invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg,name,mk", [
+    *[(PIMSAB, n, mk) for n, mk in MICROBENCHES],
+    *[(SMALL_CFG, n, mk) for n, mk in SMALL_BENCHES],
+], ids=[f"full-{n}" for n, _ in MICROBENCHES] + [f"small-{n}" for n, _ in SMALL_BENCHES])
+def test_timeline_invariants(cfg, name, mk):
+    cp = _compiled(name, mk, cfg)
+    res = Simulator(cfg).run(cp.program)
+    assert res.makespan > 0
+    # no resource can be occupied longer than the clock ran
+    assert max(res.busy.values()) <= res.makespan + 1e-9
+    # overlap can only shorten the serialized clock, never lengthen it
+    assert res.makespan <= res.serialized_cycles + 1e-9
+    assert res.overlapped_cycles == pytest.approx(
+        res.serialized_cycles - res.makespan
+    )
+    # the critical path is a decomposition of the makespan
+    assert sum(res.critical_path.values()) == pytest.approx(res.makespan)
+    for frac in res.utilization().values():
+        assert 0.0 <= frac <= 1.0 + 1e-9
+    # total_cycles is the makespan (the modeled chip time)
+    assert res.total_cycles == res.makespan
+
+
+@pytest.mark.parametrize("name,mk", MICROBENCHES)
+def test_fully_dependent_schedule_reproduces_serialized_totals(name, mk):
+    """Stripping the tags (every instruction a barrier) must give back the
+    legacy bucket-sum clock, bucket by bucket."""
+    cp = _compiled(name, mk, PIMSAB)
+    phased = Simulator(PIMSAB).run(cp.program)
+    untagged = Simulator(PIMSAB).run(_untag(cp.program))
+    assert untagged.makespan == pytest.approx(untagged.serialized_cycles)
+    assert untagged.serialized_cycles == pytest.approx(phased.serialized_cycles)
+    assert untagged.cycles == phased.cycles  # charges are schedule-independent
+    np.testing.assert_allclose(untagged.energy.total_j, phased.energy.total_j)
+
+
+@pytest.mark.parametrize("name,mk", MICROBENCHES)
+def test_serialize_compat_mode_ignores_tags(name, mk):
+    """Simulator(serialize=True) on the *tagged* program == the old clock."""
+    cp = _compiled(name, mk, PIMSAB)
+    compat = Simulator(PIMSAB, serialize=True).run(cp.program)
+    assert compat.makespan == pytest.approx(compat.serialized_cycles)
+    assert compat.overlapped_cycles == pytest.approx(0.0)
+
+
+def test_overlap_materializes_on_multiphase_schedules():
+    """The double-buffered Fig-11 GEMM and the streamed elementwise kernels
+    must actually model overlap (this is the point of the PR)."""
+    for name, mk in (("gemm", lambda: workloads.gemm()),
+                     ("vecadd", lambda: workloads.vecadd()),
+                     ("relu64k", lambda: workloads.relu(65536))):
+        cp = _compiled(name, mk, PIMSAB)
+        res = Simulator(PIMSAB).run(cp.program)
+        assert res.overlapped_cycles > 0, cp.mapping.workload.name
+
+
+def test_timeline_recording():
+    cp = _compiled("gemm", workloads.gemm, PIMSAB)
+    res = Simulator(PIMSAB, record_timeline=True).run(cp.program)
+    assert res.timeline is not None and len(res.timeline) == len(cp.program)
+    for ev in res.timeline:
+        assert ev["end"] >= ev["start"] >= 0.0
+        for stage_end in ev["stages"].values():
+            assert ev["start"] <= stage_end <= ev["end"]
+    assert max(ev["end"] for ev in res.timeline) == pytest.approx(res.makespan)
+
+
+# ---------------------------------------------------------------------------
+# 2. double-buffered / streamed schedule structure
+# ---------------------------------------------------------------------------
+
+
+def test_gemm_schedule_is_double_buffered():
+    cp = compile_workload(workloads.gemm(m=4096, n=32, k=512, prec=8, acc=32), PIMSAB)
+    m = cp.mapping
+    assert m.double_buffered
+    assert m.allocation.ranges.get("in_a.alt"), m.allocation.ranges
+    loads = [i for i in cp.program if isinstance(i, isa.DramLoad) and i.tag == "in_a"]
+    assert len(loads) > 1
+    # A/B chunk regions alternate
+    assert len({i.cram_addr for i in loads}) == 2
+    # prefetch window: loads (beyond the first two) depend on compute TWO
+    # chunks back, so the next chunk streams during the current MACs
+    assert any(i.after for i in loads)
+
+
+def test_streamed_elementwise_uses_staggered_tile_groups():
+    cp = _compiled("relu64k", lambda: workloads.relu(65536), PIMSAB)
+    assert cp.mapping.serial_iters == 1
+    loads = [i for i in cp.program if isinstance(i, isa.DramLoad)]
+    assert len(loads) > 1, "single-step map kernel should stream in tile groups"
+    seen_tiles = [i.tiles for i in loads]
+    assert all(t for t in seen_tiles), "group instructions carry explicit tiles"
+    flat = [t for grp in seen_tiles for t in grp]
+    assert sorted(flat) == list(range(cp.mapping.tiles_used)), "groups partition the tiles"
+    emitted = sum(
+        i.bits for i in cp.program if isinstance(i, (isa.DramLoad, isa.DramStore))
+    )
+    assert emitted == pytest.approx(cp.mapping.dram_bits, rel=0.05)
+
+
+def test_tile_groups_partition():
+    for tiles, n in [(1, 4), (3, 4), (4, 4), (120, 4), (7, 3)]:
+        groups = _tile_groups(tiles, n)
+        flat = [t for g in groups for t in g]
+        assert flat == list(range(tiles))
+        assert len(groups) == min(tiles, n)
+
+
+def test_double_buffering_declined_when_capacity_tight():
+    """A mapping whose buffers nearly fill the CRAM keeps the single-buffer
+    schedule and says so, instead of failing."""
+    w = workloads.gemv(m=512, k=2048, prec=16)
+    cp = compile_workload(w, PIMSAB)
+    m = cp.mapping
+    if not m.double_buffered:
+        assert any("double buffering declined" in n for n in m.notes), m.notes
+    else:  # capacity did allow it — the allocation must actually hold the alts
+        assert m.allocation.ranges.get("in_a.alt")
+
+
+# ---------------------------------------------------------------------------
+# 3. functional execution is schedule-independent
+# ---------------------------------------------------------------------------
+
+
+def test_functional_results_identical_under_overlap_and_compat():
+    """Same compiled program, same operands: the overlapped clock and the
+    fully-serialized compat clock produce bit-identical outputs."""
+    from repro.kernels.pimsab_backend import execute_workload
+
+    rng = np.random.default_rng(0)
+    w = Workload(
+        name="db_gemm",
+        loops=(Loop("x", 8, "data"), Loop("y", 4, "data"), Loop("k", 256, "reduce")),
+        out=Ref("c", ("x", "y"), prec=32),
+        ins=(Ref("a", ("x", "k"), prec=9), Ref("b", ("k", "y"), prec=9)),
+        op="mac",
+        acc_prec=32,
+    )
+    arrays = {
+        "a": rng.integers(-100, 100, (8, 256)),
+        "b": rng.integers(-100, 100, (256, 4)),
+    }
+    out_phased, _ = execute_workload(w, arrays)
+    out_serial, _ = execute_workload(w, arrays, serialize=True)
+    np.testing.assert_array_equal(out_phased, out_serial)
+    want = arrays["a"] @ arrays["b"]
+    np.testing.assert_array_equal(out_phased.reshape(8, 4), want)
+
+
+# ---------------------------------------------------------------------------
+# 4. satellite: DramStore ↔ DramLoad timing symmetry
+# ---------------------------------------------------------------------------
+
+
+def _dram_cycles(ins):
+    res = Simulator(PIMSAB).run([ins])
+    return res.makespan, dict(res.cycles)
+
+
+@pytest.mark.parametrize("bits", [4096, 9952 * 3, 10**6])
+def test_dram_store_load_symmetric_point_to_point(bits):
+    mk_load, lc = _dram_cycles(isa.DramLoad(bits=bits))
+    mk_store, sc = _dram_cycles(isa.DramStore(bits=bits))
+    assert mk_load == mk_store
+    assert lc == sc
+
+
+@pytest.mark.parametrize("tiles", [4, 120])
+def test_dram_store_gather_mirrors_load_broadcast(tiles):
+    """A gather funnel (store) pays exactly what the broadcast pipeline
+    (load) pays: per-tile H-tree + systolic NoC + DRAM stream, slowest stage
+    bounds throughput, + the burst latency."""
+    bits = 512 * 1024
+    mk_load, lc = _dram_cycles(isa.DramLoad(bits=bits, bcast_tiles=tiles))
+    mk_store, sc = _dram_cycles(isa.DramStore(bits=bits, gather_tiles=tiles))
+    assert mk_load == mk_store
+    assert lc == sc
+    assert sc["noc"] > 0, "the funnel must charge the NoC stage"
+
+
+def test_dram_store_latency_sensitivity_matches_load():
+    """Both paths must respond identically to dram_latency_cycles — the
+    original asymmetry regression."""
+    base = dataclasses.replace(PIMSAB, dram_latency_cycles=100)
+    slow = dataclasses.replace(PIMSAB, dram_latency_cycles=400)
+    for mk_ins in (lambda: isa.DramLoad(bits=65536), lambda: isa.DramStore(bits=65536)):
+        d_base = Simulator(base).run([mk_ins()]).makespan
+        d_slow = Simulator(slow).run([mk_ins()]).makespan
+        assert d_slow - d_base == 300, type(mk_ins()).__name__
+
+
+def test_dram_store_token_releases_at_cram_read_end():
+    """A phased consumer waiting on a store's token (WAR on the source
+    buffer) waits only for the CRAM read, not the DRAM ack latency — but the
+    makespan still includes the latency (data is not in DRAM before it)."""
+    store = isa.DramStore(bits=9952 * 4, phase="st0")
+    nxt = isa.Logical(dst=0, src1=0, src2=0, prec1=8, prec2=8, op="xor",
+                      phase="z1", after=("st0",))
+    res = Simulator(PIMSAB).run([store, nxt])
+    stream = 4  # 4*9952 bits / 9952 bits-per-cycle
+    lat = PIMSAB.dram_latency_cycles
+    # the zero started right after the stream, under the latency shadow
+    assert res.makespan == stream + lat  # store completion dominates
+    assert res.busy["compute"] == pytest.approx(8.0)
+
+
+# ---------------------------------------------------------------------------
+# 5. satellite: uninitialized-RF guard
+# ---------------------------------------------------------------------------
+
+
+def test_mac_const_without_rfload_raises():
+    sim = Simulator(PIMSAB)
+    with pytest.raises(UninitializedRfError, match="RF"):
+        sim.step(isa.MacConst(dst=0, prec_dst=16, src1=8, prec1=8, reg=3))
+
+
+def test_mul_const_without_rfload_raises_functional():
+    sim = Simulator(SMALL_CFG, functional=True)
+    with pytest.raises(UninitializedRfError):
+        sim.step(isa.MulConst(tiles=(0,), dst=0, prec_dst=16, src1=8, prec1=8, reg=7))
+
+
+def test_rfload_then_mac_const_ok():
+    sim = Simulator(SMALL_CFG, functional=True)
+    rng = np.random.default_rng(1)
+    a = rng.integers(-50, 50, 256)
+    sim.cram(0, 0).write(0, a, 8)
+    sim.run([
+        isa.RfLoad(reg=3, value=7),
+        isa.MacConst(tiles=(0,), dst=16, prec_dst=16, src1=0, prec1=8, reg=3),
+    ])
+    np.testing.assert_array_equal(sim.cram(0, 0).read(16, 16), a * 7)
