@@ -1,0 +1,133 @@
+"""End-to-end ResNet18-style network on the pimsab backend.
+
+The paper's headline evaluation is a whole DL network on the full chip, not
+isolated kernels — and kernel-only numbers are known to mispredict
+network-level behavior (Gómez-Luna et al., 2021).  This benchmark pins the
+network-level trajectory in two regimes:
+
+* ``tiny``     — the :data:`repro.models.resnet.TINY` instance is traced
+  (``api.trace``) into one DAG Program, compiled onto the pimsab backend as
+  a single fused ``WorkloadGraph``, and **executed bit-exactly** on the
+  bit-serial functional simulator against the JAX oracle.  The aggregated
+  SimReport supplies modeled end-to-end cycles/energy, the per-layer cycle
+  breakdown, the CRAM-resident residual-block edges, and the elided DRAM
+  traffic.
+* ``resnet18`` — the paper-shaped config (4 stages × 2 BasicBlocks) is
+  traced and lowered **timing-only** at full chip scale
+  (``pimsab_backend.timing_program_report``): modeled cycles per layer for a
+  network far beyond what bit-serial functional simulation can chew.
+
+``benchmarks/kernels_bench.py`` embeds :func:`collect`'s result under the
+``"e2e"`` key of ``BENCH_kernels.json``; its ``--check`` gate diffs the
+modeled end-to-end and per-layer cycles against the committed baseline and
+fails CI on a >5% regression.  Standalone: ``PYTHONPATH=src python
+benchmarks/e2e_resnet.py`` prints the same summary.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.kernels import api
+from repro.kernels import pimsab_backend as pb
+from repro.models import resnet
+
+
+def _per_layer(rep) -> List[Dict[str, Any]]:
+    return [
+        {
+            "node": p["node"],
+            "kernel": p["kernel"],
+            "total_cycles": p["total_cycles"],
+            "serialized_cycles": p["serialized_cycles"],
+            "dram_cycles": p["dram_cycles"],
+        }
+        for p in rep.per_kernel
+    ]
+
+
+def run_tiny(seed: int = 0) -> Dict[str, Any]:
+    """Trace TINY, execute it bit-exactly on the pimsab backend, and return
+    the end-to-end modeled numbers + per-layer breakdown."""
+    cfg = resnet.TINY
+    params = resnet.init_params(cfg, seed=seed)
+    x = resnet.make_input(cfg, batch=1, seed=seed + 1)
+    with api.use_backend("xla"):
+        want = resnet.forward(cfg, params, x)
+    traced = api.trace(lambda p, v: resnet.forward(cfg, p, v), name="resnet_tiny")
+    before = api.compile_cache_info()
+    with api.use_backend("pimsab"):
+        got = traced(params, x)
+        rep = api.last_sim_report()
+        api.compile(traced.program_for(params, x))  # identical signature
+    after = api.compile_cache_info()
+    return {
+        "config": "TINY",
+        "layers": len(rep.kernels),
+        "kernels": list(rep.kernels),
+        "bit_exact_vs_oracle": bool((np.asarray(want) == np.asarray(got)).all()),
+        "modeled_cycles": rep.total_cycles,
+        "serialized_cycles": rep.serialized_cycles,
+        "overlapped_cycles": rep.overlapped_cycles,
+        "dram_cycles": rep.cycles["dram"],
+        "modeled_seconds": rep.modeled_seconds,
+        "energy_j": rep.energy_j,
+        "cycle_breakdown": {k: round(v, 4) for k, v in rep.cycle_breakdown.items()},
+        "utilization": {k: round(v, 4) for k, v in rep.utilization.items()},
+        "resident_edges": list(rep.resident_edges),
+        "elided_dram_bits": rep.elided_dram_bits,
+        "per_layer": _per_layer(rep),
+        "compile_cache": {
+            "second_compile_was_hit": after.hits > before.hits,
+            "misses_added": after.misses - before.misses,
+        },
+    }
+
+
+def run_resnet18_timing(seed: int = 0) -> Dict[str, Any]:
+    """Trace the paper-shaped RESNET18 config and model it timing-only at
+    full chip scale (no functional execution)."""
+    cfg = resnet.RESNET18
+    params = resnet.init_params(cfg, seed=seed)
+    x = resnet.make_input(cfg, batch=1, seed=seed + 1)
+    traced = api.trace(lambda p, v: resnet.forward(cfg, p, v), name="resnet18")
+    prog = traced.trace(params, x)
+    rep = pb.timing_program_report(prog)
+    return {
+        "config": "RESNET18",
+        "layers": len(rep.kernels),
+        "modeled_cycles": rep.total_cycles,
+        "serialized_cycles": rep.serialized_cycles,
+        "overlapped_cycles": rep.overlapped_cycles,
+        "dram_cycles": rep.cycles["dram"],
+        "modeled_seconds": rep.modeled_seconds,
+        "energy_j": rep.energy_j,
+        "cycle_breakdown": {k: round(v, 4) for k, v in rep.cycle_breakdown.items()},
+        "resident_edges": len(rep.resident_edges),
+        "elided_dram_bits": rep.elided_dram_bits,
+        "per_layer": _per_layer(rep),
+    }
+
+
+def collect() -> Dict[str, Any]:
+    """The ``"e2e"`` section of ``BENCH_kernels.json``."""
+    return {"tiny": run_tiny(), "resnet18": run_resnet18_timing()}
+
+
+def main() -> Dict[str, Any]:
+    result = collect()
+    for name, sec in result.items():
+        print(f"--- e2e:{name} ---")
+        for k, v in sec.items():
+            if k == "per_layer":
+                for p in v:
+                    print(f"    {p['node']:>22}  cycles={p['total_cycles']:>10.0f}  "
+                          f"dram={p['dram_cycles']:>9.0f}")
+            else:
+                print(f"  {k}: {v}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,10 @@ A **program-mode** section runs the `matmul → ewise_add → relu` chain throug
 ``api.trace``/``api.compile`` on the pimsab backend and records the
 fused-vs-eager DRAM-cycle win (the elided store/load pairs) plus the compile
 cache behaviour — pinning the Program API's headline number as an artifact.
+An **e2e** section (``benchmarks/e2e_resnet.py``) does the same at network
+scale: the ResNet18-style DAG program executed bit-exactly on the functional
+simulator plus the paper-shaped config modeled timing-only, with per-layer
+cycles gated individually (schema: ``docs/benchmarks.md``).
 
 Since the phase-timeline refactor, every pimsab entry carries both clocks:
 ``modeled_cycles`` is the overlapped makespan (double-buffered / staggered
@@ -61,6 +65,24 @@ TIMELINE_PATH = REPO_ROOT / "BENCH_kernels_timeline.json"
 # validation shape).  A kernel registered without an entry here still fails
 # loudly in run() — coverage is enforced by the registry, not this dict.
 _SEED = 0
+
+
+def _img(shape, lo=-100, hi=100, seed=0):
+    """Random int32 tensor for the conv/pool/int-matmul bench cases."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, shape), jnp.int32)
+
+
+def _wconv(shape, seed=0):
+    """Random int8-range conv weight (int32 storage)."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-127, 128, shape), jnp.int32)
+
+
+def _validate_binary(fn, oracle, x, w) -> bool:
+    with api.use_backend("interpret"):
+        got = fn(x, w)
+    return bool(jnp.allclose(oracle(x, w), got))
 
 
 def _bitslice_args(m, n, k, xb, wb):
@@ -120,6 +142,55 @@ def _cases() -> Dict[str, Dict[str, Callable]]:
                 jax.random.normal(jax.random.key(8), (64, 128), jnp.float32),
             ),
         },
+        "conv2d": {
+            "bench": lambda: _bench_call(
+                lambda x, w: api.conv2d(x, w, stride=1, padding=1),
+                _img((8, 32, 32, 32), seed=9), _wconv((32, 32, 3, 3), seed=10),
+            ),
+            "validate": lambda: _validate_binary(
+                lambda x, w: api.conv2d(x, w, stride=1, padding=1),
+                lambda x, w: ref.conv2d_ref(x, w, stride=1, padding=1),
+                _img((1, 4, 8, 8), seed=11), _wconv((4, 4, 3, 3), seed=12),
+            ),
+        },
+        "int_matmul": {
+            "bench": lambda: _bench_call(
+                api.int_matmul, _img((512, 512), seed=13), _img((512, 512), seed=14),
+            ),
+            "validate": lambda: _validate_binary(
+                api.int_matmul, ref.int_matmul_ref,
+                _img((32, 64), seed=15), _img((64, 16), seed=16),
+            ),
+        },
+        "maxpool2d": {
+            "bench": lambda: _bench_call(
+                lambda x: api.maxpool2d(x, window=2), _img((8, 32, 64, 64), seed=17),
+            ),
+            "validate": lambda: _validate_unary(
+                lambda x: api.maxpool2d(x, window=2),
+                lambda x: ref.maxpool2d_ref(x, window=2),
+                _img((2, 4, 16, 16), seed=18),
+            ),
+        },
+        "avgpool2d": {
+            "bench": lambda: _bench_call(
+                lambda x: api.avgpool2d(x, window=2), _img((8, 32, 64, 64), seed=19),
+            ),
+            "validate": lambda: _validate_unary(
+                lambda x: api.avgpool2d(x, window=2),
+                lambda x: ref.avgpool2d_ref(x, window=2),
+                _img((2, 4, 16, 16), seed=20),
+            ),
+        },
+        "global_avgpool": {
+            "bench": lambda: _bench_call(
+                api.global_avgpool, _img((8, 256, 32, 32), seed=21),
+            ),
+            "validate": lambda: _validate_unary(
+                api.global_avgpool, ref.global_avgpool_ref,
+                _img((2, 8, 16, 16), seed=22),
+            ),
+        },
     }
 
 
@@ -161,12 +232,54 @@ def _pimsab_cases() -> Dict[str, Callable]:
             got = api.relu(x)
         return bool((np.asarray(got) == np.asarray(jnp.maximum(x, 0))).all())
 
+    def _conv():
+        x = _img((1, 3, 8, 8), -8, 8, seed=30)
+        w = _wconv((4, 3, 3, 3), seed=31)
+        want = ref.conv2d_ref(x, w, stride=1, padding=1)
+        with api.use_backend("pimsab"):
+            got = api.conv2d(x, w, stride=1, padding=1)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
+    def _intmm():
+        x = _img((16, 32), seed=32)
+        w = _img((32, 8), seed=33)
+        want = ref.int_matmul_ref(x, w)
+        with api.use_backend("pimsab"):
+            got = api.int_matmul(x, w)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
+    def _maxpool():
+        x = _img((1, 4, 8, 8), seed=34)
+        want = ref.maxpool2d_ref(x, window=2)
+        with api.use_backend("pimsab"):
+            got = api.maxpool2d(x, window=2)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
+    def _avgpool():
+        x = _img((1, 4, 8, 8), seed=35)
+        want = ref.avgpool2d_ref(x, window=2)
+        with api.use_backend("pimsab"):
+            got = api.avgpool2d(x, window=2)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
+    def _gap():
+        x = _img((2, 8, 4, 4), seed=36)
+        want = ref.global_avgpool_ref(x)
+        with api.use_backend("pimsab"):
+            got = api.global_avgpool(x)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
     return {
         "bitslice_matmul": _matmul,
         "htree_reduce": _htree,
         "rglru_scan": _rglru,
         "ewise_add": _ewise,
         "relu": _relu,
+        "conv2d": _conv,
+        "int_matmul": _intmm,
+        "maxpool2d": _maxpool,
+        "avgpool2d": _avgpool,
+        "global_avgpool": _gap,
     }
 
 
@@ -398,6 +511,11 @@ def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> L
         failures.append("program: traced chain no longer bit-exact vs eager pimsab")
     if not result["program"]["compile_cache"]["second_compile_was_hit"]:
         failures.append("program: second identical compile was not a cache hit")
+    tiny = result["e2e"]["tiny"]
+    if not tiny["bit_exact_vs_oracle"]:
+        failures.append("e2e: traced ResNet no longer bit-exact vs the JAX oracle")
+    if not tiny["compile_cache"]["second_compile_was_hit"]:
+        failures.append("e2e: second identical network compile was not a cache hit")
 
     def gate(label: str, new: Optional[float], old: Optional[float]) -> None:
         if not old or new is None:
@@ -426,6 +544,19 @@ def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> L
         result["program"]["dram_cycles"],
         baseline.get("program", {}).get("dram_cycles"),
     )
+    # end-to-end network gates: total + per-layer modeled cycles, both configs
+    for net in ("tiny", "resnet18"):
+        new_sec = result["e2e"][net]
+        old_sec = baseline.get("e2e", {}).get(net, {})
+        gate(f"e2e:{net}", new_sec["modeled_cycles"], old_sec.get("modeled_cycles"))
+        gate(f"e2e:{net}:dram", new_sec["dram_cycles"], old_sec.get("dram_cycles"))
+        old_layers = {p["node"]: p for p in old_sec.get("per_layer", [])}
+        for p in new_sec["per_layer"]:
+            gate(
+                f"e2e:{net}:{p['node']}",
+                p["total_cycles"],
+                old_layers.get(p["node"], {}).get("total_cycles"),
+            )
     return failures
 
 
@@ -433,6 +564,11 @@ def main(check: bool = False, profile: bool = False) -> Dict:
     # per-phase timeline artifact: collected from the SAME modeling pass the
     # bench rows come from (no double compile) — the large shapes plus the
     # fused program chain
+    try:
+        from benchmarks import e2e_resnet
+    except ImportError:  # run as `python benchmarks/kernels_bench.py`
+        import e2e_resnet
+
     timelines: Optional[Dict] = {} if profile else None
     profile_ctx = api.profile_timelines() if profile else contextlib.nullcontext()
     with profile_ctx:
@@ -440,6 +576,7 @@ def main(check: bool = False, profile: bool = False) -> Dict:
             "kernels": run(),
             "large_shapes": large_shapes(timelines),
             "program": program_mode(timelines),
+            "e2e": e2e_resnet.collect(),
         }
     if check:
         if not OUT_PATH.exists():
@@ -461,6 +598,9 @@ def main(check: bool = False, profile: bool = False) -> Dict:
     for r in result["large_shapes"]:
         print(r)
     print("program:", result["program"])
+    for net, sec in result["e2e"].items():
+        print(f"e2e:{net}:", {k: v for k, v in sec.items()
+                              if k not in ("per_layer", "kernels")})
     print(f"wrote {OUT_PATH}")
     return result
 

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """API smoke check: import every public symbol and reject deprecated usage.
 
-Three gates (all run in CI):
+Four gates (all run in CI):
 
 1. every public symbol of the unified kernel API (incl. the Program API) and
    its consumers imports cleanly (catches circular imports / missing exports
@@ -10,7 +10,10 @@ Three gates (all run in CI):
    ``impl=`` kwarg — kernel dispatch must go through the backend registry
    (``repro.kernels.api.use_backend``);
 3. nothing anywhere in the repo imports the removed ``repro.kernels.ops``
-   shim module.
+   shim module;
+4. every public symbol exported by ``repro.kernels.api`` and
+   ``repro.kernels.program`` (their ``__all__``) carries a docstring — the
+   API surface is self-documenting by construction.
 
 Exit code 0 on success, 1 with a report on failure.
 """
@@ -18,6 +21,7 @@ from __future__ import annotations
 
 import ast
 import importlib
+import inspect
 import sys
 import traceback
 from pathlib import Path
@@ -32,16 +36,19 @@ PUBLIC_MODULES = [
     "repro.kernels.program",
     "repro.kernels.ref",
     "repro.kernels.ewise",
+    "repro.kernels.conv",
     "repro.kernels.pimsab_backend",
     "repro.dist.sharding",
     "repro.dist.collectives",
     "repro.models.common",
     "repro.models.attention",
     "repro.models.transformer",
+    "repro.models.resnet",
     "repro.serve.engine",
     "repro.launch.specs",
     "repro.train.steps",
     "benchmarks.kernels_bench",
+    "benchmarks.e2e_resnet",
     "benchmarks.pimsab_run",
 ]
 
@@ -58,6 +65,11 @@ API_SYMBOLS = [
     "quantized_matmul",
     "ewise_add",
     "relu",
+    "conv2d",
+    "maxpool2d",
+    "avgpool2d",
+    "global_avgpool",
+    "int_matmul",
     "last_sim_report",
     "profile_timelines",
     "zero_slice_pairs",
@@ -87,7 +99,9 @@ def check_imports() -> list[str]:
             if not hasattr(api, sym):
                 errors.append(f"repro.kernels.api missing public symbol {sym!r}")
         kernels = api.registered_kernels()
-        for required in ("bitslice_matmul", "htree_reduce", "rglru_scan", "ewise_add", "relu"):
+        for required in ("bitslice_matmul", "htree_reduce", "rglru_scan",
+                         "ewise_add", "relu", "conv2d", "maxpool2d",
+                         "avgpool2d", "global_avgpool", "int_matmul"):
             if required not in kernels:
                 errors.append(f"kernel {required!r} not registered")
         if "pimsab" not in api.BACKENDS:
@@ -163,8 +177,36 @@ def check_no_ops_import() -> list[str]:
     return errors
 
 
+def check_public_docstrings() -> list[str]:
+    """Gate 4: every ``__all__`` export of the kernel API surface documents
+    itself.  Non-callable data exports (e.g. the ``BACKENDS`` tuple) cannot
+    carry docstrings and are exempt; everything callable — functions,
+    classes, re-exports — must have one (inherited docstrings via
+    ``inspect.getdoc`` count: an alias like ``api.compile`` documents
+    through its target)."""
+    errors = []
+    for modname in ("repro.kernels.api", "repro.kernels.program"):
+        try:
+            mod = importlib.import_module(modname)
+        except Exception:
+            errors.append(f"import {modname} failed:\n{traceback.format_exc()}")
+            continue
+        exported = getattr(mod, "__all__", None)
+        if not exported:
+            errors.append(f"{modname} has no __all__ — public surface undeclared")
+            continue
+        for sym in exported:
+            obj = getattr(mod, sym, None)
+            if obj is None:
+                errors.append(f"{modname}.{sym} is exported but missing")
+            elif (callable(obj) or inspect.isclass(obj)) and not inspect.getdoc(obj):
+                errors.append(f"{modname}.{sym} has no docstring (public API surface)")
+    return errors
+
+
 def main() -> int:
-    errors = check_imports() + check_no_impl_kwarg() + check_no_ops_import()
+    errors = (check_imports() + check_no_impl_kwarg() + check_no_ops_import()
+              + check_public_docstrings())
     if errors:
         print("check_api: FAIL")
         for e in errors:
@@ -173,7 +215,7 @@ def main() -> int:
     print(
         f"check_api: OK ({len(PUBLIC_MODULES)} modules, "
         f"{len(API_SYMBOLS)} api symbols, no impl= call sites, "
-        "no repro.kernels.ops imports)"
+        "no repro.kernels.ops imports, public API surface documented)"
     )
     return 0
 

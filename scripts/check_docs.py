@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Docs consistency check (run in CI; stdlib only).
+
+Two gates:
+
+1. every intra-repo markdown link in ``README.md`` and ``docs/*.md``
+   resolves — both file targets (``docs/compiler.md``,
+   ``src/repro/core/cram.py``) and ``#fragment`` anchors within the same
+   document (GitHub-style heading slugs);
+2. the tier-1 verify command declared in ``ROADMAP.md`` is quoted verbatim
+   in ``README.md`` — the canonical command must not drift between the two.
+
+External links (``http(s)://``) are out of scope.  Exit code 0 on success,
+1 with a report on failure.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+# [text](target) — excluding images; tolerate titles after the target
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dashes for
+    spaces (close enough for the headings we write)."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\s-]", "", text, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", text).strip("-")
+
+
+def _anchors(md: str) -> set[str]:
+    return {_slug(h) for h in _HEADING_RE.findall(md)}
+
+
+def check_links() -> list[str]:
+    errors: list[str] = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(REPO)}: expected doc file missing")
+            continue
+        md = doc.read_text()
+        anchors = _anchors(md)
+        for m in _LINK_RE.finditer(md):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            if not path_part:  # same-document fragment
+                if frag and _slug(frag) not in anchors:
+                    errors.append(
+                        f"{doc.relative_to(REPO)}: dangling anchor #{frag}"
+                    )
+                continue
+            resolved = (doc.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{doc.relative_to(REPO)}: broken link {target!r} "
+                    f"({resolved.relative_to(REPO) if resolved.is_relative_to(REPO) else resolved} missing)"
+                )
+            elif frag and resolved.suffix == ".md":
+                if _slug(frag) not in _anchors(resolved.read_text()):
+                    errors.append(
+                        f"{doc.relative_to(REPO)}: dangling anchor "
+                        f"{target!r} (no such heading)"
+                    )
+    return errors
+
+
+def check_tier1_verbatim() -> list[str]:
+    roadmap_path = REPO / "ROADMAP.md"
+    if not roadmap_path.exists():
+        return ["ROADMAP.md: missing — cannot check the tier-1 verify command"]
+    roadmap = roadmap_path.read_text()
+    m = re.search(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`", roadmap)
+    if not m:
+        return ["ROADMAP.md: no `**Tier-1 verify:** \\`...\\`` line found"]
+    cmd = m.group(1)
+    if cmd not in (REPO / "README.md").read_text():
+        return [
+            "README.md: ROADMAP's tier-1 verify command is not quoted "
+            f"verbatim — expected the exact string `{cmd}`"
+        ]
+    return []
+
+
+def main() -> int:
+    errors = check_links() + check_tier1_verbatim()
+    if errors:
+        print("check_docs: FAIL")
+        for e in errors:
+            print(" -", e)
+        return 1
+    n_links = sum(
+        1
+        for doc in DOC_FILES
+        for m in _LINK_RE.finditer(doc.read_text())
+        if not m.group(1).startswith(("http://", "https://"))
+    )
+    print(
+        f"check_docs: OK ({len(DOC_FILES)} docs, {n_links} intra-repo links "
+        "resolve, tier-1 verify command verbatim in README)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

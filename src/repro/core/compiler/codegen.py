@@ -383,9 +383,14 @@ def compile_workload(
                          phase=f"rh{step}", after=(f"ri{step}",))
                     tail = f"rh{step}"
             if stores:
+                # an average pool (div_shift > 0) stores the accumulator read
+                # `div_shift` wordlines up: a free arithmetic >> div_shift —
+                # the floor divide by the power-of-two window count (§V-C
+                # bit-serial-awareness: division by 2^s is an address offset)
                 emit(isa.DramStore(
-                    dram_addr=0, cram_addr=out_addr,
-                    bits=int(out_total / m.serial_iters), prec=m.out_prec,
+                    dram_addr=0, cram_addr=out_addr + w.div_shift,
+                    bits=int(out_total / m.serial_iters),
+                    prec=m.out_prec - w.div_shift,
                     tag=tp + "out",
                 ), phase=f"st{step}", after=(tail,))
                 prev_tail = f"st{step}"
@@ -463,6 +468,48 @@ def compile_workload(
                     ), phase=f"st{ti}", after=(f"ad{ti}",))
                     ti += 1
                 chunk_tail[ci] = f"ad{ti - 1}"
+
+    elif w.op == "maxpool":
+        # window max: out = a_0, then per remaining window element a CmpGE
+        # writes the predicate wordline, SetMask latches it, and a masked Copy
+        # keeps the larger value — the paper's predicated-execution idiom
+        # (same CmpGE/mask path relu uses).  The whole window is resident
+        # (the fold mutates `out` in place), so there is no k-chunking.
+        pred_addr = _addr(m, "pred")
+        loads_a = "in_a" not in elide
+        stores = "out" not in elide
+        kk = max(1, k)
+        prev_cp: Optional[str] = None
+        prev_st: Optional[str] = None
+        for step in range(m.serial_iters):
+            if loads_a:
+                # WAR: the load overwrites the window the previous step's
+                # fold still reads
+                emit(isa.DramLoad(
+                    dram_addr=0, cram_addr=a_addr,
+                    bits=int(a_total / m.serial_iters), prec=pa,
+                    tag=tp + "in_a", fields=kk,
+                ), phase=f"la{step}", after=(prev_cp,) if prev_cp else ())
+            la = f"la{step}" if loads_a else None
+            war: Tuple[Optional[str], ...] = (prev_st,) if prev_st else ()
+            emit(isa.Copy(dst=out_addr, prec_dst=m.out_prec, src1=a_addr,
+                          prec1=pa), phase=f"cp{step}", after=war + (la,))
+            for j in range(1, kk):
+                emit(isa.CmpGE(dst=pred_addr, src1=a_addr + j * pa, prec1=pa,
+                               src2=out_addr, prec2=pa),
+                     phase=f"cp{step}", after=(la,))
+                emit(isa.SetMask(src=pred_addr), phase=f"cp{step}")
+                emit(isa.Copy(dst=out_addr, prec_dst=m.out_prec,
+                              src1=a_addr + j * pa, prec1=pa,
+                              pred=isa.Pred.MASK), phase=f"cp{step}")
+            prev_cp = f"cp{step}"
+            if stores:
+                emit(isa.DramStore(
+                    dram_addr=0, cram_addr=out_addr,
+                    bits=int(out_total / m.serial_iters), prec=m.out_prec,
+                    tag=tp + "out",
+                ), phase=f"st{step}", after=(f"cp{step}",))
+                prev_st = f"st{step}"
 
     elif w.op == "stencil_mac":
         taps = max(r.stencil for r in w.ins)

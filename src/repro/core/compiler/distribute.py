@@ -82,13 +82,20 @@ def _buffer_reqs(
         stages = int(math.log2(min(reduce_split, cram_cols)))
         return 2 * (p + stages)
 
-    if w.op in ("map_add", "map_mul", "relu", "maxpool"):
+    if w.op in ("map_add", "map_mul", "relu"):
         reqs.append(BufferReq("in_a", pa, pa))
         if len(w.ins) > 1 and not w.ins[1].is_const:
             reqs.append(BufferReq("in_b", pb, pb))
         reqs.append(BufferReq("out", out_prec, w.acc_prec))
         if w.op == "relu":
             reqs.append(BufferReq("pred", 1, 1))  # CmpGE predicate wordline
+    elif w.op == "maxpool":
+        # the whole window is resident per lane: the CmpGE+masked-copy fold
+        # mutates `out` in place, so the window cannot stream in chunks
+        kk = max(1, w.reduce_extent())
+        reqs.append(BufferReq("in_a", kk * pa, kk * pa))
+        reqs.append(BufferReq("out", out_prec, w.acc_prec))
+        reqs.append(BufferReq("pred", 1, 1))
     elif w.op == "scan_mac":
         # sequential recurrence: both streams are data-parallel per lane; the
         # product tmp is full-width (its high bits are read back for the
@@ -159,10 +166,12 @@ def _dram_bits(w: Workload, cfg: PimsabConfig, tiles: int, bcast_b: bool) -> Dic
     k = w.reduce_extent()
     pa = w.ins[0].prec
     split = {"a": 0.0, "b": 0.0, "out": float(d * w.out.prec)}
-    if w.op in ("map_add", "map_mul", "relu", "maxpool"):
+    if w.op in ("map_add", "map_mul", "relu"):
         split["a"] = d * pa
         if len(w.ins) > 1 and not w.ins[1].is_const:
             split["b"] = d * w.ins[1].prec
+    elif w.op == "maxpool":
+        split["a"] = d * k * pa  # every window element streams in once
     elif w.op == "stencil_mac":
         split["a"] = d * pa  # each element loaded once; taps slide via shifts
     elif w.op == "scan_mac":
@@ -358,7 +367,9 @@ def _better(a: Mapping, b: Mapping) -> bool:
 # ---------------------------------------------------------------------------
 
 # consumer ops that read their inputs lane-contiguously, one element per lane
-_MAP_OPS = ("map_add", "map_mul", "relu", "maxpool")
+# (maxpool is NOT one: each of its output lanes gathers a whole window of
+# input elements, so it can never read a producer's output in place)
+_MAP_OPS = ("map_add", "map_mul", "relu")
 
 
 @dataclass

@@ -53,8 +53,14 @@ class Workload:
     # "map_add" | "map_mul" | "mac" | "stencil_mac" | "scan_mac" | "relu" | "maxpool"
     # scan_mac: out_t = a_t · out_{t-1} + b_t — the reduce loop is *sequential
     # per lane* (a linear recurrence), never split across lanes.
+    # maxpool: fold the reduce window via CmpGE + masked copy (whole window
+    # resident per lane — the fold mutates `out` in place, so it cannot chunk).
     op: str
     acc_prec: int = 32  # the *program's* accumulator precision (pre-adaptive)
+    # average pools are `mac` reductions against the constant 1 whose store
+    # reads the accumulator `div_shift` wordlines up — a free arithmetic
+    # >> div_shift (floor divide by the power-of-two window count)
+    div_shift: int = 0
 
     def loop(self, name: str) -> Loop:
         for l in self.loops:

@@ -76,6 +76,11 @@ __all__ = [
     "rglru_scan",
     "ewise_add",
     "relu",
+    "conv2d",
+    "maxpool2d",
+    "avgpool2d",
+    "global_avgpool",
+    "int_matmul",
     "static_value",
     "last_executed_pairs",
     "last_sim_report",
@@ -423,6 +428,7 @@ def _ensure_registered() -> None:
     if _bootstrapped:
         return
     import repro.kernels.bitslice_matmul  # noqa: F401
+    import repro.kernels.conv  # noqa: F401
     import repro.kernels.ewise  # noqa: F401
     import repro.kernels.htree_reduce  # noqa: F401
     import repro.kernels.rglru_scan  # noqa: F401
@@ -433,6 +439,8 @@ def _ensure_registered() -> None:
 
 
 def get_kernel(name: str) -> KernelDef:
+    """The :class:`KernelDef` registered under ``name`` (KeyError with the
+    registered-name list when absent)."""
     _ensure_registered()
     try:
         return _REGISTRY[name]
@@ -562,6 +570,9 @@ _last_pairs = threading.local()
 
 
 def last_executed_pairs() -> Tuple[Tuple[int, int], ...]:
+    """The (s, t) slice-pair list the most recent bit-sliced matmul dispatch
+    on this thread actually executed — regression tests assert statically
+    skipped pairs never appear here."""
     return getattr(_last_pairs, "pairs", ())
 
 
@@ -661,6 +672,79 @@ def relu(x: jnp.ndarray, *, block: int = 512) -> jnp.ndarray:
     """Elementwise max(x, 0) on the active backend (PIMSAB: CmpGE + predicated
     copy through the PE mask latch)."""
     return dispatch("relu", x, pallas_kwargs={"block": block})
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    x_bits: Optional[int] = None,
+    w_bits: Optional[int] = None,
+    block: Optional[Tuple[int, int]] = None,
+) -> jnp.ndarray:
+    """2-D convolution ``(N, C, H, W) × (OC, C, KH, KW) → (N, OC, OH, OW)``
+    on the active backend.
+
+    Integer inputs accumulate in int32 (wrapping — bit-exact across
+    backends); the pimsab backend lowers via im2col onto the ``mac`` gemm
+    pipeline.  ``x_bits``/``w_bits`` are static precision hints for the
+    pimsab lowering (program mode cannot calibrate from values); when they
+    bound the operand magnitudes — or saturate at 32, where wraparound
+    matches int32 — results stay bit-exact.
+    """
+    return dispatch(
+        "conv2d", x, w, stride=stride, padding=padding,
+        x_bits=x_bits, w_bits=w_bits,
+        pallas_kwargs=None if block is None else {"block": block},
+    )
+
+
+def maxpool2d(
+    x: jnp.ndarray, *, window: int = 2, stride: Optional[int] = None,
+    block: int = 512,
+) -> jnp.ndarray:
+    """Window max pooling ``(N, C, H, W) → (N, C, OH, OW)`` (no padding;
+    ``stride`` defaults to ``window``).  PIMSAB folds the window with CmpGE +
+    masked copies — the same predicated-execution idiom relu uses."""
+    return dispatch(
+        "maxpool2d", x, window=window, stride=stride,
+        pallas_kwargs={"block": block},
+    )
+
+
+def avgpool2d(
+    x: jnp.ndarray, *, window: int = 2, block: int = 512
+) -> jnp.ndarray:
+    """Window average pooling, stride == window.  Integer inputs floor-divide
+    by the window count — on PIMSAB the divide is free: the store reads the
+    sum accumulator at a wordline offset (arithmetic right shift), so the
+    window count must be a power of two there."""
+    return dispatch("avgpool2d", x, window=window, pallas_kwargs={"block": block})
+
+
+def global_avgpool(x: jnp.ndarray, *, block: int = 512) -> jnp.ndarray:
+    """Global spatial average ``(N, C, H, W) → (N, C)`` (integer inputs
+    floor-divide by H·W; a power of two on the pimsab backend)."""
+    return dispatch("global_avgpool", x, pallas_kwargs={"block": block})
+
+
+def int_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    x_bits: Optional[int] = None,
+    w_bits: Optional[int] = None,
+    block: Optional[Tuple[int, int]] = None,
+) -> jnp.ndarray:
+    """Raw-integer ``(M, K) @ (K, N)`` with int32 accumulation — the
+    network-head matmul for activations that arrive as another kernel's
+    integer output (no :class:`SlicedTensor` slice stacks involved)."""
+    return dispatch(
+        "int_matmul", x, w, x_bits=x_bits, w_bits=w_bits,
+        pallas_kwargs=None if block is None else {"block": block},
+    )
 
 
 def last_sim_report():

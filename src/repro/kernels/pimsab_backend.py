@@ -28,9 +28,11 @@ pimsab-backed kernel under ``jax.jit`` raises ``api.PimsabTracerError`` early
 (from ``api.dispatch``), naming the kernel and pointing at ``api.trace``.
 
 **Program lowering and DRAM elision.**  Eager dispatch lowers one kernel per
-call through :func:`execute_workload`; a traced ``api.Program`` instead
-lowers through :func:`compile_traced_program` into one
-``tensor_dsl.WorkloadGraph`` compiled as a single fused ISA stream.  On a
+call through :func:`execute_workload`; a traced ``api.Program`` — a DAG with
+multi-consumer values, fan-in nodes and multiple outputs (e.g. the residual
+blocks of ``repro.models.resnet``) — instead lowers through
+:func:`compile_traced_program` into one ``tensor_dsl.WorkloadGraph``
+compiled as a single fused ISA stream.  On a
 producer→consumer edge whose boundary value lives in the **raw integer
 domain** (``frac == 0``, no dequantization epilogue — e.g. an unscaled
 ``bitslice_matmul`` accumulator feeding ``ewise_add``/``relu``), the
@@ -80,10 +82,13 @@ from repro.core.simulator import Simulator
 from repro.core import timing as core_timing
 from repro.kernels.api import PimsabTracerError, register_pimsab_impl, static_value
 
+from repro.kernels import ref as kref
+
 # the lowerings attach to already-registered kernels: importing the kernel
 # modules here makes a direct `import repro.kernels.pimsab_backend` work the
 # same as the lazy registry bootstrap
 import repro.kernels.bitslice_matmul  # noqa: E402,F401
+import repro.kernels.conv  # noqa: E402,F401
 import repro.kernels.ewise  # noqa: E402,F401
 import repro.kernels.htree_reduce  # noqa: E402,F401
 import repro.kernels.rglru_scan  # noqa: E402,F401
@@ -101,6 +106,7 @@ __all__ = [
     "CompiledTracedProgram",
     "compile_traced_program",
     "execute_traced_program",
+    "timing_program_report",
 ]
 
 # Functional machine: a small mesh so bit-exact bit-serial execution stays
@@ -680,6 +686,211 @@ def _relu_pimsab(x, **_) -> jnp.ndarray:
     return jnp.asarray((out.reshape(xv.shape).astype(np.float64) / (1 << frac)).astype(np.float32))
 
 
+# ---------------------------------------------------------------------------
+# conv / pool / raw-integer-gemm lowerings (the DL-network layer set)
+# ---------------------------------------------------------------------------
+
+
+def _clamp_bits(bits: int) -> int:
+    """Clamp an integer-precision bound to [2, 32]: 32 is where the CRAM
+    accumulator's wraparound equals int32, so a saturated bound still
+    matches the oracle bit-for-bit.  The single clamp rule shared by the
+    eager (value-calibrated) and program-mode (signature-stable) paths."""
+    return max(2, min(int(bits), 32))
+
+
+def _hint_bits(hint, values: Optional[np.ndarray]) -> int:
+    """Integer operand precision for eager lowering: the caller's static
+    hint when given, else calibrated from the values."""
+    return _clamp_bits(int(hint) if hint is not None else _int_bits(values))
+
+
+def _require_int(name: str, *arrays: np.ndarray) -> None:
+    for a in arrays:
+        if not np.issubdtype(a.dtype, np.integer):
+            raise NotImplementedError(
+                f"the pimsab {name!r} lowering runs the raw-integer path "
+                "(int32 accumulate, bit-exact); quantize float operands first"
+            )
+
+
+def _pool_shift(count: int, name: str) -> int:
+    """log2 of the window count — the wordline offset the average-pool store
+    reads the sum accumulator at (a free arithmetic right shift)."""
+    s = int(math.log2(count))
+    if (1 << s) != count:
+        raise NotImplementedError(
+            f"{name}: pimsab average pooling divides by reading the sum "
+            f"accumulator at a wordline offset, which needs a power-of-two "
+            f"window count (got {count})"
+        )
+    return s
+
+
+def _gemm_workload(name: str, mm: int, nn: int, kk: int, pa: int, pb: int) -> Workload:
+    return Workload(
+        name=name,
+        loops=(Loop("x", mm, "data"), Loop("y", nn, "data"), Loop("k", kk, "reduce")),
+        out=Ref("c", ("x", "y"), prec=32),
+        ins=(Ref("a", ("x", "k"), prec=pa), Ref("b", ("k", "y"), prec=pb)),
+        op="mac",
+        acc_prec=32,
+    )
+
+
+def _conv_workload(name: str, n: int, oc: int, spatial: int, kk: int,
+                   pa: int, pb: int) -> Workload:
+    """Conv-as-im2col gemm with data loops ordered (n, oc, spatial): the
+    accumulator's lane order is then exactly the NCHW-flat order of the
+    logical output, so a downstream elementwise consumer can read the value
+    CRAM-resident without any permutation (the residency layout contract)."""
+    return Workload(
+        name=name,
+        loops=(Loop("n", n, "data"), Loop("y", oc, "data"),
+               Loop("s", spatial, "data"), Loop("k", kk, "reduce")),
+        out=Ref("c", ("n", "y", "s"), prec=32),
+        ins=(Ref("a", ("n", "s", "k"), prec=pa), Ref("b", ("k", "y"), prec=pb)),
+        op="mac",
+        acc_prec=32,
+    )
+
+
+def _maxpool_workload(name: str, d: int, kk: int, pa: int) -> Workload:
+    return Workload(
+        name=name,
+        loops=(Loop("i", d, "data"), Loop("w", kk, "reduce")),
+        out=Ref("y", ("i",), prec=pa),
+        ins=(Ref("a", ("i", "w"), prec=pa),),
+        op="maxpool",
+        acc_prec=pa,
+    )
+
+
+def _avgpool_workload(name: str, d: int, kk: int, pa: int, shift: int) -> Workload:
+    sum_prec = min(adaptive_precision(pa, 2, kk, "mac"), 32)
+    return Workload(
+        name=name,
+        loops=(Loop("i", d, "data"), Loop("k", kk, "reduce")),
+        out=Ref("y", ("i",), prec=sum_prec - shift),
+        ins=(
+            Ref("a", ("i", "k"), prec=pa),
+            Ref("one", (), prec=2, is_const=True, const_value=1),
+        ),
+        op="mac",
+        acc_prec=32,
+        div_shift=shift,
+    )
+
+
+@register_pimsab_impl("conv2d")
+def _conv2d_pimsab(
+    x, w, *, stride: int = 1, padding: int = 0,
+    x_bits: Optional[int] = None, w_bits: Optional[int] = None, **_
+) -> jnp.ndarray:
+    """(N, C, H, W) × (OC, C, KH, KW) → (N, OC, OH, OW): im2col on the data
+    plane, then the same ``mac`` gemm pipeline the matmuls use (§V-A "conv
+    via im2col") — bit-exact int32 accumulation."""
+    xv, wv = _require_concrete("conv2d", x, w)
+    _require_int("conv2d", xv, wv)
+    n, c, h, hw = xv.shape
+    oc, c2, kh, kw = wv.shape
+    assert c == c2, (c, c2)
+    oh, ow = kref.conv2d_out_hw(h, hw, kh, kw, stride, padding)
+    kk = c * kh * kw
+    pa = _hint_bits(x_bits, xv)
+    pb = _hint_bits(w_bits, wv)
+    wl = _conv_workload(f"conv2d_{n}x{oc}x{oh}x{ow}_k{kk}", n, oc, oh * ow, kk, pa, pb)
+    patches = np.asarray(kref.im2col(xv, kh, kw, stride, padding), np.int64)
+    wmat = wv.reshape(oc, kk).T.astype(np.int64)
+    out, _ = execute_workload(
+        wl, {"a": patches.reshape(n, oh * ow, kk), "b": wmat}, kernel="conv2d"
+    )
+    return jnp.asarray(out.reshape(n, oc, oh, ow).astype(np.int32))
+
+
+@register_pimsab_impl("int_matmul")
+def _int_matmul_pimsab(
+    x, w, *, x_bits: Optional[int] = None, w_bits: Optional[int] = None, **_
+) -> jnp.ndarray:
+    """(M, K) × (K, N) raw-integer gemm — ``bitslice_matmul`` without the
+    slice stacks, for operands that arrive as another kernel's output."""
+    xv, wv = _require_concrete("int_matmul", x, w)
+    _require_int("int_matmul", xv, wv)
+    mm, kk = xv.shape
+    kk2, nn = wv.shape
+    assert kk == kk2, (kk, kk2)
+    pa = _hint_bits(x_bits, xv)
+    pb = _hint_bits(w_bits, wv)
+    wl = _gemm_workload(f"int_matmul_{mm}x{nn}x{kk}", mm, nn, kk, pa, pb)
+    out, _ = execute_workload(
+        wl, {"a": xv.astype(np.int64), "b": wv.astype(np.int64)}, kernel="int_matmul"
+    )
+    return jnp.asarray(out.reshape(mm, nn).astype(np.int32))
+
+
+@register_pimsab_impl("maxpool2d")
+def _maxpool2d_pimsab(x, *, window: int = 2, stride: Optional[int] = None, **_) -> jnp.ndarray:
+    """Window max via CmpGE + masked copy over the resident window (integer
+    bit-exact; float fixed-point — max is order-preserving, so quantization
+    commutes with the fold)."""
+    (xv,) = _require_concrete("maxpool2d", x)
+    s = stride or window
+    n, c, h, w = xv.shape
+    oh, ow = kref.conv2d_out_hw(h, w, window, window, s, 0)
+    patches = np.asarray(kref.pool_patches(xv, window, s))
+    is_int = np.issubdtype(xv.dtype, np.integer)
+    if is_int:
+        xq, frac, pa = patches.astype(np.int64), 0, min(_int_bits(patches), 32)
+    else:
+        pa = 16
+        xq, frac = _to_fixed(patches, pa)
+    wl = _maxpool_workload(f"maxpool2d_{n}x{c}x{oh}x{ow}_w{window}", n * c * oh * ow,
+                           window * window, pa)
+    out, _ = execute_workload(wl, {"a": xq}, kernel="maxpool2d")
+    out = out.reshape(n, c, oh, ow)
+    if is_int:
+        return jnp.asarray(out.astype(np.asarray(x).dtype))
+    return jnp.asarray((out.astype(np.float64) / (1 << frac)).astype(np.float32))
+
+
+def _avgpool_execute(kernel: str, wl: Workload, patches: np.ndarray):
+    out, _ = execute_workload(wl, {"a": patches.astype(np.int64)}, kernel=kernel)
+    return out
+
+
+@register_pimsab_impl("avgpool2d")
+def _avgpool2d_pimsab(x, *, window: int = 2, **_) -> jnp.ndarray:
+    """Window average: constant-operand MAC (·1) sums the window, and the
+    store reads the accumulator ``log2(window²)`` wordlines up — the §V-C
+    shift-read divide.  Integer floor-divide semantics, bit-exact."""
+    (xv,) = _require_concrete("avgpool2d", x)
+    _require_int("avgpool2d", xv)
+    n, c, h, w = xv.shape
+    oh, ow = kref.conv2d_out_hw(h, w, window, window, window, 0)
+    shift = _pool_shift(window * window, "avgpool2d")
+    pa = min(_int_bits(xv), 32)
+    wl = _avgpool_workload(f"avgpool2d_{n}x{c}x{oh}x{ow}_w{window}", n * c * oh * ow,
+                           window * window, pa, shift)
+    patches = np.asarray(kref.pool_patches(xv, window, window))
+    out = _avgpool_execute("avgpool2d", wl, patches)
+    # the oracle sums in int32 before the floor divide, so the result is int32
+    return jnp.asarray(out.reshape(n, c, oh, ow).astype(np.int32))
+
+
+@register_pimsab_impl("global_avgpool")
+def _global_avgpool_pimsab(x, **_) -> jnp.ndarray:
+    """(N, C, H, W) → (N, C): the spatial sum through the MAC reduction, the
+    divide through the shift-read store (H·W must be a power of two)."""
+    (xv,) = _require_concrete("global_avgpool", x)
+    _require_int("global_avgpool", xv)
+    n, c, h, w = xv.shape
+    shift = _pool_shift(h * w, "global_avgpool")
+    pa = min(_int_bits(xv), 32)
+    wl = _avgpool_workload(f"global_avgpool_{n}x{c}_k{h * w}", n * c, h * w, pa, shift)
+    out = _avgpool_execute("global_avgpool", wl, xv.reshape(n * c, h * w))
+    return jnp.asarray(out.reshape(n, c).astype(np.int32))
+
+
 # ===========================================================================
 # Program lowering: traced kernel chains → one fused WorkloadGraph
 # ===========================================================================
@@ -984,6 +1195,175 @@ def _pl_rglru_scan(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLo
     return OpLowering(w, meta, False, {}, bind, finalize)
 
 
+def _pl_int_in_bits(d: InDesc, hint) -> int:
+    """Program-mode integer precision: the static hint, else the producer's
+    ValueMeta precision, else the dtype width — same [2, 32] clamp as the
+    eager path (:func:`_clamp_bits`)."""
+    return _clamp_bits(int(hint) if hint is not None else _int_in_prec(d))
+
+
+def _pl_gemm(node: str, ins: List[InDesc], kwargs: Dict[str, Any], kk: int,
+             bind, finalize, out_shape: Tuple[int, ...],
+             workload_fn) -> OpLowering:
+    """Shared raw-integer gemm program lowering (conv2d / int_matmul).
+
+    ``workload_fn(pa, pb)`` builds the Workload from the operand precisions
+    derived HERE — one derivation feeds both the workload's input Refs and
+    the advertised ``out_meta``, so the precision the residency check
+    (`_edge_prec_ok`) sees can never diverge from what the compiler plans.
+    """
+    if not (ins[0].is_int and ins[1].is_int):
+        raise NotImplementedError(
+            f"{node}: the pimsab program lowering runs the raw-integer gemm "
+            "path; quantize float operands first"
+        )
+    pa = _pl_int_in_bits(ins[0], kwargs.get("x_bits"))
+    pb = _pl_int_in_bits(ins[1], kwargs.get("w_bits"))
+    out_prec = min(adaptive_precision(pa, pb, kk, "mac"), 32)
+    return OpLowering(
+        workload=workload_fn(pa, pb),
+        out_meta=ValueMeta(out_shape, out_prec, 0, "int", "int32"),
+        chainable=True,
+        chained={},
+        bind=bind,
+        finalize=finalize,
+    )
+
+
+@_program_lowering("conv2d")
+def _pl_conv2d(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    stride = int(kwargs.get("stride", 1))
+    padding = int(kwargs.get("padding", 0))
+    n, c, h, hw = ins[0].shape
+    oc, c2, kh, kw = ins[1].shape
+    assert c == c2, (c, c2)
+    oh, ow = kref.conv2d_out_hw(h, hw, kh, kw, stride, padding)
+    kk = c * kh * kw
+
+    def bind(vals):
+        patches = np.asarray(
+            kref.im2col(np.asarray(vals[0]), kh, kw, stride, padding), np.int64
+        )
+        wmat = np.asarray(vals[1]).reshape(oc, kk).T.astype(np.int64)
+        return {"a": patches.reshape(n, oh * ow, kk), "b": wmat}, None, None
+
+    def finalize(raw, _state):
+        return raw.reshape(n, oc, oh, ow).astype(np.int32)
+
+    return _pl_gemm(
+        node, ins, kwargs, kk, bind, finalize, (n, oc, oh, ow),
+        lambda pa, pb: _conv_workload(node, n, oc, oh * ow, kk, pa, pb),
+    )
+
+
+@_program_lowering("int_matmul")
+def _pl_int_matmul(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    mm, kk = ins[0].shape
+    kk2, nn = ins[1].shape
+    assert kk == kk2, (kk, kk2)
+
+    def bind(vals):
+        return (
+            {"a": np.asarray(vals[0]).astype(np.int64),
+             "b": np.asarray(vals[1]).astype(np.int64)},
+            None, None,
+        )
+
+    def finalize(raw, _state):
+        return raw.reshape(mm, nn).astype(np.int32)
+
+    return _pl_gemm(
+        node, ins, kwargs, kk, bind, finalize, (mm, nn),
+        lambda pa, pb: _gemm_workload(node, mm, nn, kk, pa, pb),
+    )
+
+
+@_program_lowering("maxpool2d")
+def _pl_maxpool2d(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    window = int(kwargs.get("window", 2))
+    stride = int(kwargs.get("stride") or window)
+    n, c, h, w = ins[0].shape
+    oh, ow = kref.conv2d_out_hw(h, w, window, window, stride, 0)
+    d = n * c * oh * ow
+    kk = window * window
+    is_int = ins[0].is_int
+    if is_int:
+        pa = _pl_int_in_bits(ins[0], None)
+        out_dtype = ins[0].aval[1]
+
+        def bind(vals):
+            patches = np.asarray(kref.pool_patches(np.asarray(vals[0]), window, stride))
+            return {"a": patches.astype(np.int64)}, None, None
+
+        def finalize(raw, _state):
+            return raw.reshape(n, c, oh, ow).astype(np.dtype(out_dtype))
+
+        meta = ValueMeta((n, c, oh, ow), pa, 0, "int", out_dtype)
+        chainable = True
+    else:
+        pa = 16
+
+        def bind(vals):
+            patches = np.asarray(kref.pool_patches(np.asarray(vals[0]), window, stride))
+            xq, frac = _to_fixed(patches, pa)
+            return {"a": xq}, None, frac
+
+        def finalize(raw, frac):
+            return (raw.reshape(n, c, oh, ow).astype(np.float64) / (1 << frac)).astype(np.float32)
+
+        meta = ValueMeta((n, c, oh, ow), pa, -1, "fixed", "float32")
+        chainable = False
+    wl = _maxpool_workload(node, d, kk, pa)
+    return OpLowering(wl, meta, chainable, {}, bind, finalize)
+
+
+def _pl_avgpool_common(node: str, d: int, kk: int, in_desc: InDesc,
+                       out_shape: Tuple[int, ...], patches_of) -> OpLowering:
+    if not in_desc.is_int:
+        raise NotImplementedError(
+            f"{node}: pimsab average pooling runs the integer floor-divide "
+            "path; quantize float operands first"
+        )
+    shift = _pool_shift(kk, node)
+    pa = _pl_int_in_bits(in_desc, None)
+    wl = _avgpool_workload(node, d, kk, pa, shift)
+    stored_prec = wl.out.prec  # sum precision minus the shift
+
+    def bind(vals):
+        return {"a": patches_of(np.asarray(vals[0])).astype(np.int64)}, None, None
+
+    def finalize(raw, _state):
+        return raw.reshape(out_shape).astype(np.int32)
+
+    # chainable with the *stored* precision: a downstream consumer sizes its
+    # input from the value that actually crosses the boundary.  Residency is
+    # still impossible (the accumulator holds the un-shifted sum, and the
+    # precision check `_edge_prec_ok` sees stored_prec != out_prec), so the
+    # DRAM round-trip is always kept — by construction, not by luck.
+    meta = ValueMeta(out_shape, stored_prec, 0, "int", "int32")
+    return OpLowering(wl, meta, True, {}, bind, finalize)
+
+
+@_program_lowering("avgpool2d")
+def _pl_avgpool2d(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    window = int(kwargs.get("window", 2))
+    n, c, h, w = ins[0].shape
+    oh, ow = kref.conv2d_out_hw(h, w, window, window, window, 0)
+    return _pl_avgpool_common(
+        node, n * c * oh * ow, window * window, ins[0], (n, c, oh, ow),
+        lambda xv: np.asarray(kref.pool_patches(xv, window, window)),
+    )
+
+
+@_program_lowering("global_avgpool")
+def _pl_global_avgpool(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    n, c, h, w = ins[0].shape
+    return _pl_avgpool_common(
+        node, n * c, h * w, ins[0], (n, c),
+        lambda xv: xv.reshape(n * c, h * w),
+    )
+
+
 # ---------------------------------------------------------------------------
 # graph assembly, compilation, execution
 # ---------------------------------------------------------------------------
@@ -1003,16 +1383,11 @@ class CompiledTracedProgram:
     cfg_fn: PimsabConfig
 
 
-def compile_traced_program(
-    program,
-    cfg_fn: Optional[PimsabConfig] = None,
-    cfg_timing: Optional[PimsabConfig] = None,
-) -> CompiledTracedProgram:
-    """Lower a traced Program into one WorkloadGraph and compile it for the
-    functional machine (execution) and the full-scale machine (report)."""
-    cfg_fn = cfg_fn or _functional_cfg()
-    cfg_t = cfg_timing or TIMING_CFG
-
+def _build_graph(program) -> Tuple[List[str], List[OpLowering], WorkloadGraph]:
+    """Assemble the WorkloadGraph of a traced Program: one node per captured
+    kernel call (in trace order — already topological), one edge per
+    node-valued input.  Shared by the functional compile and the timing-only
+    path (network shapes beyond bit-serial simulation)."""
     node_names: List[str] = [f"n{i}.{op.kernel}" for i, op in enumerate(program.ops)]
     lowerings: List[OpLowering] = []
     edges: List[GraphEdge] = []
@@ -1058,6 +1433,19 @@ def compile_traced_program(
         edges=tuple(edges),
         outputs=outputs,
     )
+    return node_names, lowerings, graph
+
+
+def compile_traced_program(
+    program,
+    cfg_fn: Optional[PimsabConfig] = None,
+    cfg_timing: Optional[PimsabConfig] = None,
+) -> CompiledTracedProgram:
+    """Lower a traced Program into one WorkloadGraph and compile it for the
+    functional machine (execution) and the full-scale machine (report)."""
+    cfg_fn = cfg_fn or _functional_cfg()
+    cfg_t = cfg_timing or TIMING_CFG
+    node_names, lowerings, graph = _build_graph(program)
     cg_fn = compile_graph(graph, cfg_fn)
     cg_t = compile_graph(graph, cfg_t)
     report = _program_report(program, cg_t, cfg_t, functional_instrs=len(cg_fn.program))
@@ -1069,6 +1457,20 @@ def compile_traced_program(
         report=report,
         cfg_fn=cfg_fn,
     )
+
+
+def timing_program_report(
+    program, cfg_timing: Optional[PimsabConfig] = None
+) -> SimReport:
+    """Timing-only program lowering: compile the fused WorkloadGraph for the
+    full-scale machine and run the analytic model, skipping the functional
+    compile entirely.  This is how network shapes far beyond bit-serial
+    functional simulation (the paper-shaped ResNet18 config) still get their
+    modeled end-to-end cycles/energy and per-layer breakdown."""
+    cfg_t = cfg_timing or TIMING_CFG
+    _, _, graph = _build_graph(program)
+    cg_t = compile_graph(graph, cfg_t)
+    return _program_report(program, cg_t, cfg_t, functional_instrs=0)
 
 
 def _program_report(

@@ -5,8 +5,12 @@ every call in isolation and, on the ``pimsab`` backend, round-trips every
 intermediate through DRAM.  This module adds the opt-in fast path:
 
 * :func:`trace` wraps a function of registry-kernel calls; calling the traced
-  function captures the kernel sequence into a :class:`Program` (a small
-  dataflow IR over slots / captured constants / node outputs).
+  function captures the kernel calls into a :class:`Program` — a small
+  dataflow **DAG** over slots / captured constants / node outputs.  Values
+  may fan out to any number of consumers (a residual-block input feeds both
+  the conv path and the shortcut), kernels may fan in node-valued operands
+  (residual adds), and any subset of values can be returned as program
+  outputs; node order is trace order, which is topological by construction.
 * :func:`compile_program` (exported as ``api.compile``) lowers a Program for
   the active backend **once** and returns a cached :class:`Executor`:
 
@@ -393,6 +397,8 @@ def compile_cache_info() -> CacheInfo:
 
 
 def clear_compile_cache() -> None:
+    """Empty the global compile cache and reset its hit/miss counters (test
+    isolation; compiled Executors are rebuilt on next use)."""
     global _hits, _misses
     with _cache_lock:
         _cache.clear()

@@ -140,3 +140,134 @@ def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: Optional[jnp.ndarray] = N
         b = b.at[:, 0].add(a[:, 0] * h0)
     _, hs = jax.lax.associative_scan(comb, (a, b), axis=1)
     return hs
+
+
+# ---------------------------------------------------------------------------
+# 2-D convolution / pooling (the DL-network layer set; PIMSAB lowers conv via
+# im2col onto the same `mac` gemm the matmuls use — §V-A "conv via im2col")
+# ---------------------------------------------------------------------------
+
+
+def conv2d_out_hw(h: int, w: int, kh: int, kw: int, stride: int, padding: int) -> Tuple[int, int]:
+    """Output spatial extent of a conv/pool window sweep."""
+    return (h + 2 * padding - kh) // stride + 1, (w + 2 * padding - kw) // stride + 1
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1, padding: int = 0) -> jnp.ndarray:
+    """(N, C, H, W) → (N·OH·OW, C·KH·KW) patch matrix (zero-padded borders).
+
+    Column order is (c, kh, kw) row-major — the exact order a (OC, C, KH, KW)
+    weight flattens to, so ``im2col(x) @ w.reshape(OC, -1).T`` is the conv.
+    This is the single layout contract shared by the Pallas kernel and the
+    pimsab data-plane binder (both call this function).
+    """
+    n, c, h, w = x.shape
+    oh, ow = conv2d_out_hw(h, w, kh, kw, stride, padding)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    ih = jnp.arange(oh) * stride  # (OH,)
+    iw = jnp.arange(ow) * stride  # (OW,)
+    rows = ih[:, None] + jnp.arange(kh)[None, :]          # (OH, KH)
+    cols = iw[:, None] + jnp.arange(kw)[None, :]          # (OW, KW)
+    # fancy-gather to (N, C, OH, KH, OW, KW), then order (n, oh, ow, c, kh, kw)
+    p = xp[:, :, rows[:, :, None, None], cols[None, None, :, :]]
+    p = p.transpose(0, 2, 4, 1, 3, 5)
+    return p.reshape(n * oh * ow, c * kh * kw)
+
+
+def pool_patches(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
+    """(N, C, H, W) → (N·C·OH·OW, window²) window matrix (no padding).
+
+    Row r holds the window of output element r in row-major (n, c, oh, ow)
+    order — the layout contract shared by the Pallas pool kernels and the
+    pimsab data-plane binder.
+    """
+    n, c, h, w = x.shape
+    oh, ow = conv2d_out_hw(h, w, window, window, stride, 0)
+    ih = jnp.arange(oh) * stride
+    iw = jnp.arange(ow) * stride
+    rows = ih[:, None] + jnp.arange(window)[None, :]      # (OH, win)
+    cols = iw[:, None] + jnp.arange(window)[None, :]      # (OW, win)
+    p = x[:, :, rows[:, :, None, None], cols[None, None, :, :]]
+    # (N, C, OH, win, OW, win) → (n, c, oh, ow, win, win)
+    p = p.transpose(0, 1, 2, 4, 3, 5)
+    return p.reshape(n * c * oh * ow, window * window)
+
+
+def _pool_mean(s: jnp.ndarray, count: int) -> jnp.ndarray:
+    """Window mean with dtype-dependent semantics: integer inputs floor-divide
+    (== an arithmetic right shift for power-of-two counts — exactly what the
+    bit-serial machine computes by reading the accumulator at a wordline
+    offset); float inputs take the true mean."""
+    if jnp.issubdtype(s.dtype, jnp.integer):
+        return jnp.floor_divide(s, count)
+    return s / count
+
+
+def conv2d_ref(
+    x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, padding: int = 0,
+    x_bits: Optional[int] = None, w_bits: Optional[int] = None,
+) -> jnp.ndarray:
+    """(N, C, H, W) × (OC, C, KH, KW) → (N, OC, OH, OW); integer inputs
+    accumulate in int32 (wrapping), float inputs in float32.  ``x_bits`` /
+    ``w_bits`` are static precision hints for the pimsab lowering and do not
+    change the math here."""
+    del x_bits, w_bits
+    integer = jnp.issubdtype(x.dtype, jnp.integer)
+    acc = jnp.int32 if integer else jnp.float32
+    out = jax.lax.conv_general_dilated(
+        x.astype(acc), w.astype(acc),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=acc,
+    )
+    return out.astype(acc)
+
+
+def int_matmul_ref(
+    x: jnp.ndarray, w: jnp.ndarray, *,
+    x_bits: Optional[int] = None, w_bits: Optional[int] = None,
+) -> jnp.ndarray:
+    """(M, K) × (K, N) integer matmul with int32 accumulation (wrapping) —
+    the raw-tensor flavor of ``bitslice_matmul`` (no slice stacks), used for
+    network heads whose input is another kernel's integer output."""
+    del x_bits, w_bits
+    return jax.lax.dot_general(
+        x.astype(jnp.int32), w.astype(jnp.int32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def maxpool2d_ref(x: jnp.ndarray, *, window: int = 2, stride: Optional[int] = None) -> jnp.ndarray:
+    """(N, C, H, W) → (N, C, OH, OW) window max (no padding)."""
+    s = stride or window
+    n, c, h, w = x.shape
+    oh, ow = conv2d_out_hw(h, w, window, window, s, 0)
+    p = pool_patches(x, window, s)
+    return jnp.max(p, axis=1).reshape(n, c, oh, ow)
+
+
+def avgpool2d_ref(x: jnp.ndarray, *, window: int = 2) -> jnp.ndarray:
+    """(N, C, H, W) → (N, C, OH, OW) window average, stride == window.
+
+    Integer inputs floor-divide by the window count (matching the bit-serial
+    shift-read divide); float inputs take the true mean.
+    """
+    n, c, h, w = x.shape
+    oh, ow = conv2d_out_hw(h, w, window, window, window, 0)
+    s = jnp.sum(pool_patches(x, window, window).astype(
+        jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+    ), axis=1)
+    return _pool_mean(s, window * window).reshape(n, c, oh, ow)
+
+
+def global_avgpool_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """(N, C, H, W) → (N, C) spatial average (integer: floor-divide by H·W)."""
+    n, c, h, w = x.shape
+    s = jnp.sum(
+        x.reshape(n, c, h * w).astype(
+            jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+        ),
+        axis=-1,
+    )
+    return _pool_mean(s, h * w)

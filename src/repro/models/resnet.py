@@ -1,0 +1,213 @@
+"""ResNet18-style integer CNN built entirely from registry kernels.
+
+This is the end-to-end DL-network workload of the paper's headline
+evaluation, expressed so the *whole forward pass* can be captured by
+``api.trace`` and compiled onto the pimsab backend as ONE fused
+``WorkloadGraph``: every op is a registry kernel (``conv2d`` / ``relu`` /
+``maxpool2d`` / ``avgpool2d`` / ``ewise_add`` / ``global_avgpool`` /
+``int_matmul``), and the residual connections make the captured Program a
+genuine DAG — multi-consumer values (the block input feeds both the conv
+path and the shortcut) and fan-in nodes (the residual add) with reconvergent
+paths.
+
+The network runs in the **raw integer domain** end to end: int8-range inputs
+and weights, int32 accumulation (wrapping, like the oracle), integer pooling
+with floor-divide semantics.  That is what makes pimsab execution bit-exact
+against the JAX oracle — and what lets integer producer→consumer boundaries
+(conv accumulator → relu / residual add) stay CRAM-resident in program mode.
+
+Per-layer precision: program-mode lowering cannot calibrate operand
+precision from values, so :func:`forward` threads a *static worst-case bit
+bound* through the network (``bits_out = bits_in + bits_w + ceil(log2 K)``
+per conv, ``+1`` per residual add, capped at 32 where wraparound matches
+int32 exactly) and passes it to each kernel as ``x_bits`` — the §IV-C
+adaptive-precision idea applied network-wide at trace time.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import api
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    """A parameterizable BasicBlock ResNet (ResNet18 shape at the defaults'
+    full scale; the tiny presets keep bit-serial functional simulation
+    tractable).
+
+    ``stage_channels[i]`` / ``blocks_per_stage[i]`` describe stage i; every
+    stage after the first downsamples spatially by 2 (stride-2 first conv +
+    1×1 projection shortcut).  ``input_hw`` must leave the final feature map
+    with a power-of-two spatial count (the pimsab global-avgpool divide is a
+    shift-read).
+    """
+
+    in_channels: int = 3
+    input_hw: int = 32
+    stem_channels: int = 8
+    stem_pool: Optional[str] = "max"  # "max" | "avg" | None (2×2, stride 2)
+    stage_channels: Tuple[int, ...] = (8, 16)
+    blocks_per_stage: Tuple[int, ...] = (2, 2)
+    num_classes: int = 10
+    input_bits: int = 4   # operand magnitude bound of the quantized input
+    weight_bits: int = 3  # weights drawn from the signed weight_bits range
+
+    def __post_init__(self):
+        assert len(self.stage_channels) == len(self.blocks_per_stage)
+
+    @property
+    def final_hw(self) -> int:
+        hw = self.input_hw
+        if self.stem_pool:
+            hw //= 2
+        return hw // (2 ** (len(self.stage_channels) - 1))
+
+
+# A functional-simulation-sized instance: one 8×8 image through a stem,
+# a stem pool, two stages (one BasicBlock each, the second downsampling),
+# global pool over 2×2 and a 10-class head — every layer kind the full
+# network has, small enough for bit-serial execution in seconds.
+TINY = ResNetConfig(
+    in_channels=3, input_hw=8, stem_channels=8, stem_pool="max",
+    stage_channels=(8, 16), blocks_per_stage=(1, 1), num_classes=10,
+)
+
+# The paper-shaped evaluation config (ResNet18 topology at CIFAR scale):
+# 4 stages × 2 BasicBlocks.  Used timing-only (full-chip analytic model).
+RESNET18 = ResNetConfig(
+    in_channels=3, input_hw=32, stem_channels=64, stem_pool=None,
+    stage_channels=(64, 128, 256, 512), blocks_per_stage=(2, 2, 2, 2),
+    num_classes=1000,
+)
+
+
+def _winit(rng: np.random.Generator, shape: Tuple[int, ...], bits: int) -> jnp.ndarray:
+    """Weights uniform over the signed ``bits`` range (int32 storage)."""
+    lim = 2 ** (bits - 1)
+    return jnp.asarray(rng.integers(-lim + 1, lim, shape), jnp.int32)
+
+
+def init_params(cfg: ResNetConfig, seed: int = 0) -> Params:
+    """Deterministic integer parameters for ``cfg`` (int32 arrays holding
+    ``weight_bits``-range values)."""
+    rng = np.random.default_rng(seed)
+    wb = cfg.weight_bits
+    params: Params = {
+        "stem": _winit(rng, (cfg.stem_channels, cfg.in_channels, 3, 3), wb),
+        "stages": [],
+    }
+    c_in = cfg.stem_channels
+    for si, (c_out, n_blocks) in enumerate(
+        zip(cfg.stage_channels, cfg.blocks_per_stage)
+    ):
+        blocks: List[Params] = []
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            block: Params = {
+                "conv1": _winit(rng, (c_out, c_in, 3, 3), wb),
+                "conv2": _winit(rng, (c_out, c_out, 3, 3), wb),
+            }
+            if stride != 1 or c_in != c_out:
+                block["proj"] = _winit(rng, (c_out, c_in, 1, 1), wb)
+            blocks.append(block)
+            c_in = c_out
+        params["stages"].append(blocks)
+    params["head"] = _winit(rng, (c_in, cfg.num_classes), wb)
+    return params
+
+
+def make_input(cfg: ResNetConfig, batch: int = 1, seed: int = 1) -> jnp.ndarray:
+    """A quantized input image batch within the config's ``input_bits`` range."""
+    rng = np.random.default_rng(seed)
+    lim = 2 ** (cfg.input_bits - 1)
+    return jnp.asarray(
+        rng.integers(-lim + 1, lim, (batch, cfg.in_channels, cfg.input_hw, cfg.input_hw)),
+        jnp.int32,
+    )
+
+
+def _conv_out_bits(bits_in: int, bits_w: int, k: int) -> int:
+    """Static worst-case precision of a K-term integer conv/matmul output,
+    capped at 32 (where the CRAM accumulator's wraparound == int32)."""
+    return min(bits_in + bits_w + math.ceil(math.log2(max(k, 2))), 32)
+
+
+def forward(cfg: ResNetConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """The traced forward pass: ``(B, C, H, W) int32 → (B, num_classes) int32``.
+
+    Pure registry-kernel composition (traceable by ``api.trace``); the
+    residual blocks make the captured Program a branch-and-merge DAG.
+    """
+    wb = cfg.weight_bits
+    bits = cfg.input_bits
+
+    h = api.conv2d(x, params["stem"], stride=1, padding=1, x_bits=bits, w_bits=wb)
+    bits = _conv_out_bits(bits, wb, cfg.in_channels * 9)
+    h = api.relu(h)
+    if cfg.stem_pool == "max":
+        h = api.maxpool2d(h, window=2)
+    elif cfg.stem_pool == "avg":
+        h = api.avgpool2d(h, window=2)
+        # the 2×2 pool sums four values (+2 bits, capped at 32) and then
+        # shift-divides them back out — the stored bound is unchanged until
+        # the cap bites (same formula as the global pool below)
+        bits = max(2, min(bits + 2, 32) - 2)
+
+    c_in = cfg.stem_channels
+    for si, blocks in enumerate(params["stages"]):
+        c_out = cfg.stage_channels[si]
+        for bi, block in enumerate(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            identity, id_bits = h, bits
+            y = api.conv2d(h, block["conv1"], stride=stride, padding=1,
+                           x_bits=bits, w_bits=wb)
+            b1 = _conv_out_bits(bits, wb, c_in * 9)
+            y = api.relu(y)
+            y = api.conv2d(y, block["conv2"], stride=1, padding=1,
+                           x_bits=b1, w_bits=wb)
+            b2 = _conv_out_bits(b1, wb, c_out * 9)
+            if "proj" in block:
+                identity = api.conv2d(h, block["proj"], stride=stride, padding=0,
+                                      x_bits=bits, w_bits=wb)
+                id_bits = _conv_out_bits(bits, wb, c_in)
+            h = api.relu(api.ewise_add(y, identity))
+            bits = min(max(b2, id_bits) + 1, 32)
+            c_in = c_out
+
+    h = api.global_avgpool(h)
+    # the pool sums gap_k values (+log2 bits, capped) then shift-divides
+    # them back out; the head sees the stored (post-shift) precision
+    gap_k = cfg.final_hw * cfg.final_hw
+    shift = int(math.log2(max(gap_k, 1)))
+    bits = max(2, min(bits + shift, 32) - shift)
+    return api.int_matmul(h, params["head"], x_bits=bits, w_bits=wb)
+
+
+def layer_names(cfg: ResNetConfig) -> List[str]:
+    """The kernel sequence :func:`forward` emits, in trace order — the labels
+    a per-layer SimReport breakdown lines up with."""
+    names = ["conv2d", "relu"]
+    if cfg.stem_pool == "max":
+        names.append("maxpool2d")
+    elif cfg.stem_pool == "avg":
+        names.append("avgpool2d")
+    c_in = cfg.stem_channels
+    for si, n_blocks in enumerate(cfg.blocks_per_stage):
+        c_out = cfg.stage_channels[si]
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            names += ["conv2d", "relu", "conv2d"]
+            if stride != 1 or c_in != c_out:
+                names.append("conv2d")  # projection shortcut
+            names += ["ewise_add", "relu"]
+            c_in = c_out
+    names += ["global_avgpool", "int_matmul"]
+    return names

@@ -211,6 +211,32 @@ def _case(name):
     if name == "relu":
         x = jax.random.normal(jax.random.key(8), (64, 128), jnp.float32)
         return lambda: api.relu(x), lambda: ref.relu_ref(x)
+    if name == "conv2d":
+        x = _int_tensor((2, 4, 16, 16), 8, seed=2)
+        w = _int_tensor((8, 4, 3, 3), 8, seed=3)
+        return (
+            lambda: api.conv2d(x, w, stride=1, padding=1),
+            lambda: ref.conv2d_ref(x, w, stride=1, padding=1),
+        )
+    if name == "int_matmul":
+        x = _int_tensor((32, 64), 8, seed=4)
+        w = _int_tensor((64, 16), 8, seed=5)
+        return lambda: api.int_matmul(x, w), lambda: ref.int_matmul_ref(x, w)
+    if name == "maxpool2d":
+        x = _int_tensor((2, 4, 16, 16), 8, seed=6)
+        return (
+            lambda: api.maxpool2d(x, window=2),
+            lambda: ref.maxpool2d_ref(x, window=2),
+        )
+    if name == "avgpool2d":
+        x = _int_tensor((2, 4, 16, 16), 8, seed=7)
+        return (
+            lambda: api.avgpool2d(x, window=2),
+            lambda: ref.avgpool2d_ref(x, window=2),
+        )
+    if name == "global_avgpool":
+        x = _int_tensor((2, 8, 16, 16), 8, seed=8)
+        return lambda: api.global_avgpool(x), lambda: ref.global_avgpool_ref(x)
     raise KeyError(f"registered kernel {name!r} has no test case — add one")
 
 

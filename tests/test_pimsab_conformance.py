@@ -59,6 +59,35 @@ def _case(name):
     if name == "relu":
         x = _ints((8, 32), -500, 500, seed=8)
         return lambda: api.relu(x), lambda: jnp.maximum(x, 0), None
+    if name == "conv2d":
+        x = _ints((2, 3, 8, 8), -8, 8, seed=20)
+        w = _ints((4, 3, 3, 3), -100, 100, seed=21)
+        return (
+            lambda: api.conv2d(x, w, stride=2, padding=1),
+            lambda: ref.conv2d_ref(x, w, stride=2, padding=1),
+            None,
+        )
+    if name == "int_matmul":
+        x = _ints((8, 32), -200, 200, seed=22)
+        w = _ints((32, 8), -200, 200, seed=23)
+        return lambda: api.int_matmul(x, w), lambda: ref.int_matmul_ref(x, w), None
+    if name == "maxpool2d":
+        x = _ints((2, 4, 8, 8), -500, 500, seed=24)
+        return (
+            lambda: api.maxpool2d(x, window=2),
+            lambda: ref.maxpool2d_ref(x, window=2),
+            None,
+        )
+    if name == "avgpool2d":
+        x = _ints((2, 4, 8, 8), -500, 500, seed=25)
+        return (
+            lambda: api.avgpool2d(x, window=2),
+            lambda: ref.avgpool2d_ref(x, window=2),
+            None,
+        )
+    if name == "global_avgpool":
+        x = _ints((2, 8, 4, 4), -500, 500, seed=26)
+        return lambda: api.global_avgpool(x), lambda: ref.global_avgpool_ref(x), None
     raise KeyError(f"registered kernel {name!r} has no conformance case — add one")
 
 
@@ -145,6 +174,72 @@ def test_quantized_matmul_end_to_end_on_pimsab():
     want = x @ (w_q * w_scale[None, :])
     rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
     assert rel < 0.05, rel
+
+
+# ---------------------------------------------------------------------------
+# conv / pool corners
+# ---------------------------------------------------------------------------
+
+
+def test_conv2d_1x1_projection_bit_exact():
+    """The ResNet downsampling shortcut: 1×1 kernel, stride 2, no padding."""
+    from repro.kernels import ref as kref
+
+    x = _ints((1, 4, 8, 8), -8, 8, seed=40)
+    w = _ints((8, 4, 1, 1), -4, 4, seed=41)
+    with api.use_backend("pimsab"):
+        got = api.conv2d(x, w, stride=2, padding=0)
+    np.testing.assert_array_equal(
+        np.asarray(kref.conv2d_ref(x, w, stride=2, padding=0)), np.asarray(got)
+    )
+
+
+def test_maxpool_overlapping_windows_bit_exact():
+    """stride < window (the ImageNet-stem 3×3/s2 shape): each input element
+    streams once per window it appears in — bit-exact either way."""
+    x = _ints((1, 2, 7, 7), -100, 100, seed=42)
+    with api.use_backend("pimsab"):
+        got = api.maxpool2d(x, window=3, stride=2)
+    np.testing.assert_array_equal(
+        np.asarray(ref.maxpool2d_ref(x, window=3, stride=2)), np.asarray(got)
+    )
+
+
+def test_maxpool_float_fixed_point_allclose():
+    x = jax.random.normal(jax.random.key(43), (1, 2, 8, 8), jnp.float32)
+    with api.use_backend("pimsab"):
+        got = api.maxpool2d(x, window=2)
+    np.testing.assert_allclose(
+        np.asarray(ref.maxpool2d_ref(x, window=2)), np.asarray(got), atol=1e-3
+    )
+
+
+def test_avgpool_negative_sums_floor_divide_bit_exact():
+    """Negative window sums: the shift-read divide floors toward -inf, and
+    the oracle's floor_divide must agree exactly."""
+    x = -_ints((1, 2, 4, 4), 1, 500, seed=44)  # strictly negative
+    with api.use_backend("pimsab"):
+        got = api.avgpool2d(x, window=2)
+    np.testing.assert_array_equal(
+        np.asarray(ref.avgpool2d_ref(x, window=2)), np.asarray(got)
+    )
+
+
+def test_global_avgpool_non_power_of_two_window_is_refused():
+    x = _ints((1, 2, 3, 3), -10, 10, seed=45)  # 9 spatial elements
+    with api.use_backend("pimsab"):
+        with pytest.raises(NotImplementedError, match="power-of-two"):
+            api.global_avgpool(x)
+
+
+def test_int_matmul_wraparound_matches_oracle():
+    x = _ints((4, 64), -30000, 30000, seed=46)
+    w = _ints((64, 4), -30000, 30000, seed=47)
+    with api.use_backend("pimsab"):
+        got = api.int_matmul(x, w, x_bits=16, w_bits=16)
+    np.testing.assert_array_equal(
+        np.asarray(ref.int_matmul_ref(x, w)), np.asarray(got)
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,124 @@
+"""End-to-end ResNet18-style network on the pimsab backend.
+
+The acceptance bar of the DAG-Program work: a traced residual network (conv /
+pool / relu / residual-add / global-avgpool / matmul head) compiles into ONE
+fused WorkloadGraph and executes bit-exactly against the JAX oracle, with an
+aggregated per-layer SimReport.  A smaller single-block instance runs in
+tier-1; the full TINY preset (two stages, stem pool, projection shortcut)
+matches what ``benchmarks/e2e_resnet.py`` pins into ``BENCH_kernels.json``.
+"""
+import numpy as np
+import pytest
+
+from repro.kernels import api
+from repro.kernels import pimsab_backend as pb
+from repro.models import resnet
+
+# one residual BasicBlock stack, no downsampling: the smallest network that
+# still exercises every DAG feature (multi-consumer input, fan-in add,
+# reconvergence, pool, head)
+MICRO = resnet.ResNetConfig(
+    in_channels=2, input_hw=8, stem_channels=4, stem_pool="max",
+    stage_channels=(4,), blocks_per_stage=(1,), num_classes=5,
+)
+
+
+def _run(cfg, seed=0):
+    params = resnet.init_params(cfg, seed=seed)
+    x = resnet.make_input(cfg, batch=1, seed=seed + 1)
+    with api.use_backend("xla"):
+        want = resnet.forward(cfg, params, x)
+    traced = api.trace(lambda p, v: resnet.forward(cfg, p, v), name=f"rn_{cfg.input_hw}")
+    with api.use_backend("pimsab"):
+        got = traced(params, x)
+    return want, got, api.last_sim_report()
+
+
+def test_micro_resnet_bit_exact_on_pimsab():
+    want, got, rep = _run(MICRO)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    assert rep.kernel == "program"
+    assert list(rep.kernels) == resnet.layer_names(MICRO)
+    # the residual block kept at least one integer boundary CRAM-resident
+    assert len(rep.resident_edges) >= 1
+    assert rep.elided_dram_bits > 0
+    # per-layer segments cover the whole network
+    assert [p["kernel"] for p in rep.per_kernel] == list(rep.kernels)
+    assert sum(p["total_cycles"] for p in rep.per_kernel) == pytest.approx(rep.total_cycles)
+
+
+def test_avg_stem_resnet_bit_exact_with_adversarial_magnitudes():
+    """The avg-pool stem branch with worst-case in-range operands: the
+    static precision bound threaded through forward() must cover the
+    post-pool magnitudes (an understated x_bits hint silently corrupts the
+    bit-serial load), so this pins the avg-stem bound formula."""
+    import jax.numpy as jnp
+
+    cfg = resnet.ResNetConfig(
+        in_channels=2, input_hw=8, stem_channels=4, stem_pool="avg",
+        stage_channels=(4,), blocks_per_stage=(1,), num_classes=5,
+    )
+    params = resnet.init_params(cfg, seed=11)
+    # saturate every magnitude bound: input at the input_bits max, stem
+    # weights at the weight_bits max
+    x = jnp.full((1, 2, 8, 8), 2 ** (cfg.input_bits - 1) - 1, jnp.int32)
+    params["stem"] = jnp.full_like(params["stem"], 2 ** (cfg.weight_bits - 1) - 1)
+    with api.use_backend("xla"):
+        want = resnet.forward(cfg, params, x)
+    traced = api.trace(lambda p, v: resnet.forward(cfg, p, v), name="rn_avgstem")
+    with api.use_backend("pimsab"):
+        got = traced(params, x)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    assert list(api.last_sim_report().kernels) == resnet.layer_names(cfg)
+
+
+def test_micro_resnet_executor_replays_with_fresh_input():
+    cfg = MICRO
+    params = resnet.init_params(cfg, seed=3)
+    x1 = resnet.make_input(cfg, seed=4)
+    x2 = resnet.make_input(cfg, seed=5)
+    traced = api.trace(lambda p, v: resnet.forward(cfg, p, v), name="rn_replay")
+    with api.use_backend("pimsab"):
+        ex = api.compile(traced.program_for(params, x1))
+        got2 = ex(params, x2)
+        with api.use_backend("xla"):
+            want2 = resnet.forward(cfg, params, x2)
+    np.testing.assert_array_equal(np.asarray(want2), np.asarray(got2))
+
+
+@pytest.mark.slow
+def test_tiny_resnet_bit_exact_on_pimsab():
+    """The benchmark preset: two stages, downsampling block with projection
+    shortcut, stem maxpool — the full layer-kind coverage."""
+    want, got, rep = _run(resnet.TINY)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    assert list(rep.kernels) == resnet.layer_names(resnet.TINY)
+    assert len(rep.resident_edges) >= 3
+
+
+def test_timing_only_lowering_models_full_network():
+    """timing_program_report lowers a network for the full-scale machine
+    without functional compilation — per-layer cycles for shapes beyond
+    bit-serial simulation."""
+    cfg = resnet.ResNetConfig(
+        in_channels=3, input_hw=16, stem_channels=16, stem_pool="max",
+        stage_channels=(16, 32), blocks_per_stage=(1, 1), num_classes=10,
+    )
+    params = resnet.init_params(cfg)
+    x = resnet.make_input(cfg)
+    traced = api.trace(lambda p, v: resnet.forward(cfg, p, v), name="rn_timing")
+    prog = traced.trace(params, x)
+    rep = pb.timing_program_report(prog)
+    assert list(rep.kernels) == resnet.layer_names(cfg)
+    assert rep.total_cycles > 0 and rep.energy_j > 0
+    assert len(rep.per_kernel) == len(rep.kernels)
+    assert rep.functional_instrs == 0  # nothing was executed
+
+
+def test_make_input_and_params_are_deterministic():
+    cfg = MICRO
+    a, b = resnet.init_params(cfg, seed=7), resnet.init_params(cfg, seed=7)
+    np.testing.assert_array_equal(np.asarray(a["stem"]), np.asarray(b["stem"]))
+    np.testing.assert_array_equal(
+        np.asarray(resnet.make_input(cfg, seed=9)), np.asarray(resnet.make_input(cfg, seed=9))
+    )
