@@ -11,9 +11,16 @@ Four gates (all run in CI):
    (``repro.kernels.api.use_backend``);
 3. nothing anywhere in the repo imports the removed ``repro.kernels.ops``
    shim module;
-4. every public symbol exported by ``repro.kernels.api`` and
-   ``repro.kernels.program`` (their ``__all__``) carries a docstring — the
-   API surface is self-documenting by construction.
+4. every public symbol exported by ``repro.kernels.api``,
+   ``repro.kernels.program``, and ``repro.core.compiler.verify`` (their
+   ``__all__``) carries a docstring — the API surface is self-documenting
+   by construction;
+5. the static-verifier surface is present: ``api.compile`` accepts the
+   ``verify`` kwarg (default **on**), the diagnostic classes are re-exported
+   from the api module, and every concrete ``Instr`` subclass in
+   ``repro.core.isa`` declares a usable effect signature (``effect()``
+   returns an ``Effect``) plus a lossless JSON round-trip — a new opcode
+   cannot land invisible to the verifier or the bad-program corpus.
 
 Exit code 0 on success, 1 with a report on failure.
 """
@@ -83,6 +90,12 @@ API_SYMBOLS = [
     "compile_cache_info",
     "clear_compile_cache",
     "PimsabTracerError",
+    # static verifier surface
+    "last_verify_report",
+    "VerifyReport",
+    "VerifierError",
+    "VerifierWarning",
+    "Diagnostic",
 ]
 
 
@@ -185,7 +198,8 @@ def check_public_docstrings() -> list[str]:
     ``inspect.getdoc`` count: an alias like ``api.compile`` documents
     through its target)."""
     errors = []
-    for modname in ("repro.kernels.api", "repro.kernels.program"):
+    for modname in ("repro.kernels.api", "repro.kernels.program",
+                    "repro.core.compiler.verify"):
         try:
             mod = importlib.import_module(modname)
         except Exception:
@@ -204,9 +218,74 @@ def check_public_docstrings() -> list[str]:
     return errors
 
 
+def check_verifier_surface() -> list[str]:
+    """Gate 5: the static-verifier contract is complete.
+
+    ``api.compile`` must accept ``verify`` defaulting to True; the diagnostic
+    classes must be reachable from the api module; and every concrete
+    ``Instr`` subclass must (a) declare an effect signature — ``effect()``
+    on a default-constructed instance returns an ``Effect`` without raising —
+    and (b) round-trip through ``instr_to_json``/``instr_from_json``, so a
+    new opcode can neither dodge verification nor be unrepresentable in the
+    bad-program corpus."""
+    errors = []
+    try:
+        api = importlib.import_module("repro.kernels.api")
+        sig = inspect.signature(api.compile)
+        p = sig.parameters.get("verify")
+        if p is None:
+            errors.append("api.compile has no verify kwarg")
+        elif p.default is not True:
+            errors.append(f"api.compile verify must default to True, got {p.default!r}")
+        verify_mod = importlib.import_module("repro.core.compiler.verify")
+        for sym in ("Diagnostic", "VerifyReport", "VerifierError",
+                    "VerifierWarning"):
+            if getattr(api, sym, None) is not getattr(verify_mod, sym):
+                errors.append(f"api.{sym} is not the verify.{sym} class")
+    except Exception:
+        errors.append(f"verifier surface introspection failed:\n{traceback.format_exc()}")
+        return errors
+    try:
+        isa = importlib.import_module("repro.core.isa")
+
+        def concrete(cls):
+            for sub in cls.__subclasses__():
+                yield sub
+                yield from concrete(sub)
+
+        bases = {isa.Instr, isa.Compute}
+        for cls in concrete(isa.Instr):
+            if cls in bases:
+                continue
+            try:
+                ins = cls()
+            except Exception:
+                errors.append(f"isa.{cls.__name__}() is not default-constructible "
+                              "(gate needs a sample instance)")
+                continue
+            try:
+                eff = ins.effect()
+            except Exception as e:
+                errors.append(f"isa.{cls.__name__} has no usable effect "
+                              f"signature: {type(e).__name__}: {e}")
+                continue
+            if not isinstance(eff, isa.Effect):
+                errors.append(f"isa.{cls.__name__}.effect() returned "
+                              f"{type(eff).__name__}, not Effect")
+            try:
+                if isa.instr_from_json(isa.instr_to_json(ins)) != ins:
+                    errors.append(f"isa.{cls.__name__} JSON round-trip is lossy")
+            except Exception as e:
+                errors.append(f"isa.{cls.__name__} JSON round-trip failed: "
+                              f"{type(e).__name__}: {e}")
+    except Exception:
+        errors.append(f"isa effect-signature sweep failed:\n{traceback.format_exc()}")
+    return errors
+
+
 def main() -> int:
     errors = (check_imports() + check_no_impl_kwarg() + check_no_ops_import()
-              + check_public_docstrings())
+              + check_public_docstrings() + check_verifier_surface())
     if errors:
         print("check_api: FAIL")
         for e in errors:
@@ -215,7 +294,8 @@ def main() -> int:
     print(
         f"check_api: OK ({len(PUBLIC_MODULES)} modules, "
         f"{len(API_SYMBOLS)} api symbols, no impl= call sites, "
-        "no repro.kernels.ops imports, public API surface documented)"
+        "no repro.kernels.ops imports, public API surface documented, "
+        "verifier surface complete: every Instr has an effect signature)"
     )
     return 0
 

@@ -1,0 +1,195 @@
+#!/usr/bin/env python
+"""ISA verification gate: every compiled pimsab program must pass the static
+verifier (``repro.core.compiler.verify``) with zero errors.
+
+Four sections, mirroring every lowering path the repo ships:
+
+1. **microbench** — each ``benchmarks.workloads.MICROBENCHES`` workload is
+   compiled standalone at the full-chip config and verified
+   (liveness, schedule hazards, precision-overflow lint);
+2. **registry-eager** — every registry kernel is executed eagerly on the
+   pimsab backend with ``verify=True`` (the default), reusing the
+   conformance suite's per-kernel sample invocations so the gate and the
+   tests exercise identical lowerings;
+3. **program** — a traced matmul→ewise_add→relu chain is compiled through
+   ``api.compile`` (both the functional and the timing stream are verified);
+4. **resnet** — the TINY preset is traced and compiled (functional + timing
+   streams) and the paper-shaped RESNET18 preset is verified timing-only.
+
+The full diagnostics (including warnings and residency N-PLAN notes) are
+written to ``ISA_verify_report.json``, which CI uploads as an artifact next
+to the bench report.  Exit code 0 when every section is clean, 1 otherwise.
+
+Run from the repo root:  ``PYTHONPATH=src python scripts/check_isa.py``
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+import sys
+import traceback
+from typing import Any, Dict, List
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+from benchmarks import workloads  # noqa: E402
+from repro.core.compiler import compile_workload  # noqa: E402
+from repro.core.compiler.verify import VerifierError, verify_compiled  # noqa: E402
+from repro.core.machine import PIMSAB  # noqa: E402
+from repro.kernels import api  # noqa: E402
+from repro.kernels import pimsab_backend as pb  # noqa: E402
+from repro.models import resnet  # noqa: E402
+
+REPORT_PATH = REPO / "ISA_verify_report.json"
+
+
+def _conformance_cases():
+    """Import the conformance suite's per-kernel sample-invocation table so
+    this gate exercises exactly the lowerings the tests do."""
+    path = REPO / "tests" / "test_pimsab_conformance.py"
+    spec = importlib.util.spec_from_file_location("_conf_cases", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod._case
+
+
+def _reports_json() -> List[Dict[str, Any]]:
+    return [r.to_json() for r in pb.last_verify_report()]
+
+
+def _entry(name: str, fn) -> Dict[str, Any]:
+    """Run one gate target; a VerifierError is a *reportable* failure (its
+    diagnostics land in the artifact), anything else is an infrastructure
+    crash and still fails the gate."""
+    try:
+        reports = fn()
+        ok = all(r["ok"] for r in reports) if reports else False
+        entry = {"name": name, "ok": ok, "reports": reports}
+        if not reports:
+            entry["error"] = "no verify report produced"
+    except VerifierError as e:
+        entry = {"name": name, "ok": False, "reports": [e.report.to_json()]}
+    except Exception:
+        entry = {"name": name, "ok": False, "reports": [],
+                 "error": traceback.format_exc(limit=5)}
+    counts = [f"{len(r.get('errors', []))}E/{len(r.get('warnings', []))}W"
+              for r in entry["reports"]]
+    print(f"  {'ok ' if entry['ok'] else 'FAIL'} {name:<28} {' '.join(counts)}")
+    return entry
+
+
+def check_microbenches() -> List[Dict[str, Any]]:
+    print("[microbench] standalone workloads at the full-chip config")
+    out = []
+    for name, mk in sorted(workloads.MICROBENCHES.items()):
+        def run(mk=mk):
+            cp = compile_workload(mk(), PIMSAB)
+            return [verify_compiled(cp, PIMSAB).to_json()]
+        out.append(_entry(name, run))
+    return out
+
+
+def check_registry_eager() -> List[Dict[str, Any]]:
+    print("[registry-eager] every registry kernel, pimsab backend, verify=True")
+    case = _conformance_cases()
+    out = []
+    for name in sorted(api.registered_kernels()):
+        def run(name=name):
+            run_kernel, _oracle, _tol = case(name)
+            with api.use_backend("pimsab"):
+                run_kernel()
+            # execute_workload stashes the report of its last compiled
+            # workload; a multi-workload kernel verified each one en route
+            # (any error would have raised VerifierError)
+            return _reports_json()
+        out.append(_entry(name, run))
+    return out
+
+
+def check_program_chain() -> List[Dict[str, Any]]:
+    print("[program] traced matmul->ewise_add->relu chain via api.compile")
+
+    def run():
+        import jax.numpy as jnp
+        import numpy as np
+
+        rng = np.random.default_rng(0)
+        xs = api.SlicedTensor.from_int(
+            jnp.asarray(rng.integers(-100, 100, (16, 32)), jnp.int32), 8)
+        ws = api.SlicedTensor.from_int(
+            jnp.asarray(rng.integers(-100, 100, (32, 8)), jnp.int32), 8)
+        y = jnp.asarray(rng.integers(-500, 500, (16, 8)), jnp.int32)
+        traced = api.trace(
+            lambda a, b, c: api.relu(api.ewise_add(api.matmul(a, b), c)),
+            name="check_isa_chain")
+        with api.use_backend("pimsab"):
+            prog = traced.program_for(xs, ws, y)
+            ex = api.compile(prog, verify=True)
+        return [r.to_json() for r in ex.verify_reports]
+
+    return [_entry("matmul_ewise_relu", run)]
+
+
+def check_resnet() -> List[Dict[str, Any]]:
+    print("[resnet] TINY (functional+timing streams) and RESNET18 (timing)")
+
+    def run_tiny():
+        cfg = resnet.TINY
+        params = resnet.init_params(cfg, seed=0)
+        x = resnet.make_input(cfg, batch=1, seed=1)
+        traced = api.trace(lambda p, v: resnet.forward(cfg, p, v),
+                           name="check_isa_tiny")
+        with api.use_backend("pimsab"):
+            prog = traced.program_for(params, x)
+            ex = api.compile(prog, verify=True)
+        return [r.to_json() for r in ex.verify_reports]
+
+    def run_resnet18():
+        cfg = resnet.RESNET18
+        params = resnet.init_params(cfg, seed=0)
+        x = resnet.make_input(cfg, batch=1, seed=1)
+        traced = api.trace(lambda p, v: resnet.forward(cfg, p, v),
+                           name="check_isa_resnet18")
+        prog = traced.trace(params, x)
+        pb.timing_program_report(prog, verify=True)
+        return _reports_json()
+
+    return [_entry("resnet_tiny", run_tiny),
+            _entry("resnet18_timing", run_resnet18)]
+
+
+def main() -> int:
+    sections = {
+        "microbench": check_microbenches(),
+        "registry_eager": check_registry_eager(),
+        "program": check_program_chain(),
+        "resnet": check_resnet(),
+    }
+    entries = [e for sec in sections.values() for e in sec]
+    failed = [e["name"] for e in entries if not e["ok"]]
+    summary = {
+        "ok": not failed,
+        "targets": len(entries),
+        "failed": failed,
+        "warnings": sum(len(r.get("warnings", []))
+                        for e in entries for r in e["reports"]),
+        "notes": sum(len(r.get("notes", []))
+                     for e in entries for r in e["reports"]),
+    }
+    REPORT_PATH.write_text(
+        json.dumps({"summary": summary, "sections": sections}, indent=1) + "\n")
+    print(f"\n{len(entries)} targets, {len(failed)} failed, "
+          f"{summary['warnings']} warnings, {summary['notes']} plan notes "
+          f"-> {REPORT_PATH.name}")
+    if failed:
+        print(f"FAIL: {', '.join(failed)}")
+        return 1
+    print("ISA verification gate: all compiled programs verify clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

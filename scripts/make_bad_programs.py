@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""Regenerate the hand-mutated bad-program corpus (tests/golden/bad_programs/).
+
+Each corpus case starts from a *real* compiled kernel stream and applies one
+surgical mutation that introduces exactly the hazard class named in the file:
+
+* ``dropped_after_prefetch``  — the double-buffered gemv's round-2 prefetch
+  ``DramLoad`` loses its ``after=('cp0',)`` token: the load into the primary
+  region now races the chunk-0 MACs that still read it (E-RACE-WAR).
+* ``overlapping_alt_buffers`` — the alt-chunk prefetch is rebased into the
+  middle of the primary ``in_a`` region and the allocation's ``in_a.alt``
+  range is moved to match: the allocator's disjointness claim is broken
+  (E-ALLOC-OVERLAP) and the prefetch races the primary readers.
+* ``undersized_accumulator``  — every MAC's ``prec_dst`` (and the zeroing
+  XOR) is shrunk far below the mapping's adaptive-precision width: the
+  worst-case accumulation no longer fits its wordlines (E-PREC-OVERFLOW).
+* ``rf_read_before_load``     — one ``RfLoad`` of a stencil (FIR) stream is
+  deleted: a ``MacConst`` reads the register before any load (E-RF-UNINIT),
+  and the functional simulator's runtime guard agrees
+  (``UninitializedRfError``) — asserted by tests/test_verify.py.
+
+The corpus is committed; this script exists so the cases stay reproducible
+when codegen's emission changes shape.  Run from the repo root:
+
+    PYTHONPATH=src python scripts/make_bad_programs.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import workloads  # noqa: E402
+from repro.core import isa  # noqa: E402
+from repro.core.compiler import compile_workload  # noqa: E402
+from repro.core.machine import PIMSAB, PimsabConfig  # noqa: E402
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "tests" / "golden" / "bad_programs"
+
+FUNCTIONAL_CFG = PimsabConfig(mesh_cols=2, mesh_rows=2, crams_per_tile=1)
+
+
+def _dump(name: str, case: dict) -> None:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.json"
+    path.write_text(json.dumps(case, indent=1) + "\n")
+    print(f"wrote {path.relative_to(OUT_DIR.parent.parent.parent)}"
+          f" ({len(case['program'])} instrs, expect {case['expect']})")
+
+
+def _case(name: str, description: str, cfg: PimsabConfig,
+          program: list, expect: list, **extra) -> dict:
+    return {
+        "name": name,
+        "description": description,
+        "cfg": dataclasses.asdict(cfg),
+        "expect": expect,
+        "program": [isa.instr_to_json(i) for i in program],
+        **extra,
+    }
+
+
+def dropped_after_prefetch() -> dict:
+    cp = compile_workload(workloads.gemv(), PIMSAB)
+    prog = list(cp.program)
+    # the first prefetch that reuses the *primary* region: DramLoad tagged
+    # in_a with a non-empty `after` (cp0 must complete before overwriting)
+    idx = next(
+        i for i, ins in enumerate(prog)
+        if isinstance(ins, isa.DramLoad) and ins.tag == "in_a" and ins.after
+    )
+    prog[idx] = dataclasses.replace(prog[idx], after=())
+    return _case(
+        "dropped_after_prefetch",
+        "gemv's round-2 prefetch DramLoad lost its after=('cp0',) token — it "
+        "overwrites the primary in_a region while the chunk-0 MACs still "
+        f"read it (mutated instr {idx})",
+        PIMSAB, prog, ["E-RACE-WAR"],
+        out_prec=cp.mapping.out_prec,
+        allocation={k: [list(r) for r in v]
+                    for k, v in cp.mapping.allocation.ranges.items()},
+    )
+
+
+def overlapping_alt_buffers() -> dict:
+    cp = compile_workload(workloads.gemv(), PIMSAB)
+    prog = list(cp.program)
+    ranges = {k: [list(r) for r in v]
+              for k, v in cp.mapping.allocation.ranges.items()}
+    (a_s, a_e), = cp.mapping.allocation.ranges["in_a"]
+    (alt_s, alt_e), = cp.mapping.allocation.ranges["in_a.alt"]
+    width = alt_e - alt_s
+    # slide in_a.alt into the middle of in_a and rebase the stream to match
+    bad_s = a_s + (a_e - a_s) // 2
+    ranges["in_a.alt"] = [[bad_s, bad_s + width]]
+    for i, ins in enumerate(prog):
+        if isinstance(ins, isa.DramLoad) and ins.cram_addr == alt_s:
+            prog[i] = dataclasses.replace(ins, cram_addr=bad_s)
+        elif isinstance(ins, isa.Mac) and alt_s <= ins.src1 < alt_e:
+            prog[i] = dataclasses.replace(
+                ins, src1=ins.src1 - alt_s + bad_s)
+    return _case(
+        "overlapping_alt_buffers",
+        "gemv's double-buffer alt region in_a.alt was allocated on top of "
+        "the live primary in_a — the prefetch lands on wordlines the current "
+        "chunk's MACs read",
+        PIMSAB, prog, ["E-ALLOC-OVERLAP"],
+        out_prec=cp.mapping.out_prec,
+        allocation=ranges,
+    )
+
+
+def undersized_accumulator() -> dict:
+    cp = compile_workload(workloads.gemv(), PIMSAB)
+    prog = list(cp.program)
+    planned = cp.mapping.out_prec
+    small = 12  # four 8x8 MACs per chunk need 18 bits worst-case
+    for i, ins in enumerate(prog):
+        if isinstance(ins, isa.Mac):
+            prog[i] = dataclasses.replace(ins, prec_dst=small)
+        elif isinstance(ins, isa.Logical) and ins.op == "xor" and ins.dst == ins.src1:
+            prog[i] = dataclasses.replace(ins, prec1=small)
+        elif isinstance(ins, isa.ReduceIntra):
+            prog[i] = dataclasses.replace(ins, prec=small)
+    return _case(
+        "undersized_accumulator",
+        f"gemv's accumulator was shrunk from the adaptive-precision "
+        f"{planned} wordlines to {small}: the worst-case chunk accumulation "
+        "needs 18 bits and overflows",
+        PIMSAB, prog, ["E-PREC-OVERFLOW"],
+        out_prec=planned,
+    )
+
+
+def rf_read_before_load() -> dict:
+    cp = compile_workload(workloads.fir(n=512, taps=5), FUNCTIONAL_CFG)
+    prog = list(cp.program)
+    # delete the RfLoad of a register a later MacConst reads
+    idx = next(
+        i for i, ins in enumerate(prog)
+        if isinstance(ins, isa.RfLoad) and ins.reg == 2
+    )
+    del prog[idx]
+    return _case(
+        "rf_read_before_load",
+        "the FIR stencil's RfLoad of tap coefficient RF[2] was deleted — the "
+        "MacConst reading it fires before any load (the runtime guard raises "
+        "UninitializedRfError at the same instruction)",
+        FUNCTIONAL_CFG, prog, ["E-RF-UNINIT"],
+        out_prec=cp.mapping.out_prec,
+        runtime_error="UninitializedRfError",
+    )
+
+
+def main() -> None:
+    for build in (dropped_after_prefetch, overlapping_alt_buffers,
+                  undersized_accumulator, rf_read_before_load):
+        _dump(build.__name__, build())
+
+
+if __name__ == "__main__":
+    main()

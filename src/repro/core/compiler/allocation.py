@@ -54,6 +54,21 @@ def mul_live_window(p_mul: int) -> int:
     return p_mul - p_mul // 2
 
 
+def signed_bits(lo: int, hi: int) -> int:
+    """Minimum two's-complement width holding every value in ``[lo, hi]``.
+
+    This is the value-level form of the §V-C growth law that
+    :func:`adaptive_precision` applies to operand widths; the static
+    verifier's overflow lint propagates exact ``(lo, hi)`` bounds through
+    accumulator chains and converts them back to wordline counts here."""
+    bits = 1
+    if hi > 0:
+        bits = max(bits, hi.bit_length() + 1)
+    if lo < 0:
+        bits = max(bits, ((-lo) - 1).bit_length() + 1)
+    return bits
+
+
 @dataclass
 class BufferReq:
     name: str

@@ -65,6 +65,14 @@ class CompiledProgram:
     def __iter__(self):
         return iter(self.program)
 
+    def verify(self, cfg: PimsabConfig):
+        """Run the compile-time static verifier (liveness, schedule-hazard
+        races, precision-overflow lint) over this stream and its mapping;
+        returns the :class:`~repro.core.compiler.verify.VerifyReport`."""
+        from repro.core.compiler.verify import verify_compiled
+
+        return verify_compiled(self, cfg)
+
 
 @dataclass
 class CompiledGraph:
@@ -87,6 +95,14 @@ class CompiledGraph:
 
     def __iter__(self):
         return iter(self.program)
+
+    def verify(self, cfg: PimsabConfig):
+        """Run the compile-time static verifier over the fused stream —
+        per-node analyses plus the cross-node residency/live-range checks;
+        returns the :class:`~repro.core.compiler.verify.VerifyReport`."""
+        from repro.core.compiler.verify import verify_graph
+
+        return verify_graph(self, cfg)
 
 
 def _addr(mapping: Mapping, name: str) -> int:

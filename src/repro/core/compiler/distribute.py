@@ -47,6 +47,12 @@ class Mapping:
     double_buffered: bool = False  # A/B operand chunks (second CRAM region)
     notes: List[str] = field(default_factory=list)
 
+    def plan_notes(self) -> List[Tuple[str, str]]:
+        """The plan's decline/decision notes as ``(node, note)`` pairs — the
+        structured channel the verifier re-emits as ``N-PLAN`` diagnostics
+        (and the compile cache records per entry)."""
+        return [(self.workload.name, n) for n in self.notes]
+
     def to_json(self):
         return {
             "workload": self.workload.name,
@@ -384,6 +390,16 @@ class GraphMapping:
 
     def is_resident(self, dst: str, dst_input: str) -> bool:
         return any(e.dst == dst and e.dst_input == dst_input for e in self.resident)
+
+    def plan_notes(self) -> List[Tuple[str, str]]:
+        """Graph-level + per-node plan notes as ``(node, note)`` pairs
+        (graph-level notes use ``""``) — why residency or double buffering
+        was declined lives here, and the verifier re-emits each pair as an
+        ``N-PLAN`` diagnostic so ``compile_cache_info`` entries record it."""
+        out: List[Tuple[str, str]] = [("", n) for n in self.notes]
+        for m in self.mappings.values():
+            out.extend(m.plan_notes())
+        return out
 
     def store_elided(self, src: str) -> bool:
         """The producer's DRAM store is dropped only when *every* consumer

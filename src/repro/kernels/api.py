@@ -84,6 +84,7 @@ __all__ = [
     "static_value",
     "last_executed_pairs",
     "last_sim_report",
+    "last_verify_report",
     "profile_timelines",
     # Program API (re-exported from repro.kernels.program)
     "trace",
@@ -95,6 +96,11 @@ __all__ = [
     "compile_cache_info",
     "clear_compile_cache",
     "PimsabTracerError",
+    # Static verifier (re-exported from repro.core.compiler.verify)
+    "VerifierError",
+    "VerifierWarning",
+    "VerifyReport",
+    "Diagnostic",
 ]
 
 
@@ -759,6 +765,16 @@ def last_sim_report():
     return pimsab_backend.last_sim_report()
 
 
+def last_verify_report():
+    """Static-verifier :class:`~repro.core.compiler.verify.VerifyReport`
+    tuple of the most recent pimsab compile on this thread — one report per
+    verified ISA stream (the functional + timing pair for a compiled traced
+    program).  Empty before any pimsab compile, or after ``verify=False``."""
+    from repro.kernels import pimsab_backend
+
+    return pimsab_backend.last_verify_report()
+
+
 def profile_timelines(enable: bool = True):
     """Context manager: pimsab timing runs inside it record per-instruction
     scheduling intervals on their :class:`SimReport` (``report.timeline``) —
@@ -786,3 +802,12 @@ from repro.kernels.program import (  # noqa: E402  (after dispatch: program.py
 # ``api.compile(program)`` — the documented spelling; the module-level name
 # deliberately shadows the (unused here) builtin.
 compile = compile_program
+
+# Structured diagnostics of the compile-time static verifier
+# (``api.compile(..., verify=True)``, on by default for pimsab).
+from repro.core.compiler.verify import (  # noqa: E402
+    Diagnostic,
+    VerifierError,
+    VerifierWarning,
+    VerifyReport,
+)

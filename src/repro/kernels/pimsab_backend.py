@@ -77,6 +77,11 @@ from repro.core.compiler.tensor_dsl import (
     Workload,
     WorkloadGraph,
 )
+from repro.core.compiler.verify import (
+    VerifyReport,
+    verify_compiled,
+    verify_graph,
+)
 from repro.core.machine import PIMSAB, PimsabConfig
 from repro.core.simulator import Simulator
 from repro.core import timing as core_timing
@@ -96,10 +101,12 @@ import repro.kernels.rglru_scan  # noqa: E402,F401
 __all__ = [
     "SimReport",
     "last_sim_report",
+    "last_verify_report",
     "functional_config",
     "profile_timelines",
     "FUNCTIONAL_CFG",
     "execute_workload",
+    "run_functional_stream",
     "timing_report",
     "ValueMeta",
     "OpLowering",
@@ -121,6 +128,14 @@ _tls = threading.local()
 def last_sim_report() -> Optional["SimReport"]:
     """The report of the most recent pimsab kernel call on this thread."""
     return getattr(_tls, "report", None)
+
+
+def last_verify_report() -> Tuple[VerifyReport, ...]:
+    """Static-verifier reports of the most recent pimsab compile on this
+    thread (one per verified stream: a single entry for an eager kernel, the
+    functional + timing pair for a compiled traced program).  Empty when the
+    last call ran with ``verify=False``."""
+    return tuple(getattr(_tls, "verify_reports", ()))
 
 
 @contextlib.contextmanager
@@ -382,31 +397,28 @@ def _read_lanes(sim: Simulator, tile: int, addr: int, prec: int, lanes: int) -> 
 # ---------------------------------------------------------------------------
 
 
-def execute_workload(
+def run_functional_stream(
+    program: Tuple[isa.Instr, ...],
     w: Workload,
+    m: Any,
+    cfg_fn: PimsabConfig,
     arrays: Dict[str, np.ndarray],
     *,
     h0: Optional[np.ndarray] = None,
-    kernel: str = "",
-    cfg_fn: Optional[PimsabConfig] = None,
-    cfg_timing: Optional[PimsabConfig] = None,
     serialize: bool = False,
-) -> Tuple[np.ndarray, SimReport]:
-    """Compile ``w``, execute it bit-exactly, and model it at chip scale.
+) -> Tuple[np.ndarray, Simulator]:
+    """Execute an ISA ``program`` bit-exactly on the functional machine.
 
-    Returns the raw integer outputs (flat over the data loops; ``(d, k)`` for
-    ``scan_mac``) and the :class:`SimReport` (also stashed for
-    :func:`last_sim_report`).  ``serialize=True`` runs the functional machine
-    in the fully-serialized compatibility clock — results must be identical
-    (scheduling never changes execution order), which the invariant tests
-    assert.
+    This is the inner loop of :func:`execute_workload`, factored out so the
+    verifier tests can run *mutated* streams (scheduling tags stripped or
+    permuted) of the same workload and assert bit-exactness: functional
+    execution is strict program order, so any stream carrying the same
+    data-plane-tagged DRAM instructions replays against the same
+    :class:`_DataPlane`.  Returns ``(outputs, simulator)``.
     """
-    cfg_fn = cfg_fn or _functional_cfg()
-    cp = compile_workload(w, cfg_fn)
-    m = cp.mapping
     sim = Simulator(cfg_fn, functional=True, serialize=serialize)
     plane = _DataPlane(w, m, cfg_fn, arrays, h0=h0)
-    for ins in cp.program:
+    for ins in program:
         if isinstance(ins, isa.DramLoad) and ins.tag:
             for t in (ins.tiles or range(m.tiles_used)):
                 slab, prec = plane.load(ins, t)
@@ -419,11 +431,50 @@ def execute_workload(
                     ins, t,
                     lambda addr, prec, _t=t: _read_lanes(sim, _t, addr, prec, m.lanes_used),
                 )
+    return plane.out, sim
+
+
+def execute_workload(
+    w: Workload,
+    arrays: Dict[str, np.ndarray],
+    *,
+    h0: Optional[np.ndarray] = None,
+    kernel: str = "",
+    cfg_fn: Optional[PimsabConfig] = None,
+    cfg_timing: Optional[PimsabConfig] = None,
+    serialize: bool = False,
+    verify: bool = True,
+) -> Tuple[np.ndarray, SimReport]:
+    """Compile ``w``, execute it bit-exactly, and model it at chip scale.
+
+    Returns the raw integer outputs (flat over the data loops; ``(d, k)`` for
+    ``scan_mac``) and the :class:`SimReport` (also stashed for
+    :func:`last_sim_report`).  ``serialize=True`` runs the functional machine
+    in the fully-serialized compatibility clock — results must be identical
+    (scheduling never changes execution order), which the invariant tests
+    assert.  ``verify=True`` (the default) runs the compile-time static
+    verifier (``compiler.verify``) over the functional stream before
+    execution and raises :class:`~repro.core.compiler.verify.VerifierError`
+    on any liveness/race/overflow error; the report is retrievable via
+    :func:`last_verify_report`.
+    """
+    cfg_fn = cfg_fn or _functional_cfg()
+    cp = compile_workload(w, cfg_fn)
+    m = cp.mapping
+    if verify:
+        vrep = verify_compiled(cp, cfg_fn)
+        _tls.verify_reports = (vrep,)
+        vrep.raise_on_error()
+    else:
+        _tls.verify_reports = ()
+    out, sim = run_functional_stream(
+        cp.program, w, m, cfg_fn, arrays, h0=h0, serialize=serialize
+    )
     rep = timing_report(
         w, kernel=kernel, cfg=cfg_timing or TIMING_CFG, functional_instrs=sim.res.instrs
     )
     _tls.report = rep
-    return plane.out, rep
+    return out, rep
 
 
 def timing_report(
@@ -432,9 +483,17 @@ def timing_report(
     kernel: str = "",
     cfg: PimsabConfig = TIMING_CFG,
     functional_instrs: int = 0,
+    verify: bool = False,
 ) -> SimReport:
-    """Compile ``w`` for the full-scale machine and run the analytic model."""
+    """Compile ``w`` for the full-scale machine and run the analytic model.
+
+    ``verify=True`` additionally runs the static verifier over the
+    full-scale stream (raising on errors) — opt-in here because eager
+    dispatch already verifies the functional stream of the same workload.
+    """
     cp = compile_workload(w, cfg)
+    if verify:
+        verify_compiled(cp, cfg).raise_on_error()
     res = Simulator(cfg, record_timeline=_profiling()).run(cp.program)
     return SimReport(
         kernel=kernel,
@@ -1381,6 +1440,7 @@ class CompiledTracedProgram:
     cg_fn: CompiledGraph
     report: SimReport
     cfg_fn: PimsabConfig
+    verify_reports: Tuple[VerifyReport, ...] = ()  # (functional, timing) when verified
 
 
 def _build_graph(program) -> Tuple[List[str], List[OpLowering], WorkloadGraph]:
@@ -1440,14 +1500,29 @@ def compile_traced_program(
     program,
     cfg_fn: Optional[PimsabConfig] = None,
     cfg_timing: Optional[PimsabConfig] = None,
+    *,
+    verify: bool = True,
 ) -> CompiledTracedProgram:
     """Lower a traced Program into one WorkloadGraph and compile it for the
-    functional machine (execution) and the full-scale machine (report)."""
+    functional machine (execution) and the full-scale machine (report).
+
+    ``verify=True`` (the default) statically verifies *both* fused streams —
+    liveness/def-use, schedule-hazard races, precision-overflow lint — and
+    raises :class:`~repro.core.compiler.verify.VerifierError` on any error;
+    the pair of reports attaches as ``.verify_reports`` (also surfaced via
+    :func:`last_verify_report`) so cache introspection can read the plan
+    notes (residency/double-buffer declines) of the compiled artifact."""
     cfg_fn = cfg_fn or _functional_cfg()
     cfg_t = cfg_timing or TIMING_CFG
     node_names, lowerings, graph = _build_graph(program)
     cg_fn = compile_graph(graph, cfg_fn)
     cg_t = compile_graph(graph, cfg_t)
+    vreports: Tuple[VerifyReport, ...] = ()
+    if verify:
+        vreports = (verify_graph(cg_fn, cfg_fn), verify_graph(cg_t, cfg_t))
+        _tls.verify_reports = vreports
+        for vr in vreports:
+            vr.raise_on_error()
     report = _program_report(program, cg_t, cfg_t, functional_instrs=len(cg_fn.program))
     return CompiledTracedProgram(
         program=program,
@@ -1456,20 +1531,27 @@ def compile_traced_program(
         cg_fn=cg_fn,
         report=report,
         cfg_fn=cfg_fn,
+        verify_reports=vreports,
     )
 
 
 def timing_program_report(
-    program, cfg_timing: Optional[PimsabConfig] = None
+    program, cfg_timing: Optional[PimsabConfig] = None, *, verify: bool = True
 ) -> SimReport:
     """Timing-only program lowering: compile the fused WorkloadGraph for the
     full-scale machine and run the analytic model, skipping the functional
     compile entirely.  This is how network shapes far beyond bit-serial
     functional simulation (the paper-shaped ResNet18 config) still get their
-    modeled end-to-end cycles/energy and per-layer breakdown."""
+    modeled end-to-end cycles/energy and per-layer breakdown.  ``verify=True``
+    (the default) statically verifies the full-scale stream first and raises
+    on any error."""
     cfg_t = cfg_timing or TIMING_CFG
     _, _, graph = _build_graph(program)
     cg_t = compile_graph(graph, cfg_t)
+    if verify:
+        vrep = verify_graph(cg_t, cfg_t)
+        _tls.verify_reports = (vrep,)
+        vrep.raise_on_error()
     return _program_report(program, cg_t, cfg_t, functional_instrs=0)
 
 

@@ -337,9 +337,18 @@ def trace(fn: Callable[..., Any], *, name: Optional[str] = None) -> TracedFuncti
 
 @dataclass(frozen=True)
 class CacheInfo:
+    """Compile-cache counters plus one metadata record per cached Executor.
+
+    Each entry is ``{"name", "backend", "kernels", "verify"}`` where
+    ``verify`` summarizes the static-verifier outcome of that compile —
+    error/warning counts and the ``N-PLAN`` notes explaining why
+    ``distribute_graph`` declined residency or double buffering for the
+    cached plan (``None`` when the compile skipped verification)."""
+
     hits: int
     misses: int
     size: int
+    entries: Tuple[Dict[str, Any], ...] = ()
 
 
 class Executor:
@@ -350,11 +359,13 @@ class Executor:
 
     def __init__(self, program: Program, backend: str,
                  run: Callable[[List[Any]], Any],
-                 report: Optional[Any] = None):
+                 report: Optional[Any] = None,
+                 verify_reports: Tuple[Any, ...] = ()):
         self.program = program
         self.backend = backend
         self._run = run
         self.report = report  # aggregated SimReport (pimsab), else None
+        self.verify_reports = verify_reports  # VerifyReports (pimsab verify=True)
 
     def __call__(self, *args, **kwargs):
         leaves, in_tree = jax.tree_util.tree_flatten((args, kwargs))
@@ -385,15 +396,21 @@ class Executor:
 
 _cache_lock = threading.Lock()
 _cache: Dict[Any, Any] = {}
+_cache_meta: Dict[Any, Dict[str, Any]] = {}
 _hits = 0
 _misses = 0
 
 
 def compile_cache_info() -> CacheInfo:
     """Hit/miss/size counters of the global compile cache (Executors + other
-    cached executables such as serve steps)."""
+    cached executables such as serve steps), plus per-entry metadata — the
+    structured verifier summary recorded at compile time, including the
+    plan-decline notes (see :class:`CacheInfo`)."""
     with _cache_lock:
-        return CacheInfo(hits=_hits, misses=_misses, size=len(_cache))
+        return CacheInfo(
+            hits=_hits, misses=_misses, size=len(_cache),
+            entries=tuple(dict(m) for m in _cache_meta.values()),
+        )
 
 
 def clear_compile_cache() -> None:
@@ -402,13 +419,17 @@ def clear_compile_cache() -> None:
     global _hits, _misses
     with _cache_lock:
         _cache.clear()
+        _cache_meta.clear()
         _hits = 0
         _misses = 0
 
 
-def cached_executable(key: Any, build: Callable[[], Any]) -> Any:
+def cached_executable(key: Any, build: Callable[[], Any],
+                      meta: Optional[Callable[[Any], Dict[str, Any]]] = None) -> Any:
     """Generic compile-once: return the cached artifact for ``key`` or build
-    it (outside the lock — builds can be slow and re-entrant)."""
+    it (outside the lock — builds can be slow and re-entrant).  ``meta``, if
+    given, maps the freshly built artifact to the :class:`CacheInfo` entry
+    recorded for it."""
     global _hits, _misses
     with _cache_lock:
         if key in _cache:
@@ -421,6 +442,8 @@ def cached_executable(key: Any, build: Callable[[], Any]) -> Any:
             return _cache[key]
         _misses += 1
         _cache[key] = artifact
+        if meta is not None:
+            _cache_meta[key] = meta(artifact)
     return artifact
 
 
@@ -455,10 +478,42 @@ def _jax_run(program: Program, backend: str) -> Callable[[List[Any]], Any]:
     return lambda leaves: jitted(leaves, consts)
 
 
-def compile_program(program: Program, backend: Optional[str] = None) -> Executor:
+def _executor_meta(ex: "Executor") -> Dict[str, Any]:
+    """The :class:`CacheInfo` entry for a freshly compiled Executor: identity
+    plus the static-verifier summary (error/warning counts and the N-PLAN
+    notes recording why residency/double-buffering was declined)."""
+    entry: Dict[str, Any] = {
+        "name": ex.program.name,
+        "backend": ex.backend,
+        "kernels": list(ex.program.kernels),
+        "verify": None,
+    }
+    if ex.verify_reports:
+        entry["verify"] = {
+            "ok": all(r.ok for r in ex.verify_reports),
+            "errors": sum(len(r.errors) for r in ex.verify_reports),
+            "warnings": sum(len(r.warnings) for r in ex.verify_reports),
+            "notes": sorted({
+                (d.node, d.message)
+                for r in ex.verify_reports for d in r.notes
+            }),
+        }
+    return entry
+
+
+def compile_program(program: Program, backend: Optional[str] = None, *,
+                    verify: bool = True) -> Executor:
     """Lower ``program`` for ``backend`` (default: the active backend) and
-    return the Executor — cached on (signature, backend[, machine config]),
-    so an identical second compile is a pure cache hit."""
+    return the Executor — cached on (signature, backend[, machine config,
+    verify]), so an identical second compile is a pure cache hit.
+
+    ``verify=True`` (the default) runs the compile-time static verifier on
+    the pimsab backend — liveness/def-use, schedule-hazard race detection
+    and precision-overflow lint over both fused ISA streams — raising
+    :class:`repro.core.compiler.verify.VerifierError` on any error; the
+    verifier summary (including plan-decline notes) is recorded on the cache
+    entry, visible via :func:`compile_cache_info`.  The flag is a no-op on
+    the jax-side backends."""
     from repro.kernels import api
 
     backend = api._check_backend(backend or api.current_backend())
@@ -466,17 +521,18 @@ def compile_program(program: Program, backend: Optional[str] = None) -> Executor
     if backend == "pimsab":
         from repro.kernels import pimsab_backend as pb
 
-        key = key + (pb._functional_cfg(),)
+        key = key + (pb._functional_cfg(), bool(verify))
 
         def build() -> Executor:
-            compiled = pb.compile_traced_program(program)
+            compiled = pb.compile_traced_program(program, verify=verify)
             return Executor(
                 program, backend,
                 run=lambda leaves: pb.execute_traced_program(compiled, leaves),
                 report=compiled.report,
+                verify_reports=compiled.verify_reports,
             )
     else:
         def build() -> Executor:
             return Executor(program, backend, run=_jax_run(program, backend))
 
-    return cached_executable(key, build)
+    return cached_executable(key, build, meta=_executor_meta)

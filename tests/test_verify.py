@@ -1,0 +1,263 @@
+"""Static verifier (compiler.verify): clean compiled kernels pass all three
+analyses; the hand-mutated bad-program corpus (tests/golden/bad_programs/) is
+rejected with its specific diagnostic; the static RF check agrees with the
+runtime ``UninitializedRfError`` guard; and schedule-tag mutations that still
+verify stay bit-exact on the functional simulator (schedule independence)."""
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: deterministic replay shim
+    from _hypothesis_stub import given, settings, st
+
+from benchmarks import workloads
+from repro.core import isa
+from repro.core.compiler import compile_workload
+from repro.core.compiler.allocation import Allocation, signed_bits
+from repro.core.compiler.tensor_dsl import Loop, Ref, Workload
+from repro.core.compiler.verify import (
+    Diagnostic,
+    VerifierError,
+    VerifyReport,
+    verify_compiled,
+    verify_stream,
+)
+from repro.core.machine import PIMSAB, PimsabConfig
+from repro.core.simulator import Simulator, UninitializedRfError
+from repro.kernels import pimsab_backend as pb
+
+SET = settings(max_examples=25, deadline=None)
+
+CORPUS_DIR = pathlib.Path(__file__).parent / "golden" / "bad_programs"
+CORPUS = sorted(CORPUS_DIR.glob("*.json"))
+
+
+def _load_case(path):
+    case = json.loads(path.read_text())
+    cfg = PimsabConfig(**case["cfg"])
+    prog = [isa.instr_from_json(d) for d in case["program"]]
+    alloc = None
+    if "allocation" in case:
+        alloc = Allocation(
+            ranges={k: [tuple(r) for r in v]
+                    for k, v in case["allocation"].items()},
+            capacity=cfg.cram_rows,
+        )
+    return case, cfg, prog, alloc
+
+
+def _verify_case(case, cfg, prog, alloc):
+    return verify_stream(
+        prog, cfg, name=case["name"],
+        allocation=alloc, out_prec=case.get("out_prec"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# bad-program corpus
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_exists():
+    names = {p.stem for p in CORPUS}
+    assert {"dropped_after_prefetch", "overlapping_alt_buffers",
+            "undersized_accumulator", "rf_read_before_load"} <= names
+
+
+@pytest.mark.parametrize("path", CORPUS, ids=lambda p: p.stem)
+def test_corpus_case_rejected_with_specific_diagnostic(path):
+    case, cfg, prog, alloc = _load_case(path)
+    rep = _verify_case(case, cfg, prog, alloc)
+    assert not rep.ok, f"{case['name']} must fail static verification"
+    codes = {d.code for d in rep.errors}
+    for want in case["expect"]:
+        assert want in codes, f"{case['name']}: want {want}, got {sorted(codes)}"
+    # diagnostics are actionable: instruction-anchored codes carry the index
+    # and the wordline ranges involved
+    for d in rep.errors:
+        if d.code.startswith("E-RACE") or d.code in ("E-UNINIT-READ",
+                                                     "E-PREC-OVERFLOW"):
+            assert d.instr is not None
+            assert d.wordlines
+    with pytest.raises(VerifierError) as ei:
+        rep.raise_on_error()
+    assert case["expect"][0] in str(ei.value)
+
+
+@pytest.mark.parametrize("path", CORPUS, ids=lambda p: p.stem)
+def test_corpus_serialization_roundtrips(path):
+    _, _, prog, _ = _load_case(path)
+    for ins in prog:
+        assert isa.instr_from_json(isa.instr_to_json(ins)) == ins
+
+
+def test_rf_static_check_agrees_with_runtime_guard():
+    """The corpus' deleted-RfLoad case: the static E-RF-UNINIT diagnostic
+    points at the same instruction where the functional machine's runtime
+    guard raises ``UninitializedRfError``."""
+    case, cfg, prog, alloc = _load_case(CORPUS_DIR / "rf_read_before_load.json")
+    rep = _verify_case(case, cfg, prog, alloc)
+    static_at = next(d.instr for d in rep.errors if d.code == "E-RF-UNINIT")
+    sim = Simulator(cfg, functional=True)
+    runtime_at = None
+    for i, ins in enumerate(prog):
+        try:
+            sim.step(ins)
+        except UninitializedRfError:
+            runtime_at = i
+            break
+    assert runtime_at is not None, "runtime guard must also fire"
+    assert runtime_at == static_at
+
+
+# ---------------------------------------------------------------------------
+# clean programs verify clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mk", list(workloads.MICROBENCHES.values()),
+                         ids=list(workloads.MICROBENCHES))
+def test_microbench_kernels_verify_clean(mk):
+    cp = compile_workload(mk(), PIMSAB)
+    rep = cp.verify(PIMSAB)
+    assert rep.ok, rep.summary() + "\n" + "\n".join(map(str, rep.errors))
+
+
+def test_report_shape_and_json():
+    cp = compile_workload(workloads.gemv(), PIMSAB)
+    rep = verify_compiled(cp, PIMSAB)
+    assert isinstance(rep, VerifyReport) and rep.ok
+    assert rep.instrs == len(cp.program)
+    j = rep.to_json()
+    assert j["ok"] and j["name"] == cp.mapping.workload.name
+    for d in rep.diagnostics:
+        assert isinstance(d, Diagnostic)
+        assert d.severity in ("error", "warning", "note")
+
+
+def test_signed_bits_matches_twos_complement():
+    assert signed_bits(0, 0) == 1
+    assert signed_bits(-128, 127) == 8
+    assert signed_bits(-129, 0) == 9
+    assert signed_bits(0, 128) == 9
+
+
+# ---------------------------------------------------------------------------
+# backend wiring
+# ---------------------------------------------------------------------------
+
+
+def test_execute_workload_verifies_by_default():
+    rng = np.random.default_rng(3)
+    a = rng.integers(-8, 8, (4, 32)).astype(np.int64)
+    b = rng.integers(-8, 8, (32, 2)).astype(np.int64)
+    w = _gemm(4, 2, 32)
+    out, _ = pb.execute_workload(w, {"a": a, "b": b})
+    assert np.array_equal(out.reshape(4, 2), a @ b)
+    reports = pb.last_verify_report()
+    assert reports and all(r.ok for r in reports)
+    out2, _ = pb.execute_workload(w, {"a": a, "b": b}, verify=False)
+    assert np.array_equal(out2, out)
+    assert pb.last_verify_report() == ()
+
+
+def test_verifier_error_carries_report():
+    case, cfg, prog, alloc = _load_case(CORPUS_DIR / "undersized_accumulator.json")
+    rep = _verify_case(case, cfg, prog, alloc)
+    err = VerifierError(rep)
+    assert err.report is rep
+    assert "E-PREC-OVERFLOW" in str(err)
+
+
+# ---------------------------------------------------------------------------
+# schedule independence (property)
+# ---------------------------------------------------------------------------
+
+
+def _gemm(mm, nn, kk):
+    return Workload(
+        name=f"gemm_{mm}x{nn}x{kk}",
+        loops=(Loop("x", mm, "data"), Loop("y", nn, "data"),
+               Loop("k", kk, "reduce")),
+        out=Ref("c", ("x", "y"), prec=32),
+        ins=(Ref("a", ("x", "k"), prec=8), Ref("b", ("k", "y"), prec=8)),
+        op="mac",
+        acc_prec=32,
+    )
+
+
+_FCFG = pb.FUNCTIONAL_CFG
+_W = _gemm(8, 4, 256)  # double-buffered at the functional config: 35+ tokens
+_CP = compile_workload(_W, _FCFG)
+_RNG = np.random.default_rng(0xBEEF)
+_ARRAYS = {
+    "a": _RNG.integers(-8, 8, (8, 256)).astype(np.int64),
+    "b": _RNG.integers(-8, 8, (256, 4)).astype(np.int64),
+}
+_REF_OUT, _ = pb.run_functional_stream(
+    _CP.program, _W, _CP.mapping, _FCFG, dict(_ARRAYS))
+
+
+def _mutate(kind: int, pick: int):
+    """Three tag mutations over the double-buffered gemm stream: 0 = strip
+    every scheduling tag (all-barrier — legal), 1 = barrier one instruction
+    (strictly more ordered — legal), 2 = drop one ``after`` token (may break
+    the prefetch ordering)."""
+    prog = list(_CP.program)
+    if kind == 0:
+        return [dataclasses.replace(i, phase=None, after=(), barrier=False)
+                for i in prog]
+    if kind == 1:
+        i = pick % len(prog)
+        prog[i] = dataclasses.replace(prog[i], barrier=True)
+        return prog
+    tagged = [i for i, ins in enumerate(prog) if ins.after]
+    i = tagged[pick % len(tagged)]
+    keep = prog[i].after[1:]
+    prog[i] = dataclasses.replace(prog[i], after=keep)
+    return prog
+
+
+@SET
+@given(st.integers(0, 2), st.integers(0, 10_000))
+def test_schedule_mutations_verified_implies_bit_exact(kind, pick):
+    prog = _mutate(kind, pick)
+    rep = verify_stream(prog, _FCFG, name="mutated",
+                        mapping=_CP.mapping)
+    if kind in (0, 1):
+        # strictly-more-ordered schedules must stay verified
+        assert rep.ok, "\n".join(map(str, rep.errors))
+    if not rep.ok:
+        # a dropped token can only introduce *hazards*, never liveness or
+        # precision issues — program order and effects are unchanged
+        assert all(d.code.startswith("E-RACE") for d in rep.errors), \
+            "\n".join(map(str, rep.errors))
+        return
+    out, _ = pb.run_functional_stream(
+        prog, _W, _CP.mapping, _FCFG, dict(_ARRAYS))
+    assert np.array_equal(out, _REF_OUT), f"mutation ({kind},{pick}) changed results"
+
+
+def test_some_dropped_tokens_are_caught():
+    """The double-buffered stream has at least one after-token that is
+    load-bearing: dropping it must produce a race diagnostic."""
+    caught = 0
+    tagged = [i for i, ins in enumerate(_CP.program) if ins.after]
+    for pick in range(len(tagged)):
+        rep = verify_stream(_mutate(2, pick), _FCFG, name="mutated",
+                            mapping=_CP.mapping)
+        if not rep.ok:
+            caught += 1
+    assert caught > 0, "no dropped token was flagged — race engine is blind"
+
+
+def test_corpus_never_verifies_under_mutation_seed():
+    """Seeded bad programs never pass, whatever the draw order."""
+    for path in CORPUS:
+        case, cfg, prog, alloc = _load_case(path)
+        assert not _verify_case(case, cfg, prog, alloc).ok
