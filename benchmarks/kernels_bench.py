@@ -497,6 +497,68 @@ def program_mode(timelines: Optional[Dict] = None) -> Dict:
     }
 
 
+def simwall() -> Dict:
+    """Functional-simulator wall-clock throughput on a pinned workload.
+
+    Two measurements on the same compiled GEMM stream (no DRAM content, so
+    this times the compute data plane, not host I/O):
+
+    * the tile-batched ``CramBank`` path (the default), and
+    * the per-bit ``exact_bits`` reference it must stay bit-identical to —
+      their ratio is the locked-in batching speedup.
+
+    ``lane_ops_per_sec`` counts every (instruction × bitline lane × CRAM)
+    the broadcast SIMD stream drives per wall-second — the honest
+    "simulated machine throughput" number quoted in docs/benchmarks.md.
+    Wall numbers are machine noise and are never gated numerically; the
+    ``--check`` gate pins that the section exists and that a pinned
+    ``int_matmul`` stays bit-exact against the numpy oracle when executed
+    through the batched path end to end.
+    """
+    try:
+        from benchmarks import workloads
+    except ImportError:  # run as `python benchmarks/kernels_bench.py`
+        import workloads
+    from repro.core.compiler.codegen import compile_workload
+    from repro.core.machine import PimsabConfig
+    from repro.core.simulator import Simulator
+
+    cfg = PimsabConfig(mesh_cols=2, mesh_rows=2, crams_per_tile=1)
+    cp = compile_workload(workloads.gemm(m=1024, n=32, k=256, prec=8, acc=32), cfg)
+    walls = {}
+    for exact in (False, True):
+        sim = Simulator(cfg, functional=True, exact_bits=exact)
+        t0 = time.perf_counter()
+        sim.run(cp.program)
+        walls[exact] = time.perf_counter() - t0
+    lanes = cfg.mesh_rows * cfg.mesh_cols * cfg.crams_per_tile * cfg.cram_cols
+
+    # end-to-end bit-exactness through the api on the same machine config
+    rng = np.random.default_rng(_SEED)
+    x = jnp.asarray(rng.integers(-128, 128, (64, 256)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (256, 64)), jnp.int32)
+    t0 = time.perf_counter()
+    with api.use_backend("pimsab"):
+        got = api.int_matmul(x, w, x_bits=8, w_bits=8)
+    e2e_wall = time.perf_counter() - t0
+    bit_exact = bool((np.asarray(got) == np.asarray(x) @ np.asarray(w)).all())
+
+    return {
+        "workload": "gemm_m1024_n32_k256_p8",
+        "instrs": len(cp.program),
+        "wall_seconds": round(walls[False], 3),
+        "exact_bits_wall_seconds": round(walls[True], 3),
+        "batched_speedup": round(walls[True] / walls[False], 2),
+        "instrs_per_sec": int(len(cp.program) / walls[False]),
+        "lane_ops_per_sec": int(len(cp.program) * lanes / walls[False]),
+        "e2e": {
+            "workload": "int_matmul_64x256x64_i8",
+            "wall_seconds": round(e2e_wall, 3),
+            "bit_exact": bit_exact,
+        },
+    }
+
+
 def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> List[str]:
     """Correctness flags must hold and modeled cycles must not regress by
     more than ``tol`` vs the committed baseline (wall-clock fields are
@@ -511,6 +573,11 @@ def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> L
         failures.append("program: traced chain no longer bit-exact vs eager pimsab")
     if not result["program"]["compile_cache"]["second_compile_was_hit"]:
         failures.append("program: second identical compile was not a cache hit")
+    sw = result.get("simwall")
+    if sw is None:
+        failures.append("simwall: functional-throughput section missing from run")
+    elif not sw["e2e"]["bit_exact"]:
+        failures.append("simwall: pinned int_matmul no longer bit-exact on the batched path")
     tiny = result["e2e"]["tiny"]
     if not tiny["bit_exact_vs_oracle"]:
         failures.append("e2e: traced ResNet no longer bit-exact vs the JAX oracle")
@@ -577,6 +644,7 @@ def main(check: bool = False, profile: bool = False) -> Dict:
             "large_shapes": large_shapes(timelines),
             "program": program_mode(timelines),
             "e2e": e2e_resnet.collect(),
+            "simwall": simwall(),
         }
     if check:
         if not OUT_PATH.exists():
@@ -601,6 +669,7 @@ def main(check: bool = False, profile: bool = False) -> Dict:
     for net, sec in result["e2e"].items():
         print(f"e2e:{net}:", {k: v for k, v in sec.items()
                               if k not in ("per_layer", "kernels")})
+    print("simwall:", result["simwall"])
     print(f"wrote {OUT_PATH}")
     return result
 

@@ -30,12 +30,16 @@ def bcast_cycles(cfg: PimsabConfig, bits: int) -> int:
 
 
 def reduce_functional(values: List[np.ndarray]) -> np.ndarray:
-    """Pairwise tree sum of per-CRAM vectors (H-tree order)."""
+    """Pairwise tree sum of per-CRAM vectors (H-tree order: adjacent leaves
+    combine first).  A non-power-of-two leaf set — a tile whose data plane
+    only populated some CRAMs — reduces the same way, the odd tail riding up
+    a level unpaired (the switch forwards a single child unchanged)."""
     vals = [np.asarray(v, np.int64) for v in values]
-    n = len(vals)
-    assert n & (n - 1) == 0, n
     while len(vals) > 1:
-        vals = [vals[i] + vals[i + 1] for i in range(0, len(vals), 2)]
+        nxt = [vals[i] + vals[i + 1] for i in range(0, len(vals) - 1, 2)]
+        if len(vals) % 2:
+            nxt.append(vals[-1])
+        vals = nxt
     return vals[0]
 
 

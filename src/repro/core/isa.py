@@ -103,6 +103,10 @@ class Compute(Instr):
         reads = [(self.src1, self.src1 + self.prec1)]
         if self.src2 is not None:
             reads.append((self.src2, self.src2 + self.prec2))
+        if self.pred is not Pred.NONE:
+            # predicated lanes keep the old destination bits — a read-modify
+            # merge, so dst is a data input too
+            reads.append((self.dst, self.dst + self.prec_dst))
         return Effect(
             reads=tuple(reads),
             writes=((self.dst, self.dst + self.prec_dst),),
@@ -164,11 +168,16 @@ class Logical(Compute):
 @dataclass(frozen=True)
 class Copy(Compute):
     def effect(self) -> Effect:
-        base = super().effect()  # writes prec1 bits; a masked copy merges dst
-        base = replace(base, writes=((self.dst, self.dst + self.prec1),))
-        if self.pred is Pred.MASK:
-            base = replace(base, reads=base.reads + ((self.dst, self.dst + self.prec1),))
-        return base
+        # writes prec1 bits; a predicated copy merges into dst (read too)
+        reads: Tuple[Tuple[int, int], ...] = ((self.src1, self.src1 + self.prec1),)
+        if self.pred is not Pred.NONE:
+            reads += ((self.dst, self.dst + self.prec1),)
+        return Effect(
+            reads=reads,
+            writes=((self.dst, self.dst + self.prec1),),
+            mask_read=self.pred is Pred.MASK,
+            resources=self._exec_resources(),
+        )
 
 
 @dataclass(frozen=True)

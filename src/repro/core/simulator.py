@@ -5,8 +5,16 @@ Two coupled modes, selected per run:
 * ``timing``     (always on) — analytic cycle & energy accounting per
   instruction using core.timing / core.energy / core.noc; produces the
   Fig-11-style per-category breakdowns at full machine scale.
-* ``functional`` (small machines / tests) — bit-exact execution on
-  core.cram.Cram state, lazily allocating CRAMs as instructions touch them.
+* ``functional`` — bit-exact execution, lazily allocating CRAM state as
+  instructions touch it.  By default every touched CRAM is a slot of one
+  tile-batched ``core.cram.CramBank`` and each compute instruction runs as a
+  single vectorized kernel over all tiles × lanes at once (cross-tile ops —
+  H-tree reduce, systolic broadcast, DRAM gather — index per tile); with
+  ``exact_bits=True`` each CRAM is an independent ``Cram`` running the
+  literal per-bit ``pe_step`` loops, the differential reference the fuzz
+  harness compares against.  Cycles and energy are charged analytically
+  before functional dispatch either way, so both paths produce identical
+  ``SimResult`` numbers by construction.
 
 **The clock is a phase-timeline engine, not a bucket sum.**  Each
 instruction occupies one or more *resources* (the compute micro-op
@@ -44,8 +52,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import isa, noc, timing
-from repro.core.cram import Cram
+from repro.core import htree, isa, noc, timing
+from repro.core.cram import Cram, CramBank, CramView
 from repro.core.energy import EnergyLedger
 from repro.core.machine import PimsabConfig
 
@@ -128,6 +136,14 @@ class Simulator:
         self.exact_bits = exact_bits
         self.serialize = serialize  # compat mode: ignore phase tags entirely
         self.crams: Dict[tuple, Cram] = {}  # (tile, cram) -> Cram, lazy
+        # batched functional state: every touched CRAM is a slot of one
+        # (slots, rows, cols) bank and each instruction executes as a single
+        # numpy op across all of them; exact_bits keeps per-tile Cram objects
+        # running the literal per-bit pe_step loops (the reference path)
+        self.bank: Optional[CramBank] = None
+        if functional and not exact_bits:
+            self.bank = CramBank(self.cfg.cram_rows, self.cfg.cram_cols)
+        self._slot_cache: Dict[tuple, tuple] = {}  # tiles -> (slots, owners)
         self.rf: Dict[tuple, int] = {}      # (tile, reg) -> value
         self.res = SimResult()
         if record_timeline:
@@ -141,9 +157,13 @@ class Simulator:
     def cram(self, tile: int = 0, idx: int = 0) -> Cram:
         key = (tile, idx)
         if key not in self.crams:
-            self.crams[key] = Cram(
-                self.cfg.cram_rows, self.cfg.cram_cols, exact_bits=self.exact_bits
-            )
+            if self.bank is not None:
+                self.crams[key] = CramView(self.bank, self.bank.add_slot())
+            else:
+                self.crams[key] = Cram(
+                    self.cfg.cram_rows, self.cfg.cram_cols, exact_bits=self.exact_bits
+                )
+            self._slot_cache.clear()  # the active SIMD set just grew
         return self.crams[key]
 
     def _tiles(self, ins: isa.Instr) -> List[int]:
@@ -232,6 +252,23 @@ class Simulator:
             for c in self._active_crams(t):
                 yield t, self.cram(t, c)
 
+    def _slots(self, tiles: List[int]):
+        """Bank slots of the active CRAMs of ``tiles`` (+ owning tile per
+        slot, for per-tile RF constants).  Cached per tile set — the active
+        set only changes when the data plane lazily touches a new CRAM."""
+        key = tuple(tiles)
+        hit = self._slot_cache.get(key)
+        if hit is None:
+            slots, owners = [], []
+            for t in tiles:
+                self.cram(t, 0)  # CRAM 0 always participates
+                for c in self._active_crams(t):
+                    slots.append(self.cram(t, c)._slot)
+                    owners.append(t)
+            hit = (np.asarray(slots, np.intp), tuple(owners))
+            self._slot_cache[key] = hit
+        return hit
+
     def _rf_value(self, tile: int, reg: int, ins: isa.Instr) -> int:
         key = (tile, reg)
         if key not in self.rf:
@@ -252,12 +289,22 @@ class Simulator:
             c = timing.cycles_add(ins.prec1, ins.prec2)
             self._compute(ins, c)
             if self.functional:
-                for _, cr in self._crams(tiles):
+                if self.bank is not None:
+                    sl, _ = self._slots(tiles)
                     if isinstance(ins, isa.Sub):
-                        cr.sub(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
+                        self.bank.sub(sl, ins.dst, ins.src1, ins.src2,
+                                      ins.prec1, ins.prec2, ins.prec_dst)
                     else:
-                        cr.add(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2,
-                               ins.prec_dst, cen=ins.cen, cst=ins.cst, pred=ins.pred.value)
+                        self.bank.add(sl, ins.dst, ins.src1, ins.src2, ins.prec1,
+                                      ins.prec2, ins.prec_dst, cen=ins.cen,
+                                      cst=ins.cst, pred=ins.pred.value)
+                else:
+                    for _, cr in self._crams(tiles):
+                        if isinstance(ins, isa.Sub):
+                            cr.sub(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
+                        else:
+                            cr.add(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2,
+                                   ins.prec_dst, cen=ins.cen, cst=ins.cst, pred=ins.pred.value)
         elif isinstance(ins, isa.MacConst):
             c = timing.cycles_mac_const(
                 ins.prec1, self._rf_value(tiles[0], ins.reg, ins), ins.prec_dst
@@ -265,9 +312,17 @@ class Simulator:
             self._compute(ins, c)
             res.energy.rf(len(tiles))
             if self.functional:
-                for t, cr in self._crams(tiles):
-                    cr.mac_const(ins.dst, ins.src1, self._rf_value(t, ins.reg, ins),
-                                 ins.prec1, ins.prec_dst)
+                if self.bank is not None:
+                    sl, owners = self._slots(tiles)
+                    consts = np.asarray(
+                        [self._rf_value(t, ins.reg, ins) for t in owners], np.int64
+                    )
+                    self.bank.mac_const(sl, ins.dst, ins.src1, consts,
+                                        ins.prec1, ins.prec_dst)
+                else:
+                    for t, cr in self._crams(tiles):
+                        cr.mac_const(ins.dst, ins.src1, self._rf_value(t, ins.reg, ins),
+                                     ins.prec1, ins.prec_dst)
         elif isinstance(ins, isa.MulConst):
             z_cycles = timing.cycles_mul_const(
                 ins.prec1, self._rf_value(tiles[0], ins.reg, ins)
@@ -275,46 +330,84 @@ class Simulator:
             self._compute(ins, z_cycles)
             res.energy.rf(len(tiles))
             if self.functional:
-                for t, cr in self._crams(tiles):
-                    cr.mul_const(ins.dst, ins.src1, self._rf_value(t, ins.reg, ins),
-                                 ins.prec1, ins.prec_dst)
+                if self.bank is not None:
+                    sl, owners = self._slots(tiles)
+                    consts = np.asarray(
+                        [self._rf_value(t, ins.reg, ins) for t in owners], np.int64
+                    )
+                    self.bank.mul_const(sl, ins.dst, ins.src1, consts,
+                                        ins.prec1, ins.prec_dst)
+                else:
+                    for t, cr in self._crams(tiles):
+                        cr.mul_const(ins.dst, ins.src1, self._rf_value(t, ins.reg, ins),
+                                     ins.prec1, ins.prec_dst)
         elif isinstance(ins, isa.Mac):
             c = timing.cycles_mac(ins.prec1, ins.prec2, ins.prec_dst)
             self._compute(ins, c)
             if self.functional:
-                for _, cr in self._crams(tiles):
-                    cr.mac(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
+                if self.bank is not None:
+                    sl, _ = self._slots(tiles)
+                    self.bank.mac(sl, ins.dst, ins.src1, ins.src2,
+                                  ins.prec1, ins.prec2, ins.prec_dst)
+                else:
+                    for _, cr in self._crams(tiles):
+                        cr.mac(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
         elif isinstance(ins, isa.Mul):
             c = timing.cycles_mul(ins.prec1, ins.prec2)
             self._compute(ins, c)
             if self.functional:
-                for _, cr in self._crams(tiles):
-                    cr.mul(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
+                if self.bank is not None:
+                    sl, _ = self._slots(tiles)
+                    self.bank.mul(sl, ins.dst, ins.src1, ins.src2,
+                                  ins.prec1, ins.prec2, ins.prec_dst)
+                else:
+                    for _, cr in self._crams(tiles):
+                        cr.mul(ins.dst, ins.src1, ins.src2, ins.prec1, ins.prec2, ins.prec_dst)
         elif isinstance(ins, isa.Logical):
             self._compute(ins, timing.cycles_logical(ins.prec1, ins.prec2))
             if self.functional:
-                for _, cr in self._crams(tiles):
-                    cr.logical(ins.dst, ins.src1, ins.src2, ins.prec1, ins.op)
+                if self.bank is not None:
+                    sl, _ = self._slots(tiles)
+                    self.bank.logical(sl, ins.dst, ins.src1, ins.src2, ins.prec1, ins.op)
+                else:
+                    for _, cr in self._crams(tiles):
+                        cr.logical(ins.dst, ins.src1, ins.src2, ins.prec1, ins.op)
         elif isinstance(ins, isa.Copy):
             self._compute(ins, timing.cycles_copy(ins.prec1))
             if self.functional:
-                for _, cr in self._crams(tiles):
-                    cr.copy(ins.dst, ins.src1, ins.prec1, pred=ins.pred.value)
+                if self.bank is not None:
+                    sl, _ = self._slots(tiles)
+                    self.bank.copy(sl, ins.dst, ins.src1, ins.prec1, pred=ins.pred.value)
+                else:
+                    for _, cr in self._crams(tiles):
+                        cr.copy(ins.dst, ins.src1, ins.prec1, pred=ins.pred.value)
         elif isinstance(ins, isa.CmpGE):
             self._compute(ins, ins.prec1 + 2)
             if self.functional:
-                for _, cr in self._crams(tiles):
-                    cr.cmp_ge(ins.dst, ins.src1, ins.src2, ins.prec1)
+                if self.bank is not None:
+                    sl, _ = self._slots(tiles)
+                    self.bank.cmp_ge(sl, ins.dst, ins.src1, ins.src2, ins.prec1)
+                else:
+                    for _, cr in self._crams(tiles):
+                        cr.cmp_ge(ins.dst, ins.src1, ins.src2, ins.prec1)
         elif isinstance(ins, isa.SetMask):
             self._compute(ins, 1)
             if self.functional:
-                for _, cr in self._crams(tiles):
-                    cr.set_mask(ins.src)
+                if self.bank is not None:
+                    sl, _ = self._slots(tiles)
+                    self.bank.set_mask(sl, ins.src)
+                else:
+                    for _, cr in self._crams(tiles):
+                        cr.set_mask(ins.src)
         elif isinstance(ins, isa.ReduceIntra):
             self._compute(ins, timing.cycles_reduce_intra(ins.prec, ins.size))
             if self.functional:
-                for _, cr in self._crams(tiles):
-                    cr.reduce_intra(ins.dst, ins.src, ins.prec, ins.size)
+                if self.bank is not None:
+                    sl, _ = self._slots(tiles)
+                    self.bank.reduce_intra(sl, ins.dst, ins.src, ins.prec, ins.size)
+                else:
+                    for _, cr in self._crams(tiles):
+                        cr.reduce_intra(ins.dst, ins.src, ins.prec, ins.size)
         elif isinstance(ins, isa.ReduceHTree):
             c = timing.cycles_htree_reduce(cfg, ins.prec)
             bits = cfg.crams_per_tile * cfg.cram_cols * ins.prec
@@ -322,17 +415,29 @@ class Simulator:
             self._schedule(ins, {"htree": c}, {"htree": c})
             if self.functional:
                 # elementwise per-bitline sum over the tile's populated CRAMs
-                # (H-tree summation order — integers, so order is immaterial),
-                # result lands in CRAM 0 as the paper's designated root
+                # in the H-tree's pairwise order (integers, so the order is
+                # immaterial — matching htree.reduce_functional keeps one
+                # summation story across all layers); the result lands in
+                # CRAM 0 as the paper's designated root.  Cross-tile ops stay
+                # per-tile: only the intra-tile leaf read is batched.
                 for t in tiles:
                     idxs = self._active_crams(t)
-                    total = sum(self.cram(t, c).read(ins.src, ins.prec) for c in idxs)
+                    if self.bank is not None:
+                        sl = np.asarray([self.cram(t, c)._slot for c in idxs], np.intp)
+                        leaves = self.bank.field(sl, ins.src, ins.prec)
+                    else:
+                        leaves = [self.cram(t, c).read(ins.src, ins.prec) for c in idxs]
+                    total = htree.reduce_functional(list(leaves))
                     self.cram(t, 0).write(ins.dst, total, ins.prec)
         elif isinstance(ins, isa.Shift):
             self._compute(ins, timing.cycles_cram_shift(cfg, ins.prec, abs(ins.amount)))
             if self.functional:
-                for _, cr in self._crams(tiles):
-                    cr.shift_lanes(ins.dst, ins.src, ins.prec, ins.amount)
+                if self.bank is not None:
+                    sl, _ = self._slots(tiles)
+                    self.bank.shift_lanes(sl, ins.dst, ins.src, ins.prec, ins.amount)
+                else:
+                    for _, cr in self._crams(tiles):
+                        cr.shift_lanes(ins.dst, ins.src, ins.prec, ins.amount)
         elif isinstance(ins, isa.RfLoad):
             res.energy.rf(len(tiles))
             self._schedule(ins, {"compute": 1.0}, {"compute": 1.0})

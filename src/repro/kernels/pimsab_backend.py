@@ -105,6 +105,7 @@ __all__ = [
     "functional_config",
     "profile_timelines",
     "FUNCTIONAL_CFG",
+    "FUNCTIONAL_CFG_LARGE",
     "execute_workload",
     "run_functional_stream",
     "timing_report",
@@ -120,6 +121,11 @@ __all__ = [
 # tractable; the timing/energy report compiles the same workload at full
 # chip scale (PIMSAB, 120 tiles) where only the analytic model runs.
 FUNCTIONAL_CFG = PimsabConfig(mesh_cols=2, mesh_rows=2, crams_per_tile=1)
+# Paper-scale functional machine (16 tiles × 4 CRAMs = 16384 lanes) for the
+# slow-tier bit-exact runs (RESNET18, 256×1024×1024 matmul): the tile-batched
+# simulator makes per-instruction cost independent of the tile count, so a
+# bigger mesh *reduces* wall time by cutting serial steps.
+FUNCTIONAL_CFG_LARGE = PimsabConfig(mesh_cols=4, mesh_rows=4, crams_per_tile=4)
 TIMING_CFG = PIMSAB
 
 _tls = threading.local()
@@ -343,15 +349,16 @@ class _DataPlane:
         out_idx, valid = self._out_positions(tile, step, g)
         vals = self._data_vals(np.where(valid, out_idx, 0))
         ref = self.w.ins[0] if ins.tag == "in_a" else self.w.ins[1]
-        rows = []
-        for j in range(ins.fields):
-            k_idx = r * self.k_lane + kc * self.m.k_chunk + j
-            kvalid = valid & (k_idx < self.k) if self.w.reduce_loops else valid
-            v = dict(vals)
-            if self.w.reduce_loops:
-                self._reduce_vals(np.where(kvalid, k_idx, 0), v)
-            rows.append(self._gather(ref, v, kvalid))
-        return np.stack(rows), ins.prec
+        # all fields of the slab gather in one shot: reduce-loop index arrays
+        # are (fields, lanes), data-loop ones stay (lanes,) and broadcast
+        j = np.arange(ins.fields)[:, None]
+        if self.w.reduce_loops:
+            k_idx = r[None, :] * self.k_lane + kc * self.m.k_chunk + j
+            kvalid = valid[None, :] & (k_idx < self.k)
+            self._reduce_vals(np.where(kvalid, k_idx, 0), vals)
+        else:
+            kvalid = np.broadcast_to(valid, (ins.fields, len(valid)))
+        return self._gather(ref, vals, kvalid), ins.prec
 
     # -- stores --------------------------------------------------------------
 
@@ -378,9 +385,14 @@ class _DataPlane:
 
 
 def _write_lanes(sim: Simulator, tile: int, addr: int, vals: np.ndarray, prec: int) -> None:
+    """Write a slab (``(fields, lanes)`` or ``(lanes,)``) into a tile, field
+    ``j`` at ``addr + j*prec``, chunking lanes across the tile's CRAMs.  One
+    ``write_block`` per CRAM — the whole slab crosses the transpose unit in
+    a single strided scatter."""
+    v = np.atleast_2d(np.asarray(vals))
     cols = sim.cfg.cram_cols
-    for c in range((len(vals) + cols - 1) // cols):
-        sim.cram(tile, c).write(addr, vals[c * cols:(c + 1) * cols], prec)
+    for c in range((v.shape[1] + cols - 1) // cols):
+        sim.cram(tile, c).write_block(addr, v[:, c * cols:(c + 1) * cols], prec)
 
 
 def _read_lanes(sim: Simulator, tile: int, addr: int, prec: int, lanes: int) -> np.ndarray:
@@ -422,8 +434,7 @@ def run_functional_stream(
         if isinstance(ins, isa.DramLoad) and ins.tag:
             for t in (ins.tiles or range(m.tiles_used)):
                 slab, prec = plane.load(ins, t)
-                for j in range(slab.shape[0]):
-                    _write_lanes(sim, t, ins.cram_addr + j * prec, slab[j], prec)
+                _write_lanes(sim, t, ins.cram_addr, slab, prec)
         sim.step(ins)
         if isinstance(ins, isa.DramStore) and ins.tag == "out":
             for t in (ins.tiles or range(m.tiles_used)):
@@ -1079,7 +1090,13 @@ def _pl_ewise_add(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLow
     is_int = ins[0].is_int and ins[1].is_int
     if is_int:
         pa, pb = _int_in_prec(ins[0]), _int_in_prec(ins[1])
-        out_prec = max(pa, pb) + 1
+        # Cap chain precision at int32: with 32-bit operands the CRAM add at
+        # prec 32 drops the carry-out, i.e. wraps mod 2^32 — exactly the
+        # oracle's int32 semantics.  An uncapped 33-bit sum holds the *true*
+        # value, which a CRAM-resident consumer would then read (the DRAM
+        # round-trip wraps in finalize, a resident edge does not), making
+        # graph mode diverge from eager on overflow.
+        out_prec = min(max(pa, pb) + 1, 32)
         chained = {
             buf: pos for buf, pos in (("in_a", 0), ("in_b", 1))
             if ins[pos].meta is not None
@@ -1691,8 +1708,7 @@ def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> Lis
             stripped = dataclasses.replace(ins, tag=stream)
             for t in (ins.tiles or range(m.tiles_used)):
                 slab, prec = plane.load(stripped, t)
-                for j in range(slab.shape[0]):
-                    _write_lanes(sim, t, ins.cram_addr + j * prec, slab[j], prec)
+                _write_lanes(sim, t, ins.cram_addr, slab, prec)
         sim.step(ins)
         if isinstance(ins, isa.DramStore) and ins.tag and ins.tag.endswith(":out"):
             plane, stream, i = plane_for(ins.tag)

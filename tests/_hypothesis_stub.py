@@ -23,10 +23,26 @@ class _IntStrategy:
         return int(rng.integers(self.lo, self.hi + 1))
 
 
+@dataclass(frozen=True)
+class _SampledStrategy:
+    choices: Tuple[Any, ...]
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self.choices[int(rng.integers(0, len(self.choices)))]
+
+
 class strategies:  # noqa: N801 — mimics the module name
     @staticmethod
     def integers(min_value: int, max_value: int) -> _IntStrategy:
         return _IntStrategy(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements) -> _SampledStrategy:
+        return _SampledStrategy(tuple(elements))
+
+    @staticmethod
+    def booleans() -> _SampledStrategy:
+        return _SampledStrategy((False, True))
 
 
 st = strategies

@@ -128,3 +128,63 @@ def test_dram_emission_matches_analytic_model_with_tags():
         for i in cp.program:
             if isinstance(i, (isa.DramLoad, isa.DramStore)):
                 assert i.tag, f"untagged DRAM instruction: {i}"
+
+
+def test_batched_bank_matches_exact_bits_on_every_small_workload():
+    """Whole-machine differential across the compiled workload zoo: the
+    tile-batched CramBank path and the per-bit ``exact_bits`` reference must
+    agree on *every* SimResult field (charged cycles, energy ledger, instr
+    count, makespan, per-resource busy, critical path) and on the complete
+    functional state — every bit plane, carry latch, mask latch and RF
+    register of every CRAM the program touched."""
+    for mk in SMALL_WORKLOADS:
+        cp = compile_workload(mk(), SMALL_CFG)
+        prog = [i for i in cp.program if not isinstance(i, (isa.DramLoad, isa.DramStore))]
+        sims = {}
+        for exact in (False, True):
+            sim = Simulator(SMALL_CFG, functional=True, exact_bits=exact)
+            rng = np.random.default_rng(7)
+            for t in range(cp.mapping.tiles_used):
+                for c in range(SMALL_CFG.crams_per_tile):
+                    sim.cram(t, c).write(0, rng.integers(-8, 8, SMALL_CFG.cram_cols), 8)
+            sim.run(prog)
+            sims[exact] = sim
+        fast, ref = sims[False], sims[True]
+        assert fast.res.instrs == ref.res.instrs
+        assert fast.res.cycles == ref.res.cycles
+        assert fast.res.energy.pj == ref.res.energy.pj
+        assert fast.res.makespan == ref.res.makespan
+        assert fast.res.busy == ref.res.busy
+        assert fast.res.critical_path == ref.res.critical_path
+        assert fast.rf == ref.rf
+        assert set(fast.crams) == set(ref.crams)
+        for key, cram in fast.crams.items():
+            np.testing.assert_array_equal(cram.bits, ref.crams[key].bits)
+            np.testing.assert_array_equal(cram.carry, ref.crams[key].carry)
+            np.testing.assert_array_equal(cram.mask, ref.crams[key].mask)
+
+
+def test_batched_functional_path_holds_the_tier1_wall_budget():
+    """Lock in the tile-batched speedup with a wall-clock budget: a pinned
+    ~25k-instruction GEMM stream over the 16-tile x 4-CRAM machine must
+    functionally execute well inside the budget.  The per-bit ``exact_bits``
+    reference takes roughly 10x the batched wall on this stream, so a
+    regression that silently drops the hot path back to per-cram per-bit
+    execution trips this assertion even on a slow CI machine, while the
+    batched path keeps ~5x headroom."""
+    import time
+
+    cfg = PimsabConfig(mesh_cols=4, mesh_rows=4, crams_per_tile=4)
+    cp = compile_workload(
+        workloads.gemm(m=16384, n=32, k=512, prec=8, acc=32), cfg
+    )
+    assert len(cp.program) > 20_000  # the budget only means something at scale
+    sim = Simulator(cfg, functional=True)
+    start = time.perf_counter()
+    sim.run(cp.program)
+    wall = time.perf_counter() - start
+    assert sim.res.instrs == len(cp.program)
+    assert wall < 20.0, (
+        f"batched functional simulation took {wall:.1f}s for {len(cp.program)} "
+        "instructions — the tile-batched hot path has regressed"
+    )
