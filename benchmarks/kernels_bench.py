@@ -191,6 +191,56 @@ def _cases() -> Dict[str, Dict[str, Callable]]:
                 _img((2, 8, 16, 16), seed=22),
             ),
         },
+        # serving kernels — quantized single-head attention decode (see
+        # docs/serving.md for the precision envelopes the shapes respect)
+        "attention_qk": {
+            "bench": lambda: _bench_call(
+                api.attention_qk, _img((64, 128), -7, 8, seed=40),
+                _img((512, 128), -15, 16, seed=41),
+            ),
+            "validate": lambda: _validate_binary(
+                api.attention_qk, ref.attention_qk_ref,
+                _img((4, 16), -7, 8, seed=42), _img((8, 16), -15, 16, seed=43),
+            ),
+        },
+        "softmax_fixedpoint": {
+            "bench": lambda: _bench_call(
+                lambda x: api.softmax_fixedpoint(x, in_frac=7),
+                _img((256, 512), -400, 400, seed=44),
+            ),
+            "validate": lambda: _validate_unary(
+                lambda x: api.softmax_fixedpoint(x, in_frac=7),
+                lambda x: ref.softmax_fixedpoint_ref(x, in_frac=7),
+                _img((8, 16), -400, 400, seed=45),
+            ),
+        },
+        "attention_pv": {
+            "bench": lambda: _bench_call(
+                api.attention_pv, _img((64, 512), 0, 65, seed=46),
+                _img((512, 128), seed=47),
+            ),
+            "validate": lambda: _validate_binary(
+                api.attention_pv, ref.attention_pv_ref,
+                _img((4, 8), 0, 65, seed=48), _img((8, 16), seed=49),
+            ),
+        },
+        "decode_gemv": {
+            "bench": lambda: _bench_call(
+                api.decode_gemv, _img((512, 512), -50, 50, seed=50),
+                _img((512,), -50, 50, seed=51),
+            ),
+            "validate": lambda: _validate_binary(
+                api.decode_gemv, ref.decode_gemv_ref,
+                _img((16, 32), -50, 50, seed=52), _img((32,), -50, 50, seed=53),
+            ),
+        },
+        "kv_append": {
+            "bench": lambda: _bench_call(
+                api.kv_append, _img((512, 128), seed=54), _img((128,), seed=55),
+                jnp.zeros(512, jnp.int8).at[17].set(1),
+            ),
+            "validate": lambda: _validate_kv_append(),
+        },
     }
 
 
@@ -269,6 +319,46 @@ def _pimsab_cases() -> Dict[str, Callable]:
             got = api.global_avgpool(x)
         return bool((np.asarray(want) == np.asarray(got)).all())
 
+    def _qk():
+        q = _img((2, 8), -7, 8, seed=40)
+        k = _img((4, 8), -15, 16, seed=41)
+        want = ref.attention_qk_ref(q, k)
+        with api.use_backend("pimsab"):
+            got = api.attention_qk(q, k)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
+    def _softmax():
+        x = _img((4, 8), -400, 400, seed=44)
+        want = ref.softmax_fixedpoint_ref(x, in_frac=7)
+        with api.use_backend("pimsab"):
+            got = api.softmax_fixedpoint(x, in_frac=7)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
+    def _pv():
+        p = _img((2, 8), 0, 65, seed=46)
+        v = _img((8, 4), seed=47)
+        want = ref.attention_pv_ref(p, v)
+        with api.use_backend("pimsab"):
+            got = api.attention_pv(p, v)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
+    def _gemv():
+        w = _img((8, 16), -50, 50, seed=50)
+        x = _img((16,), -50, 50, seed=51)
+        want = ref.decode_gemv_ref(w, x)
+        with api.use_backend("pimsab"):
+            got = api.decode_gemv(w, x)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
+    def _kvapp():
+        cache = _img((8, 4), seed=54)
+        new = _img((4,), seed=55)
+        onehot = jnp.zeros(8, jnp.int8).at[5].set(1)
+        want = ref.kv_append_ref(cache, new, onehot)
+        with api.use_backend("pimsab"):
+            got = api.kv_append(cache, new, onehot)
+        return bool((np.asarray(want) == np.asarray(got)).all())
+
     return {
         "bitslice_matmul": _matmul,
         "htree_reduce": _htree,
@@ -280,6 +370,11 @@ def _pimsab_cases() -> Dict[str, Callable]:
         "maxpool2d": _maxpool,
         "avgpool2d": _avgpool,
         "global_avgpool": _gap,
+        "attention_qk": _qk,
+        "softmax_fixedpoint": _softmax,
+        "attention_pv": _pv,
+        "decode_gemv": _gemv,
+        "kv_append": _kvapp,
     }
 
 
@@ -309,6 +404,15 @@ def _validate_unary(fn, oracle, x) -> bool:
     with api.use_backend("interpret"):
         got = fn(x)
     return bool(jnp.allclose(oracle(x), got))
+
+
+def _validate_kv_append() -> bool:
+    cache = _img((8, 16), seed=56)
+    new = _img((16,), seed=57)
+    onehot = jnp.zeros(8, jnp.int8).at[3].set(1)
+    with api.use_backend("interpret"):
+        got = api.kv_append(cache, new, onehot)
+    return bool((np.asarray(ref.kv_append_ref(cache, new, onehot)) == np.asarray(got)).all())
 
 
 def _validate_rglru() -> bool:
@@ -624,6 +728,17 @@ def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> L
                 p["total_cycles"],
                 old_layers.get(p["node"], {}).get("total_cycles"),
             )
+    # serving gates: KV residency + program reuse sentinels, pinned token
+    # counts, modeled cycles per batch point (benchmarks/serve_bench.py)
+    try:
+        from benchmarks import serve_bench
+    except ImportError:
+        import serve_bench
+    serve = result.get("serve")
+    if serve is None:
+        failures.append("serve: serving section missing from run")
+    else:
+        failures.extend(serve_bench.check_serve(serve, baseline, tol=tol))
     return failures
 
 
@@ -632,9 +747,10 @@ def main(check: bool = False, profile: bool = False) -> Dict:
     # bench rows come from (no double compile) — the large shapes plus the
     # fused program chain
     try:
-        from benchmarks import e2e_resnet
+        from benchmarks import e2e_resnet, serve_bench
     except ImportError:  # run as `python benchmarks/kernels_bench.py`
         import e2e_resnet
+        import serve_bench
 
     timelines: Optional[Dict] = {} if profile else None
     profile_ctx = api.profile_timelines() if profile else contextlib.nullcontext()
@@ -645,6 +761,7 @@ def main(check: bool = False, profile: bool = False) -> Dict:
             "program": program_mode(timelines),
             "e2e": e2e_resnet.collect(),
             "simwall": simwall(),
+            "serve": serve_bench.collect(),
         }
     if check:
         if not OUT_PATH.exists():
@@ -670,6 +787,8 @@ def main(check: bool = False, profile: bool = False) -> Dict:
         print(f"e2e:{net}:", {k: v for k, v in sec.items()
                               if k not in ("per_layer", "kernels")})
     print("simwall:", result["simwall"])
+    for row in result["serve"]["batches"]:
+        print("serve:", row)
     print(f"wrote {OUT_PATH}")
     return result
 

@@ -1,0 +1,160 @@
+"""Serving throughput on the pimsab backend (the ``"serve"`` bench section).
+
+Drives the continuous-batching scheduler
+(:class:`repro.serve.scheduler.ContinuousBatcher`) at batch sizes 1/4/16
+over the toy attention decode step and aggregates the per-step ``SimReport``
+costs into modeled **tokens/sec** and **joules/token** — the serving-side
+headline numbers next to the kernel microbenches.
+
+Every batch point also records two correctness sentinels the ``--check``
+gate enforces:
+
+* ``kv_resident`` — the last decode step's report lists ``state:`` resident
+  edges and zero DRAM traffic on the ``kv_append`` cache operand (the cache
+  stayed CRAM-resident; a residency regression flips this to False), and
+* ``compile_cache`` — each bucket compiled its decode program once; every
+  later request hit the cache (``misses_added`` is the bucket count).
+
+Tokens generated are deterministic (hash-seeded toy embeddings), so the
+``tokens`` count is pinned exactly; ``total_cycles`` is gated at the same
+±5% the kernel rows use.  Wall-clock is not recorded — the scheduler's cost
+is modeled time only.  Schema: ``docs/benchmarks.md``; run standalone
+(``python benchmarks/serve_bench.py [--check]``) to refresh just this
+section of ``BENCH_kernels.json``, or let ``benchmarks/kernels_bench.py``
+assemble the whole file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.kernels import api
+from repro.serve.scheduler import ContinuousBatcher
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_kernels.json"
+
+BATCH_SIZES = (1, 4, 16)
+# prompt(2) + max_new(2) fits the capacity-4 bucket — the largest bucket the
+# mapping planner keeps CRAM-resident at the default envelope (the softmax
+# row scratch plus the reserved state rows bound T; see docs/serving.md)
+MAX_NEW_TOKENS = 2
+PROMPTS = [[1, 2], [2, 3], [3, 1], [1, 3]]  # cycled per request
+
+
+def _run_batch(batch: int) -> Dict:
+    before = api.compile_cache_info()
+    sched = ContinuousBatcher(max_active=batch, buckets=(4,))
+    for i in range(batch):
+        sched.submit(PROMPTS[i % len(PROMPTS)], max_new_tokens=MAX_NEW_TOKENS)
+    sched.run()
+    after = api.compile_cache_info()
+    rep = api.last_sim_report()
+    resident = any(e.startswith("state:") for e in rep.resident_edges)
+    append_traffic = sum(
+        t.get("a", 0.0) + t.get("out", 0.0)
+        for node, t in rep.dram_traffic.items()
+        if "kv_append" in node
+    )
+    s = sched.summary()
+    return {
+        "batch": batch,
+        "requests": batch,
+        "max_new_tokens": MAX_NEW_TOKENS,
+        "tokens": int(s["tokens"]),
+        "steps": int(s["steps"]),
+        "modeled_seconds": s["modeled_seconds"],
+        "total_cycles": int(s["total_cycles"]),
+        "energy_j": s["energy_j"],
+        "tokens_per_sec": round(s["tokens_per_sec"], 1),
+        "joules_per_token": s["joules_per_token"],
+        "kv_resident": bool(resident and append_traffic == 0.0),
+        "compile_cache": {
+            "hits_added": after.hits - before.hits,
+            "misses_added": after.misses - before.misses,
+        },
+    }
+
+
+def collect() -> Dict:
+    """The full ``"serve"`` section: one row per batch size."""
+    sched_cfg = ContinuousBatcher().cfg
+    return {
+        "config": {
+            "head_dim": sched_cfg.head_dim,
+            "value_dim": sched_cfg.value_dim,
+            "kv_bits": sched_cfg.kv_bits,
+            "score_bits": sched_cfg.score_bits,
+            "score_frac": sched_cfg.score_frac,
+        },
+        "batches": [_run_batch(b) for b in BATCH_SIZES],
+    }
+
+
+def check_serve(result: Dict, baseline: Dict, tol: float = 0.05) -> List[str]:
+    """Correctness sentinels must hold; ``tokens`` is pinned exactly;
+    ``total_cycles`` gated at ``tol`` like the kernel rows."""
+    failures: List[str] = []
+    base = baseline.get("serve")
+    if base is None:
+        return failures  # first run establishes the baseline
+    base_rows = {r["batch"]: r for r in base.get("batches", [])}
+    for row in result.get("batches", []):
+        tag = f"serve:batch{row['batch']}"
+        if not row["kv_resident"]:
+            failures.append(f"{tag}: KV cache no longer CRAM-resident")
+        if row["compile_cache"]["misses_added"] > 1:
+            failures.append(
+                f"{tag}: bucket compiled {row['compile_cache']['misses_added']}"
+                " times — per-bucket program reuse regressed"
+            )
+        old = base_rows.get(row["batch"])
+        if old is None:
+            continue
+        if row["tokens"] != old["tokens"]:
+            failures.append(
+                f"{tag}: tokens {old['tokens']} -> {row['tokens']} "
+                "(deterministic decode changed)"
+            )
+        if old.get("total_cycles"):
+            rel = (row["total_cycles"] - old["total_cycles"]) / old["total_cycles"]
+            if rel > tol:
+                failures.append(
+                    f"{tag}: modeled cycles {old['total_cycles']} -> "
+                    f"{row['total_cycles']} (+{rel:.1%} > {tol:.0%})"
+                )
+    return failures
+
+
+def main(check: bool = False) -> Dict:
+    section = collect()
+    doc: Dict = {}
+    if OUT_PATH.exists():
+        doc = json.loads(OUT_PATH.read_text())
+    if check:
+        failures = check_serve(section, doc)
+        if failures:
+            print("serve_bench --check: FAIL")
+            for f in failures:
+                print(" -", f)
+            raise SystemExit(1)
+        print("serve_bench --check: OK")
+    doc["serve"] = section
+    OUT_PATH.write_text(json.dumps(doc, indent=2) + "\n")
+    for row in section["batches"]:
+        print(row)
+    print(f"wrote {OUT_PATH} (serve section)")
+    return section
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--check", action="store_true",
+        help="diff the serve section against the committed BENCH_kernels.json "
+        "before overwriting it (correctness sentinels + modeled cycles)",
+    )
+    args = ap.parse_args()
+    main(check=args.check)

@@ -52,11 +52,14 @@ PUBLIC_MODULES = [
     "repro.models.transformer",
     "repro.models.resnet",
     "repro.serve.engine",
+    "repro.serve.pimsab_step",
+    "repro.serve.scheduler",
     "repro.launch.specs",
     "repro.train.steps",
     "benchmarks.kernels_bench",
     "benchmarks.e2e_resnet",
     "benchmarks.pimsab_run",
+    "benchmarks.serve_bench",
 ]
 
 API_SYMBOLS = [
@@ -78,6 +81,8 @@ API_SYMBOLS = [
     "global_avgpool",
     "int_matmul",
     "last_sim_report",
+    "sim_report_log",
+    "clear_sim_report_log",
     "profile_timelines",
     "zero_slice_pairs",
     # Program API
@@ -90,6 +95,13 @@ API_SYMBOLS = [
     "compile_cache_info",
     "clear_compile_cache",
     "PimsabTracerError",
+    "ResidentState",
+    # serving kernels
+    "attention_qk",
+    "softmax_fixedpoint",
+    "attention_pv",
+    "decode_gemv",
+    "kv_append",
     # static verifier surface
     "last_verify_report",
     "VerifyReport",
@@ -114,7 +126,9 @@ def check_imports() -> list[str]:
         kernels = api.registered_kernels()
         for required in ("bitslice_matmul", "htree_reduce", "rglru_scan",
                          "ewise_add", "relu", "conv2d", "maxpool2d",
-                         "avgpool2d", "global_avgpool", "int_matmul"):
+                         "avgpool2d", "global_avgpool", "int_matmul",
+                         "attention_qk", "softmax_fixedpoint", "attention_pv",
+                         "decode_gemv", "kv_append"):
             if required not in kernels:
                 errors.append(f"kernel {required!r} not registered")
         if "pimsab" not in api.BACKENDS:

@@ -35,8 +35,11 @@ def adaptive_precision(pa: int, pb: int, k: int = 1, op: str = "mac") -> int:
         base = max(pa, pb) + 1
     elif op in ("map_mul", "mul", "mac", "stencil_mac"):
         base = pa + pb
-    elif op in ("relu", "maxpool", "copy"):
+    elif op in ("relu", "maxpool", "copy", "kv_append"):
         base = max(pa, pb)
+    elif op == "softmax":
+        # probabilities in SOFTMAX_F fraction bits, values in [0, 2^F]
+        base = SOFTMAX_F + 2
     elif op == "scan_mac":
         # the recurrence state keeps the wider operand's format: each step's
         # product is renormalized back (>> frac) before the add, so precision
@@ -52,6 +55,71 @@ def adaptive_precision(pa: int, pb: int, k: int = 1, op: str = "mac") -> int:
 def mul_live_window(p_mul: int) -> int:
     """Half-width live window for mul-feeding-add (Fig. 8a)."""
     return p_mul - p_mul // 2
+
+
+# fixed-point softmax formats (shared by codegen emission, the distribute
+# buffer model, and the JAX oracle — all three must agree bit-for-bit):
+# exponentials carry SOFTMAX_F fraction bits, the range reduction divides by
+# 2^SOFTMAX_K before the quadratic and squares K times after, and the
+# reciprocal of the row sum is computed by restoring division to SOFTMAX_FI
+# extra fraction bits.  Probabilities come out with SOFTMAX_F fraction bits
+# in SOFTMAX_F + 2 total bits.
+SOFTMAX_F = 6
+SOFTMAX_K = 3
+SOFTMAX_FI = 8
+
+
+def softmax_out_prec() -> int:
+    """Result precision of the fixed-point softmax (probs ∈ [0, 2^F])."""
+    return SOFTMAX_F + 2
+
+
+def softmax_scratch_layout(pin: int, in_frac: int, t_extent: int):
+    """Per-lane scratch fields of the softmax emission as ``name -> (offset,
+    prec)`` plus the total wordline count.
+
+    The division block (r/c/rn/qn) only runs after the exponential loop
+    retires, so it overlays the exponential scratch (t/tcl/tfl/mul/v1/w/onef)
+    — the layout here is what both codegen (field addresses) and distribute
+    (wordline budget) consume, keeping the two views of the same bytes in
+    lockstep.  The range reduction clamps in the *t* domain (t >= -2^(F+σ)
+    iff t>>σ >= -2^F, floor shift being monotone) so the shifted operand is
+    read straight out of ``tcl`` via an address-offset window — no extra
+    shifted field.
+    """
+    f, k, fi = SOFTMAX_F, SOFTMAX_K, SOFTMAX_FI
+    sigma = in_frac - f + k
+    if sigma < 0:
+        raise ValueError(f"softmax in_frac={in_frac} must be >= {f - k}")
+    if in_frac + k > pin:
+        raise ValueError(
+            f"softmax clamp floor -2^{f + sigma} does not fit {pin + 1} bits")
+    pt = pin + 1                 # x - m, and the clamp floor -2^(F+sigma)
+    pm_mul = f + fi + 2          # u*u <= 2^2F, w*w <= 2^2F, exp*inv <= 2^(F+FI)
+    pv = f + 3
+    ps = f + 1 + max(1, math.ceil(math.log2(max(2, t_extent)))) + 1
+    pq = fi + 2                  # reciprocal, <= 2^FI
+    pr = max(fi + f + 2, ps + fi)  # r and s<<b compare at one prec (CmpGE)
+    exp_block = [("t", pt), ("tcl", pt), ("tfl", pt), ("mul", pm_mul),
+                 ("v1", pv), ("w", pv), ("onef", f + 2)]
+    div_block = [("r", pr), ("c", pr), ("rn", pr), ("qn", pq)]
+    layout = {}
+    off = 0
+    # m/s/q/one survive across both phases, so they live outside the overlay
+    for name, p in [("m", pin), ("s", ps), ("q", pq), ("one", 2)]:
+        layout[name] = (off, p)
+        off += p
+    base = off
+    for name, p in exp_block:
+        layout[name] = (off, p)
+        off += p
+    exp_end = off
+    off = base
+    for name, p in div_block:
+        layout[name] = (off, p)
+        off += p
+    total = max(exp_end, off)
+    return layout, total
 
 
 def signed_bits(lo: int, hi: int) -> int:
@@ -182,6 +250,9 @@ def allocate(
 def allocate_graph(
     items: List[Tuple[str, List[BufferReq], Dict[str, str]]],
     capacity: int = 256,
+    *,
+    reserved: Optional[List[Tuple[int, int]]] = None,
+    pinned_fixed: Optional[Dict[str, Dict[str, List[Tuple[int, int]]]]] = None,
 ) -> Dict[str, Allocation]:
     """Live-range-aware allocation for an ordered graph program.
 
@@ -195,7 +266,15 @@ def allocate_graph(
     Returns per-op Allocations; an op whose own buffers don't fit around the
     live intermediates comes back ``feasible=False`` (the caller drops the
     residency pin and retries).
+
+    ``reserved`` carves fixed wordline ranges out of *every* op's free set —
+    the CRAM-resident persistent-state regions (``ResidentState``) that must
+    survive across whole program executions, not just across graph segments.
+    ``pinned_fixed`` maps ``op -> buffer -> ranges`` for buffers pinned to
+    those reserved regions verbatim (a state updater's in-place input/output).
     """
+    globally_reserved = list(reserved or [])
+    pinned_fixed = pinned_fixed or {}
     order = {name: i for i, (name, _, _) in enumerate(items)}
     # live interval of each pinned source buffer: (producer_idx, consumer_idx]
     live: Dict[Tuple[str, str], int] = {}  # (op, buf) -> last consumer idx
@@ -207,13 +286,15 @@ def allocate_graph(
 
     allocs: Dict[str, Allocation] = {}
     for idx, (name, reqs, pins) in enumerate(items):
-        reserved: List[Tuple[int, int]] = []
+        op_reserved: List[Tuple[int, int]] = list(globally_reserved)
         for (src_op, src_buf), last in live.items():
             if order[src_op] < idx <= last:
-                reserved.extend(allocs[src_op].ranges.get(src_buf, []))
+                op_reserved.extend(allocs[src_op].ranges.get(src_buf, []))
         pinned = {}
         for buf, src in pins.items():
             src_op, src_buf = src.split(":")
             pinned[buf] = allocs[src_op].ranges.get(src_buf, [])
-        allocs[name] = allocate(reqs, capacity, reserved=reserved, pinned=pinned)
+        for buf, ranges in pinned_fixed.get(name, {}).items():
+            pinned[buf] = [tuple(r) for r in ranges]
+        allocs[name] = allocate(reqs, capacity, reserved=op_reserved, pinned=pinned)
     return allocs

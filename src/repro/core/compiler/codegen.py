@@ -41,7 +41,13 @@ from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Tuple
 
 from repro.core import isa
-from repro.core.compiler.allocation import mul_live_window
+from repro.core.compiler.allocation import (
+    SOFTMAX_F,
+    SOFTMAX_FI,
+    SOFTMAX_K,
+    mul_live_window,
+    softmax_scratch_layout,
+)
 from repro.core.compiler.distribute import (
     GraphMapping,
     Mapping,
@@ -317,10 +323,18 @@ def compile_workload(
         n_chunks = max(1, k_lane // m.k_chunk)
         n_phases = m.serial_iters * n_chunks
         const_b = w.ins[1].is_const
+        # a tuple const_value is a whole constant-operand *row*: per reduction
+        # index j its own RF constant (the decode-GEMV mapping — the single
+        # token's activations ride the zero-bit-skipped MacConst path instead
+        # of a broadcast CRAM operand).  Requires reduce_split == 1: the RF is
+        # shared per tile, so lanes cannot hold different k-slices.
+        const_rows = const_b and isinstance(w.ins[1].const_value, tuple)
+        if const_rows and m.reduce_split != 1:
+            raise ValueError("constant-operand rows need reduce_split == 1")
         loads_a = "in_a" not in elide
         loads_b = (not const_b) and "in_b" not in elide
         stores = "out" not in elide
-        if const_b:
+        if const_b and not const_rows:
             emit(isa.RfLoad(reg=0, value=w.ins[1].const_value or 1), barrier=True)
         a_alt = _alt_addr(m, "in_a", a_addr)
         b_alt = _alt_addr(m, "in_b", b_addr)
@@ -378,6 +392,11 @@ def compile_workload(
                 lb = f"lb{ci}" if loads_b else None
                 for j in range(m.k_chunk):
                     if const_b:
+                        if const_rows:
+                            emit(isa.RfLoad(
+                                reg=0,
+                                value=int(w.ins[1].const_value[kc * m.k_chunk + j]),
+                            ), phase=f"cp{ci}", after=(la, lb))
                         emit(isa.MacConst(
                             dst=out_addr, prec_dst=m.out_prec,
                             src1=aa + j * pa, prec1=pa, reg=0,
@@ -527,6 +546,218 @@ def compile_workload(
                 ), phase=f"st{step}", after=(f"cp{step}",))
                 prev_st = f"st{step}"
 
+    elif w.op == "kv_append":
+        # append-one-row cache update: out = cache with the row selected by a
+        # one-hot vector replaced by `new`.  Lanes = cache rows, fields = the
+        # head dimension; the one-hot bit latches the PE mask and the new
+        # row's fields overwrite only the masked lane — the relu/maxpool
+        # predication idiom turned into a scatter.  When the cache is a
+        # CRAM-resident persistent state, in_a and out are pinned to the same
+        # wordlines (a_addr == out_addr): the update happens in place and the
+        # cache never round-trips DRAM — only the new row and the one-hot
+        # selector stream in.
+        pc_in = w.ins[2].prec
+        c_addr = _addr(m, "in_c")
+        c_total = m.dram_split.get("c", 0.0)
+        loads_a = "in_a" not in elide
+        stores = "out" not in elide
+        kk = max(1, k)
+        prev_cp: Optional[str] = None
+        prev_st: Optional[str] = None
+        for step in range(m.serial_iters):
+            war: Tuple[Optional[str], ...] = (prev_cp,) if prev_cp else ()
+            if loads_a:
+                emit(isa.DramLoad(
+                    dram_addr=0, cram_addr=a_addr,
+                    bits=int(a_total / m.serial_iters), prec=pa,
+                    tag=tp + "in_a", fields=kk,
+                ), phase=f"la{step}", after=war)
+            # the new row is shared by every lane: one DRAM load, broadcast
+            emit(isa.DramLoad(
+                dram_addr=0, cram_addr=b_addr,
+                bits=int(b_total / m.serial_iters), prec=pb,
+                shf=isa.ShufflePattern.STRIDE, bcast_tiles=m.tiles_used,
+                tag=tp + "in_b", fields=kk,
+            ), phase=f"lb{step}", after=war)
+            emit(isa.DramLoad(
+                dram_addr=0, cram_addr=c_addr,
+                bits=int(c_total / m.serial_iters), prec=pc_in,
+                tag=tp + "in_c",
+            ), phase=f"lc{step}", after=war)
+            la = f"la{step}" if loads_a else None
+            deps: Tuple[Optional[str], ...] = (la, f"lb{step}", f"lc{step}")
+            cp = f"cp{step}"
+            war_st: Tuple[Optional[str], ...] = (prev_st,) if prev_st else ()
+            if a_addr != out_addr:
+                for j in range(kk):
+                    emit(isa.Copy(dst=out_addr + j * m.out_prec, prec_dst=pa,
+                                  src1=a_addr + j * pa, prec1=pa),
+                         phase=cp, after=war_st + deps)
+            emit(isa.SetMask(src=c_addr), phase=cp, after=deps)
+            for j in range(kk):
+                emit(isa.Copy(dst=out_addr + j * m.out_prec, prec_dst=pb,
+                              src1=b_addr + j * pb, prec1=pb,
+                              pred=isa.Pred.MASK), phase=cp, after=deps)
+            prev_cp = cp
+            if stores:
+                for j in range(kk):
+                    emit(isa.DramStore(
+                        dram_addr=0, cram_addr=out_addr + j * m.out_prec,
+                        bits=int(out_total / (m.serial_iters * kk)),
+                        prec=m.out_prec, tag=tp + "out",
+                    ), phase=f"st{step}", after=(cp,))
+                prev_st = f"st{step}"
+
+    elif w.op == "softmax":
+        # fixed-point row softmax, §V-C bit-serial-aware end to end:
+        #   * exact row max by the CmpGE/SetMask/masked-Copy tournament
+        #   * range reduction t>>σ as a *shifted window read* (free >>, the
+        #     div_shift path), clamped in the t domain (floor shift is
+        #     monotone, so t >= -2^(F+σ) iff t>>σ >= -2^F)
+        #   * exp(u) ≈ (1 + u/2^K + u²/2^(2K+1))^(2^K): quadratic Taylor seed
+        #     + K squarings, each renormalized by a shifted window read — the
+        #     row max comes out as exactly 2^F, so the sum is never zero
+        #   * reciprocal of the row sum by restoring division (masked
+        #     conditional subtract — the same predication idiom), then one
+        #     multiply per element renormalized through the window path
+        f, fi = SOFTMAX_F, SOFTMAX_FI
+        in_frac = w.ins[0].frac
+        sigma = in_frac - f + SOFTMAX_K
+        layout, _ = softmax_scratch_layout(pa, in_frac, k)
+        sbase = _addr(m, "sm_scratch")
+        pred_addr = _addr(m, "pred")
+
+        def sf(name: str) -> Tuple[int, int]:
+            off, p = layout[name]
+            return sbase + off, p
+
+        m_a, pmx = sf("m")
+        s_a, ps = sf("s")
+        q_a, pq = sf("q")
+        one_a, _ = sf("one")
+        t_a, pt = sf("t")
+        tcl_a, _ = sf("tcl")
+        tfl_a, _ = sf("tfl")
+        mul_a, pm = sf("mul")
+        v1_a, pv = sf("v1")
+        w_a, _ = sf("w")
+        onef_a, ponef = sf("onef")
+        r_a, pr = sf("r")
+        c_a, _ = sf("c")
+        rn_a, _ = sf("rn")
+        qn_a, _ = sf("qn")
+        kk = max(1, k)
+        po = m.out_prec
+        loads_a = "in_a" not in elide
+        stores = "out" not in elide
+        prev_cp: Optional[str] = None
+        prev_st: Optional[str] = None
+        for step in range(m.serial_iters):
+            if loads_a:
+                emit(isa.DramLoad(
+                    dram_addr=0, cram_addr=a_addr,
+                    bits=int(a_total / m.serial_iters), prec=pa,
+                    tag=tp + "in_a", fields=kk,
+                ), phase=f"la{step}", after=(prev_cp,) if prev_cp else ())
+            la = f"la{step}" if loads_a else None
+            war: Tuple[Optional[str], ...] = (prev_st,) if prev_st else ()
+            cp = f"cp{step}"
+            dep = war + (la,)
+            # constants per lane: one = 1 (the always-true predicate dropped
+            # into a zeroed 2-bit field), then RF-multiplied into 2^F and the
+            # clamp floor -2^(F+σ)
+            emit(isa.Sub(dst=one_a, prec_dst=2, src1=a_addr, prec1=pa,
+                         src2=a_addr, prec2=pa), phase=cp, after=dep)
+            emit(isa.CmpGE(dst=one_a, src1=a_addr, prec1=pa,
+                           src2=a_addr, prec2=pa), phase=cp, after=dep)
+            emit(isa.RfLoad(reg=0, value=1 << f), phase=cp)
+            emit(isa.MulConst(dst=onef_a, prec_dst=ponef, src1=one_a, prec1=2,
+                              reg=0), phase=cp)
+            emit(isa.RfLoad(reg=1, value=-(1 << (f + sigma))), phase=cp)
+            emit(isa.MulConst(dst=tfl_a, prec_dst=pt, src1=one_a, prec1=2,
+                              reg=1), phase=cp)
+            # exact row max over the kk resident fields
+            emit(isa.Copy(dst=m_a, prec_dst=pmx, src1=a_addr, prec1=pa),
+                 phase=cp, after=dep)
+            for j in range(1, kk):
+                emit(isa.CmpGE(dst=pred_addr, src1=a_addr + j * pa, prec1=pa,
+                               src2=m_a, prec2=pa), phase=cp, after=dep)
+                emit(isa.SetMask(src=pred_addr), phase=cp)
+                emit(isa.Copy(dst=m_a, prec_dst=pmx, src1=a_addr + j * pa,
+                              prec1=pa, pred=isa.Pred.MASK), phase=cp)
+            emit(isa.Sub(dst=s_a, prec_dst=ps, src1=a_addr, prec1=pa,
+                         src2=a_addr, prec2=pa), phase=cp)
+            for j in range(kk):
+                emit(isa.Sub(dst=t_a, prec_dst=pt, src1=a_addr + j * pa,
+                             prec1=pa, src2=m_a, prec2=pmx), phase=cp, after=dep)
+                emit(isa.Copy(dst=tcl_a, prec_dst=pt, src1=tfl_a, prec1=pt),
+                     phase=cp)
+                emit(isa.CmpGE(dst=pred_addr, src1=t_a, prec1=pt,
+                               src2=tcl_a, prec2=pt), phase=cp)
+                emit(isa.SetMask(src=pred_addr), phase=cp)
+                emit(isa.Copy(dst=tcl_a, prec_dst=pt, src1=t_a, prec1=pt,
+                              pred=isa.Pred.MASK), phase=cp)
+                # u = tcl >> σ read straight out of the shifted window
+                emit(isa.Mul(dst=mul_a, prec_dst=pm,
+                             src1=tcl_a + sigma, prec1=pt - sigma,
+                             src2=tcl_a + sigma, prec2=pt - sigma), phase=cp)
+                emit(isa.Add(dst=v1_a, prec_dst=pv,
+                             src1=tcl_a + sigma, prec1=pt - sigma,
+                             src2=onef_a, prec2=ponef), phase=cp)
+                emit(isa.Add(dst=w_a, prec_dst=pv, src1=v1_a, prec1=pv,
+                             src2=mul_a + f + 1, prec2=pm - (f + 1)), phase=cp)
+                for _ in range(SOFTMAX_K):
+                    emit(isa.Mul(dst=mul_a, prec_dst=pm, src1=w_a, prec1=pv,
+                                 src2=w_a, prec2=pv), phase=cp)
+                    emit(isa.Copy(dst=w_a, prec_dst=pv, src1=mul_a + f,
+                                  prec1=pv), phase=cp)
+                # exp_j parks in its out field; accumulate the row sum
+                emit(isa.Copy(dst=out_addr + j * po, prec_dst=po, src1=w_a,
+                              prec1=po), phase=cp)
+                emit(isa.Add(dst=s_a, prec_dst=ps, src1=s_a, prec1=ps,
+                             src2=out_addr + j * po, prec2=po), phase=cp)
+            # inv = floor(2^(FI+F) / s) by restoring division; s >= 2^F
+            # always (the max element's exponential is exactly 2^F)
+            emit(isa.RfLoad(reg=0, value=1 << (fi + f)), phase=cp)
+            emit(isa.MulConst(dst=r_a, prec_dst=pr, src1=one_a, prec1=2,
+                              reg=0), phase=cp)
+            emit(isa.Sub(dst=q_a, prec_dst=pq, src1=a_addr, prec1=pa,
+                         src2=a_addr, prec2=pa), phase=cp)
+            for b in range(fi, -1, -1):
+                emit(isa.Sub(dst=c_a, prec_dst=pr, src1=a_addr, prec1=pa,
+                             src2=a_addr, prec2=pa), phase=cp)
+                emit(isa.Copy(dst=c_a + b, prec_dst=ps, src1=s_a, prec1=ps),
+                     phase=cp)
+                emit(isa.CmpGE(dst=pred_addr, src1=r_a, prec1=pr,
+                               src2=c_a, prec2=pr), phase=cp)
+                emit(isa.SetMask(src=pred_addr), phase=cp)
+                emit(isa.Sub(dst=rn_a, prec_dst=pr, src1=r_a, prec1=pr,
+                             src2=c_a, prec2=pr), phase=cp)
+                emit(isa.Copy(dst=r_a, prec_dst=pr, src1=rn_a, prec1=pr,
+                              pred=isa.Pred.MASK), phase=cp)
+                emit(isa.Copy(dst=qn_a, prec_dst=pq, src1=q_a, prec1=pq),
+                     phase=cp)
+                emit(isa.RfLoad(reg=1, value=1 << b), phase=cp)
+                emit(isa.MacConst(dst=qn_a, prec_dst=pq, src1=one_a, prec1=2,
+                                  reg=1), phase=cp)
+                emit(isa.Copy(dst=q_a, prec_dst=pq, src1=qn_a, prec1=pq,
+                              pred=isa.Pred.MASK), phase=cp)
+            # normalize in place: p_j = exp_j · inv >> FI (window read again)
+            for j in range(kk):
+                emit(isa.Mul(dst=mul_a, prec_dst=pm, src1=out_addr + j * po,
+                             prec1=po, src2=q_a, prec2=pq), phase=cp)
+                emit(isa.Copy(dst=out_addr + j * po, prec_dst=po,
+                              src1=mul_a + fi, prec1=po), phase=cp)
+            prev_cp = cp
+            if stores:
+                for j in range(kk):
+                    emit(isa.DramStore(
+                        dram_addr=0, cram_addr=out_addr + j * po,
+                        bits=int(out_total / (m.serial_iters * kk)),
+                        prec=po, tag=tp + "out",
+                    ), phase=f"st{step}", after=(cp,))
+                prev_st = f"st{step}"
+
     elif w.op == "stencil_mac":
         taps = max(r.stencil for r in w.ins)
         # filter coefficients live in the RF (constants): mul_const path
@@ -577,7 +808,11 @@ def _data_movement_cycles(w: Workload, m: Mapping, cfg: PimsabConfig,
     return res.cycles["dram"] + res.cycles["noc"]
 
 
-def compile_graph(g: WorkloadGraph, cfg: PimsabConfig) -> CompiledGraph:
+def compile_graph(
+    g: WorkloadGraph, cfg: PimsabConfig,
+    *,
+    state_pins=None,
+) -> CompiledGraph:
     """Lower a WorkloadGraph to ONE fused per-tile stream (compile-once).
 
     Distribution, residency planning and live-range allocation run jointly
@@ -592,6 +827,7 @@ def compile_graph(g: WorkloadGraph, cfg: PimsabConfig) -> CompiledGraph:
     gm = distribute_graph(
         g, cfg,
         cost_fn=lambda w, m, elide: _data_movement_cycles(w, m, cfg, elide),
+        state_pins=state_pins,
     )
     prog: List[isa.Instr] = []
     segments: List[Tuple[str, int, int]] = []
@@ -599,6 +835,7 @@ def compile_graph(g: WorkloadGraph, cfg: PimsabConfig) -> CompiledGraph:
         dead = {e.dst_input for e in gm.resident if e.dst == w.name}
         if gm.store_elided(w.name):
             dead.add("out")
+        dead |= gm.state_elides(w.name)
         start = len(prog)
         cp = compile_workload(
             w, cfg,

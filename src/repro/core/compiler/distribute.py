@@ -17,7 +17,7 @@ from __future__ import annotations
 import math
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.machine import PimsabConfig
 from repro.core.compiler.tensor_dsl import GraphEdge, Workload, WorkloadGraph, out_buffer
@@ -28,6 +28,7 @@ from repro.core.compiler.allocation import (
     allocate,
     allocate_graph,
     mul_live_window,
+    softmax_scratch_layout,
 )
 
 
@@ -127,6 +128,23 @@ def _buffer_reqs(
         p_mul = pa + pb
         window = mul_live_window(p_mul) if use_lifetime else p_mul
         reqs.append(BufferReq("mul_tmp", window, p_mul))
+    elif w.op == "kv_append":
+        # in-place one-hot row scatter: the whole cache row set is resident
+        # per lane (lane = row, fields = head dim), like maxpool's window
+        kk = max(1, w.reduce_extent())
+        reqs.append(BufferReq("in_a", kk * pa, kk * pa))
+        reqs.append(BufferReq("in_b", kk * pb, kk * pb))
+        reqs.append(BufferReq("in_c", w.ins[2].prec, w.ins[2].prec))
+        reqs.append(BufferReq("out", kk * out_prec, kk * w.acc_prec))
+    elif w.op == "softmax":
+        # whole row resident per lane (the max/sum folds read every field);
+        # scratch layout shared with codegen via softmax_scratch_layout
+        kk = max(1, w.reduce_extent())
+        reqs.append(BufferReq("in_a", kk * pa, kk * pa))
+        reqs.append(BufferReq("out", kk * out_prec, kk * w.acc_prec))
+        _, scratch = softmax_scratch_layout(pa, w.ins[0].frac, kk)
+        reqs.append(BufferReq("sm_scratch", scratch, scratch))
+        reqs.append(BufferReq("pred", 1, 1))
     else:
         raise ValueError(w.op)
     return reqs
@@ -188,6 +206,17 @@ def _dram_bits(w: Workload, cfg: PimsabConfig, tiles: int, bcast_b: bool) -> Dic
         split["b"] = d * k * w.ins[1].prec
         split["out"] = float(d * k * w.out.prec)
         split["h0"] = float(d * w.out.prec)
+    elif w.op == "kv_append":
+        # the cache streams in and the updated cache streams out — unless a
+        # ResidentState pins both in place, which elides streams a and out
+        # entirely; the new row is one broadcast load, the one-hot one per lane
+        split["a"] = d * k * pa
+        split["b"] = k * w.ins[1].prec
+        split["c"] = float(d * w.ins[2].prec)
+        split["out"] = float(d * k * w.out.prec)
+    elif w.op == "softmax":
+        split["a"] = d * k * pa
+        split["out"] = float(d * k * w.out.prec)
     else:
         split["a"] = d * k * pa / max(_reuse_a(w), 1)  # loaded once per use÷reuse
         if len(w.ins) > 1 and not w.ins[1].is_const:
@@ -233,15 +262,18 @@ def distribute(
     *,
     tile_constraint: Optional[int] = None,
     rs_constraint: Optional[int] = None,
+    k_chunk_constraint: Optional[int] = None,
     strict: bool = True,
 ) -> Optional[Mapping]:
     """Pick the best feasible mapping of ``w`` onto ``cfg``.
 
-    ``tile_constraint``/``rs_constraint`` restrict the exploration (graph
-    compilation pins a consumer to its producer's tiling and a producer to
-    the lane-contiguous ``reduce_split=1`` layout so the boundary value can
-    stay CRAM-resident).  With ``strict=False`` an empty feasible set returns
-    ``None`` instead of raising (constrained probes fall back).
+    ``tile_constraint``/``rs_constraint``/``k_chunk_constraint`` restrict the
+    exploration (graph compilation pins a consumer to its producer's tiling
+    and a producer to the lane-contiguous ``reduce_split=1`` layout so the
+    boundary value can stay CRAM-resident; a mac whose *shared* operand is
+    resident additionally needs its whole reduction window in one chunk).
+    With ``strict=False`` an empty feasible set returns ``None`` instead of
+    raising (constrained probes fall back).
     """
     lanes = cfg.pes_per_tile  # 65536 bitlines per tile
     d = w.total_out_elems()
@@ -261,6 +293,12 @@ def distribute(
         rs_options = sorted({1, 16, cfg.cram_cols, lanes})
     else:
         rs_options = [1]
+    if (w.op == "mac" and len(w.ins) > 1 and w.ins[1].is_const
+            and isinstance(w.ins[1].const_value, tuple)):
+        # per-row constants ride the RF path, which is shared per tile: each
+        # reduction index needs its own RfLoad, so the reduction stays whole
+        # per lane (decode_gemv's constant-operand rows)
+        rs_options = [1]
     if rs_constraint is not None:
         rs_options = [r for r in rs_options if r == rs_constraint] or []
     for tiles in tile_options:
@@ -272,7 +310,10 @@ def distribute(
             lanes_used = min(lanes, lanes_needed)
             serial = -(-lanes_needed // lanes)
             k_per_lane = k // reduce_split
-            for k_chunk in _k_chunk_options(w, k_per_lane):
+            kc_opts = _k_chunk_options(w, k_per_lane)
+            if k_chunk_constraint is not None:
+                kc_opts = [kc for kc in kc_opts if kc == k_chunk_constraint]
+            for k_chunk in kc_opts:
                 out_prec = adaptive_precision(pa, pb, k, w.op)
                 out_prec = min(out_prec, w.acc_prec)
                 reqs = _buffer_reqs(
@@ -314,6 +355,8 @@ def distribute(
             {kc for kc in range(1, best.k_chunk + 1) if k_lane % kc == 0},
             reverse=True,
         )
+        if k_chunk_constraint is not None:
+            kc_options = [kc for kc in kc_options if kc == k_chunk_constraint]
         for kc in kc_options:
             trial = dataclasses.replace(best, k_chunk=kc, notes=list(best.notes))
             db_alloc = allocate(
@@ -378,6 +421,32 @@ def _better(a: Mapping, b: Mapping) -> bool:
 _MAP_OPS = ("map_add", "map_mul", "relu")
 
 
+def _chain_candidate(w: Workload, e: GraphEdge) -> bool:
+    """Can ``w`` read the producer of ``e`` in place, layout permitting?
+
+    Map ops read any input one-element-per-lane.  A mac can chain its
+    *shared* operand (in_b): the mac expects lane y to hold the reduction
+    fields of output column y, which is exactly what a field-major producer
+    (kv_append: lane = row, fields = head dim) leaves behind — provided the
+    whole reduction window is one resident chunk (checked at plan time via
+    ``k_chunk_constraint``) and the shapes line up (``_mac_chain_shape_ok``).
+    """
+    if w.op in _MAP_OPS:
+        return e.dst_input in ("in_a", "in_b")
+    if w.op == "mac" and len(w.ins) > 1 and not w.ins[1].is_const:
+        return e.dst_input == "in_b"
+    return False
+
+
+def _mac_chain_shape_ok(w_dst: Workload, w_src: Workload) -> bool:
+    """Producer lane t must be consumer output column t, producer field j
+    must be consumer reduction index j — extents must match exactly."""
+    return (
+        w_src.total_out_elems() == w_dst.total_out_elems()
+        and w_src.reduce_extent() == w_dst.reduce_extent()
+    )
+
+
 @dataclass
 class GraphMapping:
     """Per-node mappings + the residency decisions for one WorkloadGraph."""
@@ -387,9 +456,32 @@ class GraphMapping:
     resident: Tuple[GraphEdge, ...] = ()
     elided_bits: Dict[str, float] = field(default_factory=dict)  # "node:stream" -> bits
     notes: List[str] = field(default_factory=list)
+    # node -> buffer -> fixed wordline ranges of a cross-program persistent
+    # state (ResidentState): the state updater's input and output alias the
+    # same reserved region, so both its DRAM streams are elided
+    state_pins: Dict[str, Dict[str, List[Tuple[int, int]]]] = field(default_factory=dict)
+    # nodes whose output must land in DRAM even if every consumer chains:
+    # a DECLINED state updater's post-append cache is only visible to the
+    # host through its store (the accepted path harvests the reserved
+    # wordlines instead, so elision is safe there)
+    must_store: Set[str] = field(default_factory=set)
 
     def is_resident(self, dst: str, dst_input: str) -> bool:
         return any(e.dst == dst and e.dst_input == dst_input for e in self.resident)
+
+    def state_elides(self, name: str) -> set:
+        """Streams of ``name`` elided because they alias a persistent-state
+        region (seeded before the program runs, harvested after)."""
+        return set(self.state_pins.get(name, ())) & {"in_a", "in_b", "out"}
+
+    def state_reserved(self) -> List[Tuple[int, int]]:
+        """Union of all persistent-state wordline ranges — carved out of
+        every node's free set, and pre-marked live for the verifier."""
+        out: List[Tuple[int, int]] = []
+        for pins in self.state_pins.values():
+            for ranges in pins.values():
+                out.extend(tuple(r) for r in ranges)
+        return sorted(set(out))
 
     def plan_notes(self) -> List[Tuple[str, str]]:
         """Graph-level + per-node plan notes as ``(node, note)`` pairs
@@ -408,6 +500,7 @@ class GraphMapping:
         return (
             bool(outs)
             and src not in self.graph.outputs
+            and src not in self.must_store
             and all(e in self.resident for e in outs)
         )
 
@@ -425,6 +518,10 @@ class GraphMapping:
             ],
             "elided_bits": dict(self.elided_bits),
             "notes": list(self.notes),
+            "state_pins": {
+                n: {b: [list(r) for r in rr] for b, rr in pins.items()}
+                for n, pins in self.state_pins.items()
+            },
         }
 
 
@@ -467,7 +564,9 @@ def _store_may_elide(g: WorkloadGraph, src: str) -> bool:
 
 
 def distribute_graph(
-    g: WorkloadGraph, cfg: PimsabConfig, cost_fn: CostFn = None
+    g: WorkloadGraph, cfg: PimsabConfig, cost_fn: CostFn = None,
+    *,
+    state_pins: Optional[Dict[str, Dict[str, List[Tuple[int, int]]]]] = None,
 ) -> GraphMapping:
     """Distribute every node of ``g``, keeping eligible producer outputs
     CRAM-resident for their consumers.
@@ -481,6 +580,14 @@ def distribute_graph(
     k-chunk), and (4) runs the live-range allocator with the boundary buffer
     pinned.  Any failure drops the edge back to the DRAM round-trip — the
     program still compiles, just without the elision.
+
+    ``state_pins`` maps a node to the fixed wordline ranges of a
+    cross-program persistent state (``ResidentState``) its buffers alias —
+    typically a kv_append updater with ``in_a`` and ``out`` pinned to the
+    same region, making the append in place and DRAM-free.  Each pin is
+    cost-model gated like edge residency: a layout that cannot update in
+    place (multi-step, multi-tile) or that models no data-movement win is
+    declined with an N-PLAN note and falls back to the DRAM round-trip.
     """
     mappings: Dict[str, Mapping] = {}
     resident: List[GraphEdge] = []
@@ -493,9 +600,7 @@ def distribute_graph(
         taken: List[GraphEdge] = []
         cand = [
             e for e in incoming
-            if e.src in mappings
-            and e.dst_input in ("in_a", "in_b")
-            and w.op in _MAP_OPS
+            if e.src in mappings and _chain_candidate(w, e)
         ]
         if cand:
             # producers must be lane-contiguous; re-pin them if they are not
@@ -504,6 +609,17 @@ def distribute_graph(
             ok: List[GraphEdge] = []
             for e in cand:
                 mp = mappings[e.src]
+                if (
+                    w.op == "mac"
+                    and e.dst_input == "in_b"
+                    and not _mac_chain_shape_ok(w, g.node(e.src))
+                ):
+                    notes.append(
+                        f"{e.src}->{e.dst}: producer field layout does not "
+                        "match the mac's shared-operand shape, DRAM "
+                        "round-trip kept"
+                    )
+                    continue
                 if not _producer_layout_ok(mp):
                     repinned = distribute(
                         g.node(e.src), cfg,
@@ -527,7 +643,15 @@ def distribute_graph(
                 pmap = lambda e: repins.get(e.src, mappings[e.src])
                 tiles = pmap(ok[0]).tiles_used
                 ok = [e for e in ok if pmap(e).tiles_used == tiles]
-                m_try = distribute(w, cfg, tile_constraint=tiles, strict=False)
+                chain_mac = w.op == "mac" and any(
+                    e.dst_input == "in_b" for e in ok
+                )
+                m_try = distribute(
+                    w, cfg, tile_constraint=tiles,
+                    rs_constraint=1 if chain_mac else None,
+                    k_chunk_constraint=w.reduce_extent() if chain_mac else None,
+                    strict=False,
+                )
                 accept = m_try is not None and all(
                     _consumer_layout_ok(m_try, pmap(e)) for e in ok
                 )
@@ -563,6 +687,19 @@ def distribute_graph(
                         f"{w.name}: consumer layout incompatible with "
                         "producer tiling, DRAM round-trip kept"
                     )
+        if m is None and state_pins and w.name in state_pins:
+            # a persistent-state updater must mutate its reserved wordlines
+            # in place: one tile, one serial step, no reduce split.  Ask for
+            # that layout up front — the free distribution spreads lanes
+            # across tiles for parallelism and would force the decline below.
+            m = distribute(w, cfg, tile_constraint=1, rs_constraint=1,
+                           strict=False)
+            if m is not None and (m.serial_iters != 1 or m.tiles_used != 1):
+                m = None
+            if m is not None:
+                m.notes.append(
+                    "tile pinned to 1: in-place persistent-state update"
+                )
         if m is None:
             m = m_free if m_free is not None else distribute(w, cfg)
         mappings[w.name] = m
@@ -570,7 +707,39 @@ def distribute_graph(
             e for e in taken if _edge_prec_ok(g, e, mappings)
         )
 
-    gm = GraphMapping(graph=g, mappings=mappings, resident=tuple(resident), notes=notes)
+    accepted: Dict[str, Dict[str, List[Tuple[int, int]]]] = {}
+    for name, pins in (state_pins or {}).items():
+        if name not in mappings:
+            raise KeyError(f"state pin on unknown node {name!r}")
+        m = mappings[name]
+        if m.serial_iters != 1 or m.tiles_used != 1:
+            notes.append(
+                f"{name}: state residency declined — the update layout is "
+                f"not a single-step single-tile in-place pass "
+                f"(serial_iters={m.serial_iters}, tiles={m.tiles_used})"
+            )
+            continue
+        if cost_fn is not None:
+            elide = frozenset(set(pins) & {"in_a", "in_b", "out"})
+            fused = cost_fn(g.node(name), m, elide)
+            eager = cost_fn(g.node(name), m, frozenset())
+            if fused >= eager:
+                notes.append(
+                    f"{name}: state residency declined — fused plan models "
+                    f"{fused:.0f} data-movement cycles vs {eager:.0f} eager"
+                )
+                continue
+        notes.append(
+            f"{name}: persistent state CRAM-resident — the append updates "
+            "the reserved wordlines in place, no DRAM round-trip"
+        )
+        accepted[name] = {b: [tuple(r) for r in rr] for b, rr in pins.items()}
+
+    declined_updaters = {n for n in (state_pins or {}) if n not in accepted}
+    gm = GraphMapping(
+        graph=g, mappings=mappings, resident=tuple(resident), notes=notes,
+        state_pins=accepted, must_store=declined_updaters,
+    )
     _allocate_graph_mappings(gm, cfg)
     _account_elision(gm)
     return gm
@@ -594,7 +763,10 @@ def _allocate_graph_mappings(gm: GraphMapping, cfg: PimsabConfig) -> None:
                 if not (r.name.endswith(".alt") and r.name[:-4] in pins)
             ]
             items.append((w.name, reqs, pins))
-        allocs = allocate_graph(items, cfg.cram_rows)
+        allocs = allocate_graph(
+            items, cfg.cram_rows,
+            reserved=gm.state_reserved(), pinned_fixed=gm.state_pins,
+        )
         bad = [n for n, a in allocs.items() if not a.feasible]
         if not bad:
             for name, a in allocs.items():
@@ -620,7 +792,19 @@ def _allocate_graph_mappings(gm: GraphMapping, cfg: PimsabConfig) -> None:
             e for e in gm.resident
             if not any(order[e.src] < b <= order[e.dst] for b in bad_idx)
         )
-        if dropped == gm.resident:  # infeasible without pins: should not happen
+        if dropped == gm.resident:
+            # last relief valve: give up the persistent-state reservations
+            # (the states fall back to host-side round-trips per step)
+            if gm.state_pins:
+                gm.notes.append(
+                    f"state residency dropped around {bad}: reserved state "
+                    "rows squeeze the node's own buffers out of CRAM"
+                )
+                # the updaters now stream: their stores must reach DRAM so
+                # the host-side state mirrors can harvest the new cache
+                gm.must_store |= set(gm.state_pins)
+                gm.state_pins = {}
+                continue
             raise RuntimeError(
                 f"graph {g.name}: allocation infeasible for {bad} even "
                 "without residency — per-op distribute() admitted a mapping "
@@ -642,3 +826,9 @@ def _account_elision(gm: GraphMapping) -> None:
     for w in gm.graph.nodes:
         if gm.store_elided(w.name):
             gm.elided_bits[f"{w.name}:out"] = gm.mappings[w.name].dram_split.get("out", 0.0)
+    for name, pins in gm.state_pins.items():
+        split = gm.mappings[name].dram_split
+        if "in_a" in pins:
+            gm.elided_bits[f"{name}:a"] = split.get("a", 0.0)
+        if "out" in pins:
+            gm.elided_bits[f"{name}:out"] = split.get("out", 0.0)

@@ -50,11 +50,17 @@ class Workload:
     loops: Tuple[Loop, ...]
     out: Ref
     ins: Tuple[Ref, ...]
-    # "map_add" | "map_mul" | "mac" | "stencil_mac" | "scan_mac" | "relu" | "maxpool"
+    # "map_add" | "map_mul" | "mac" | "stencil_mac" | "scan_mac" | "relu" |
+    # "maxpool" | "softmax" | "kv_append"
     # scan_mac: out_t = a_t · out_{t-1} + b_t — the reduce loop is *sequential
     # per lane* (a linear recurrence), never split across lanes.
     # maxpool: fold the reduce window via CmpGE + masked copy (whole window
     # resident per lane — the fold mutates `out` in place, so it cannot chunk).
+    # softmax: fixed-point row softmax (lane = row, fields = the row); the
+    # reduce loop is the row extent, whole row resident like maxpool.
+    # kv_append: out = in_a with the row selected by the one-hot in_c
+    # replaced by in_b (lane = row, fields = head dim, in place when the
+    # cache is a CRAM-resident persistent state).
     op: str
     acc_prec: int = 32  # the *program's* accumulator precision (pre-adaptive)
     # average pools are `mac` reductions against the constant 1 whose store

@@ -52,6 +52,8 @@ E-ALLOC-OVERLAP    error     allocation ranges collide (within an op, or a
 E-ALLOC-BOUNDS     error     allocation range outside [0, cram_rows)
 E-RESIDENT-PIN     error     consumer's pinned input ranges differ from the
                              producer's output ranges
+E-STATE-PIN        error     persistent-state pins are not a single in-place
+                             region (in_a and out must alias the same rows)
 E-PREC-OVERFLOW    error     worst-case accumulator bits exceed the written
                              width, which is below the planned out_prec
 E-NO-EFFECT        error     an Instr subclass lacks an effect signature
@@ -248,7 +250,8 @@ class _Segment:
 
 class _Verifier:
     def __init__(self, name: str, program: Sequence[isa.Instr],
-                 cfg: PimsabConfig, segments: Sequence[_Segment]):
+                 cfg: PimsabConfig, segments: Sequence[_Segment],
+                 entry_live: Tuple[Tuple[int, int], ...] = ()):
         self.name = name
         self.program = list(program)
         self.cfg = cfg
@@ -259,8 +262,10 @@ class _Verifier:
         self.mapping: Optional[Mapping] = None
         self.planned: Optional[int] = None
         # liveness: initialized-wordline bitmask, shared default + per-tile
-        # overrides (only staggered tile groups diverge)
-        self.wl_all = 0
+        # overrides (only staggered tile groups diverge).  ``entry_live``
+        # ranges (cross-program persistent-state regions) count as written
+        # before the first instruction: the executor seeds them.
+        self.wl_all = _range_mask(entry_live)
         self.wl_over: Dict[int, int] = {}
         self.rf_all: Set[int] = set()
         self.rf_over: Dict[int, Set[int]] = {}
@@ -571,10 +576,14 @@ class _Verifier:
             self._bound_write(i, ins, ins.dst, ins.prec_dst,
                               a[0] + b[0], a[1] + b[1])
         elif isinstance(ins, isa.Sub):
-            a = self._bound_read(ins.src1, ins.prec1)
-            b = self._bound_read(ins.src2, ins.prec2)
-            self._bound_write(i, ins, ins.dst, ins.prec_dst,
-                              a[0] - b[1], a[1] - b[0])
+            if ins.src2 == ins.src1 and ins.prec2 == ins.prec1:
+                # x - x: the zeroing idiom — exactly 0, not a full range
+                self._bound_write(i, ins, ins.dst, ins.prec_dst, 0, 0)
+            else:
+                a = self._bound_read(ins.src1, ins.prec1)
+                b = self._bound_read(ins.src2, ins.prec2)
+                self._bound_write(i, ins, ins.dst, ins.prec_dst,
+                                  a[0] - b[1], a[1] - b[0])
         elif isinstance(ins, isa.Logical):
             pure_zero = (
                 ins.op == "xor" and ins.src2 == ins.src1 and ins.dst == ins.src1
@@ -691,11 +700,60 @@ def _graph_structure_diags(cg, capacity: int) -> List[Diagnostic]:
     pinned_bufs: Dict[str, Set[str]] = {}
     for e in gm.resident:
         pinned_bufs.setdefault(e.dst, set()).add(e.dst_input)
+    for node, pins in gm.state_pins.items():
+        pinned_bufs.setdefault(node, set()).update(pins)
     for w in g.nodes:
         diags.extend(_check_allocation(
             gm.mappings[w.name].allocation, w.name, capacity,
             pinned=frozenset(pinned_bufs.get(w.name, ())),
         ))
+    # persistent-state pins: the updater's input and output must alias one
+    # in-bounds region (the in-place contract), and no other node may land a
+    # fresh buffer on those wordlines — they are live across the whole stream
+    state_mask = 0
+    for node, pins in gm.state_pins.items():
+        rr = {buf: sorted(tuple(r) for r in ranges) for buf, ranges in pins.items()}
+        if "in_a" in rr and "out" in rr and rr["in_a"] != rr["out"]:
+            diags.append(Diagnostic(
+                "E-STATE-PIN", "error",
+                f"state pins on '{node}' differ between in_a {rr['in_a']} and "
+                f"out {rr['out']}: the append would not update in place",
+                node=node,
+            ))
+        for buf, ranges in rr.items():
+            for s, e in ranges:
+                if s < 0 or e > capacity:
+                    diags.append(Diagnostic(
+                        "E-STATE-PIN", "error",
+                        f"state pin '{node}:{buf}' range [{s},{e}) exceeds "
+                        f"the {capacity}-wordline CRAM",
+                        node=node, wordlines=((s, e),),
+                    ))
+            state_mask |= _range_mask(ranges)
+    if state_mask:
+        # chained consumers of a state-pinned producer read the reserved
+        # region in place — their pinned input legitimately aliases it
+        state_readers: Dict[str, Set[str]] = {}
+        for e in gm.resident:
+            if e.src in gm.state_pins:
+                state_readers.setdefault(e.dst, set()).add(e.dst_input)
+        for w in g.nodes:
+            alloc = gm.mappings[w.name].allocation
+            if alloc is None:
+                continue
+            state_bufs = set(gm.state_pins.get(w.name, ()))
+            state_bufs |= state_readers.get(w.name, set())
+            for name, ranges in alloc.ranges.items():
+                if name in state_bufs:
+                    continue
+                clash = _range_mask(ranges) & state_mask
+                if clash:
+                    diags.append(Diagnostic(
+                        "E-ALLOC-OVERLAP", "error",
+                        f"node '{w.name}' buffer '{name}' lands on persistent-"
+                        "state wordlines that live across program executions",
+                        node=w.name, wordlines=_mask_ranges(clash),
+                    ))
     # resident pins alias the producer's output ranges exactly
     src_last: Dict[Tuple[str, str], int] = {}
     for e in gm.resident:
@@ -807,9 +865,13 @@ def verify_graph(cg, cfg: PimsabConfig) -> VerifyReport:
     for e in gm.resident:
         key = (e.src, out_buffer(g.node(e.src)))
         src_last[key] = max(src_last.get(key, -1), order[e.dst])
+    # cross-program persistent-state wordlines (ResidentState): seeded before
+    # the stream runs and harvested after it, so they are live at entry and
+    # must survive *every* segment boundary
+    state_keep = tuple(tuple(r) for r in gm.state_reserved())
     segments: List[_Segment] = []
     for idx, (node, start, end) in enumerate(cg.segments):
-        keep: List[Tuple[int, int]] = []
+        keep: List[Tuple[int, int]] = list(state_keep)
         for (src, buf), last in src_last.items():
             if order[src] < idx <= last:
                 keep.extend(
@@ -820,7 +882,9 @@ def verify_graph(cg, cfg: PimsabConfig) -> VerifyReport:
             node=node, start=start, end=end,
             mapping=gm.mappings.get(node), keep=tuple(keep),
         ))
-    diags.extend(_Verifier(g.name, cg.program, cfg, segments).run())
+    diags.extend(_Verifier(
+        g.name, cg.program, cfg, segments, entry_live=state_keep
+    ).run())
     return VerifyReport(
         name=g.name, instrs=len(cg.program), diagnostics=tuple(diags),
     )

@@ -81,15 +81,23 @@ __all__ = [
     "avgpool2d",
     "global_avgpool",
     "int_matmul",
+    "attention_qk",
+    "softmax_fixedpoint",
+    "attention_pv",
+    "decode_gemv",
+    "kv_append",
     "static_value",
     "last_executed_pairs",
     "last_sim_report",
+    "sim_report_log",
+    "clear_sim_report_log",
     "last_verify_report",
     "profile_timelines",
     # Program API (re-exported from repro.kernels.program)
     "trace",
     "compile",
     "Program",
+    "ResidentState",
     "Executor",
     "TracedFunction",
     "TraceError",
@@ -433,6 +441,7 @@ def _ensure_registered() -> None:
     global _bootstrapped
     if _bootstrapped:
         return
+    import repro.kernels.attention  # noqa: F401
     import repro.kernels.bitslice_matmul  # noqa: F401
     import repro.kernels.conv  # noqa: F401
     import repro.kernels.ewise  # noqa: F401
@@ -753,6 +762,93 @@ def int_matmul(
     )
 
 
+def attention_qk(
+    q: jnp.ndarray, k: jnp.ndarray, *,
+    q_bits: Optional[int] = None, k_bits: Optional[int] = None,
+    out_bits: Optional[int] = None, block_m: int = 128,
+) -> jnp.ndarray:
+    """Attention scores ``(M, D) q × (T, D) k → (M, T) int32`` (q·Kᵀ) on the
+    active backend.
+
+    ``q_bits``/``k_bits`` are static precision hints for the pimsab lowering.
+    ``out_bits`` is the caller's promise that every score fits that many
+    signed bits: in program mode it clamps the score field width so the
+    downstream fixed-point softmax scratch stays small (scores that overflow
+    it wrap on the machine).  In a decode program whose K operand is a
+    :class:`ResidentState` KV cache, the key cache chains CRAM-resident from
+    the ``kv_append`` updater straight into this reduction.
+    """
+    return dispatch(
+        "attention_qk", q, k, q_bits=q_bits, k_bits=k_bits, out_bits=out_bits,
+        pallas_kwargs={"block_m": block_m},
+    )
+
+
+def softmax_fixedpoint(
+    x: jnp.ndarray, *, in_frac: int, in_bits: Optional[int] = None,
+    block_r: int = 128,
+) -> jnp.ndarray:
+    """Bit-exact fixed-point row softmax of ``(R, T)`` integers on the active
+    backend.
+
+    Inputs carry ``in_frac`` fraction bits (must be ≥ ``SOFTMAX_F −
+    SOFTMAX_K`` = 3); outputs are int32 probabilities with ``SOFTMAX_F`` = 6
+    fraction bits, rows summing to ≈ ``2**6``.  All three backends run the
+    identical integer recipe (max-subtract, squared-polynomial exp,
+    restoring-division normalizer), so results match bit for bit; ``in_bits``
+    is a static width hint for the pimsab lowering.
+    """
+    return dispatch(
+        "softmax_fixedpoint", x, in_frac=in_frac, in_bits=in_bits,
+        pallas_kwargs={"block_r": block_r},
+    )
+
+
+def attention_pv(
+    p: jnp.ndarray, v: jnp.ndarray, *, shift: Optional[int] = None,
+    p_bits: Optional[int] = None, v_bits: Optional[int] = None,
+    block_m: int = 128,
+) -> jnp.ndarray:
+    """Probability-weighted value mix ``(M, T) p × (T, Dv) v → (M, Dv)
+    int32`` with the accumulator arithmetically shifted right by ``shift``
+    (default ``SOFTMAX_F``) on the active backend — on pimsab a free
+    shifted-window read of the MAC accumulator.  The V cache is re-streamed
+    (never chained CRAM-resident: the updater leaves it laid out per cache
+    row, but this reduction wants it per output column)."""
+    kwargs = dict(p_bits=p_bits, v_bits=v_bits)
+    if shift is not None:
+        kwargs["shift"] = shift
+    return dispatch(
+        "attention_pv", p, v, pallas_kwargs={"block_m": block_m}, **kwargs
+    )
+
+
+def decode_gemv(
+    w: jnp.ndarray, x: jnp.ndarray, *,
+    w_bits: Optional[int] = None, x_bits: Optional[int] = None,
+    block_m: int = 128,
+) -> jnp.ndarray:
+    """Single-token decode projection ``(M, K) w × (K,) x → (M,) int32`` on
+    the active backend.  The pimsab lowering sends the shared activation
+    down the RF constant path (one RfLoad + MacConst per reduction index)
+    instead of broadcasting it through the NoC."""
+    return dispatch(
+        "decode_gemv", w, x, w_bits=w_bits, x_bits=x_bits,
+        pallas_kwargs={"block_m": block_m},
+    )
+
+
+def kv_append(
+    cache: jnp.ndarray, new: jnp.ndarray, onehot: jnp.ndarray
+) -> jnp.ndarray:
+    """``(T, D)`` cache with the row selected by the one-hot ``(T,)``
+    ``onehot`` replaced by the ``(D,)`` ``new`` row (all-zero selector → no
+    op) on the active backend.  Bind the cache operand to a
+    :class:`ResidentState` when compiling a decode program and the append
+    updates reserved CRAM wordlines in place — zero DRAM traffic per step."""
+    return dispatch("kv_append", cache, new, onehot)
+
+
 def last_sim_report():
     """The :class:`~repro.kernels.pimsab_backend.SimReport` of the most recent
     pimsab-backend kernel call *or Program execution* on this thread
@@ -763,6 +859,25 @@ def last_sim_report():
     from repro.kernels import pimsab_backend
 
     return pimsab_backend.last_sim_report()
+
+
+def sim_report_log():
+    """Bounded ring of recent pimsab :class:`SimReport`s on this thread,
+    oldest first (the last entry is :func:`last_sim_report`).  Holds the most
+    recent ``pimsab_backend.SIM_REPORT_LOG_SIZE`` reports — enough for a
+    serving scheduler to aggregate per-decode-step energy/cycles across a
+    whole batch window without interposing on every call."""
+    from repro.kernels import pimsab_backend
+
+    return pimsab_backend.sim_report_log()
+
+
+def clear_sim_report_log():
+    """Empty this thread's :func:`sim_report_log` ring (benchmarks call this
+    at window boundaries so aggregation never double-counts a step)."""
+    from repro.kernels import pimsab_backend
+
+    return pimsab_backend.clear_sim_report_log()
 
 
 def last_verify_report():
@@ -791,6 +906,7 @@ def profile_timelines(enable: bool = True):
 from repro.kernels.program import (  # noqa: E402  (after dispatch: program.py
     Executor,                        # lazily imports this module back)
     Program,
+    ResidentState,
     TraceError,
     TracedFunction,
     clear_compile_cache,

@@ -1,0 +1,246 @@
+"""Pallas TPU kernels: transformer decode attention + KV cache.
+
+The serving subsystem's kernel set (registry names match the pimsab
+lowerings in :mod:`repro.kernels.pimsab_backend`):
+
+* ``attention_qk``   — (M, D) × (T, D) → (M, T) int32 scores q·Kᵀ
+* ``softmax_fixedpoint`` — bit-exact integer row softmax (SOFTMAX_F-frac out)
+* ``attention_pv``   — (M, T) × (T, Dv) → (M, Dv), accumulator >> shift
+* ``decode_gemv``    — (M, K) × (K,) → (M,) single-token projection
+* ``kv_append``      — one-hot row scatter into a (T, D) cache
+
+Everything is integer end to end: the fixed-point softmax's divides are a
+restoring-division loop (no int division on the VPU, and it mirrors the
+bit-serial machine's masked conditional-subtract divider), and every ``>>``
+is arithmetic, matching the pimsab shifted-window reads bit for bit.
+
+Tiling: decode shapes are small (one token × a KV window), so kernels block
+over the only large axis (rows of Q / the cache) and keep the reduction
+resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.kernels.api import register_kernel
+from repro.kernels.ewise import _block_size
+
+
+def _int_dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a @ b with int32 accumulation (the MXU's widened integer path)."""
+    return jax.lax.dot_general(
+        a.astype(jnp.int32), b.astype(jnp.int32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention_qk
+# ---------------------------------------------------------------------------
+
+
+def _qk_kernel(q_ref, kt_ref, o_ref):
+    o_ref[...] = _int_dot(q_ref[...], kt_ref[...])
+
+
+@register_kernel("attention_qk", oracle=ref.attention_qk_ref)
+def attention_qk(
+    q: jnp.ndarray, k: jnp.ndarray, *,
+    q_bits: Optional[int] = None, k_bits: Optional[int] = None,
+    out_bits: Optional[int] = None,
+    block_m: int = 128, interpret: bool = False,
+) -> jnp.ndarray:
+    """(M, D) query block × (T, D) key cache → (M, T) int32 scores q·Kᵀ.
+
+    ``q_bits``/``k_bits``/``out_bits`` are pimsab precision hints (see the
+    oracle's docstring for the ``out_bits`` overflow contract); the TPU path
+    ignores them.
+    """
+    del q_bits, k_bits, out_bits
+    m, d = q.shape
+    t, d2 = k.shape
+    assert d == d2, (d, d2)
+    bm = _block_size(m, block_m)
+    return pl.pallas_call(
+        _qk_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t), jnp.int32),
+        interpret=interpret,
+    )(q, k.T)
+
+
+# ---------------------------------------------------------------------------
+# softmax_fixedpoint
+# ---------------------------------------------------------------------------
+
+
+def _softmax_kernel(x_ref, o_ref, *, sigma: int):
+    f, kk, fi = ref.SOFTMAX_F, ref.SOFTMAX_K, ref.SOFTMAX_FI
+    x = x_ref[...].astype(jnp.int32)
+    t = x - jnp.max(x, axis=-1, keepdims=True)
+    tcl = jnp.maximum(t, -(1 << (f + sigma)))
+    u = jnp.right_shift(tcl, sigma)
+    w = u + (1 << f) + jnp.right_shift(u * u, f + 1)
+    for _ in range(kk):
+        w = jnp.right_shift(w * w, f)
+    s = jnp.sum(w, axis=-1, keepdims=True)
+    # q = 2^(FI+F) // s by restoring division — the quotient fits FI+1 bits
+    # (s >= 2^F always: the max element's exponential is exactly 2^F), and
+    # the VPU has no integer divide; this also mirrors the machine's masked
+    # conditional-subtract divider exactly.
+    r = jnp.full_like(s, 1 << (fi + f))
+    q = jnp.zeros_like(s)
+    for b in range(fi, -1, -1):
+        c = s << b
+        ge = r >= c
+        r = jnp.where(ge, r - c, r)
+        q = jnp.where(ge, q + (1 << b), q)
+    o_ref[...] = jnp.right_shift(w * q, fi)
+
+
+@register_kernel("softmax_fixedpoint", oracle=ref.softmax_fixedpoint_ref)
+def softmax_fixedpoint(
+    x: jnp.ndarray, *, in_frac: int, in_bits: Optional[int] = None,
+    block_r: int = 128, interpret: bool = False,
+) -> jnp.ndarray:
+    """Bit-exact fixed-point row softmax of (R, T) integers with ``in_frac``
+    fraction bits → int32 probabilities with ``SOFTMAX_F`` fraction bits
+    (identical recipe to the oracle / the pimsab machine, shift for shift)."""
+    del in_bits
+    f, kk = ref.SOFTMAX_F, ref.SOFTMAX_K
+    in_frac = int(in_frac)
+    if in_frac < f - kk:
+        raise NotImplementedError(
+            f"softmax_fixedpoint needs in_frac >= {f - kk} (got {in_frac})"
+        )
+    r, t = x.shape
+    br = _block_size(r, block_r)
+    kernel = functools.partial(_softmax_kernel, sigma=in_frac - f + kk)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, t), jnp.int32),
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# attention_pv
+# ---------------------------------------------------------------------------
+
+
+def _pv_kernel(p_ref, v_ref, o_ref, *, shift: int):
+    o_ref[...] = jnp.right_shift(_int_dot(p_ref[...], v_ref[...]), shift)
+
+
+@register_kernel("attention_pv", oracle=ref.attention_pv_ref)
+def attention_pv(
+    p: jnp.ndarray, v: jnp.ndarray, *, shift: int = ref.SOFTMAX_F,
+    p_bits: Optional[int] = None, v_bits: Optional[int] = None,
+    block_m: int = 128, interpret: bool = False,
+) -> jnp.ndarray:
+    """(M, T) probabilities × (T, Dv) value cache → (M, Dv) int32, with the
+    int32 accumulator arithmetically shifted right by ``shift`` (floor) —
+    renormalizing ``SOFTMAX_F``-fraction probabilities to the value scale."""
+    del p_bits, v_bits
+    m, t = p.shape
+    t2, dv = v.shape
+    assert t == t2, (t, t2)
+    bm = _block_size(m, block_m)
+    kernel = functools.partial(_pv_kernel, shift=int(shift))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, t), lambda i: (i, 0)),
+            pl.BlockSpec((t, dv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, dv), jnp.int32),
+        interpret=interpret,
+    )(p, v)
+
+
+# ---------------------------------------------------------------------------
+# decode_gemv
+# ---------------------------------------------------------------------------
+
+
+def _gemv_kernel(w_ref, x_ref, o_ref):
+    o_ref[...] = _int_dot(w_ref[...], x_ref[...])
+
+
+@register_kernel("decode_gemv", oracle=ref.decode_gemv_ref)
+def decode_gemv(
+    w: jnp.ndarray, x: jnp.ndarray, *,
+    w_bits: Optional[int] = None, x_bits: Optional[int] = None,
+    block_m: int = 128, interpret: bool = False,
+) -> jnp.ndarray:
+    """(M, K) weights × (K,) activation → (M,) int32 single-token decode
+    projection (the pimsab lowering rides the activation down the RF
+    constant path; here it is a width-1 MXU matmul)."""
+    del w_bits, x_bits
+    m, k = w.shape
+    assert x.shape == (k,), (x.shape, k)
+    bm = _block_size(m, block_m)
+    out = pl.pallas_call(
+        _gemv_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        interpret=interpret,
+    )(w, x.reshape(k, 1))
+    return out.reshape(m)
+
+
+# ---------------------------------------------------------------------------
+# kv_append
+# ---------------------------------------------------------------------------
+
+
+def _kv_append_kernel(c_ref, n_ref, s_ref, o_ref):
+    sel = (s_ref[...] != 0)[:, None]
+    o_ref[...] = jnp.where(sel, n_ref[...].astype(c_ref.dtype), c_ref[...])
+
+
+@register_kernel("kv_append", oracle=ref.kv_append_ref)
+def kv_append(
+    cache: jnp.ndarray, new: jnp.ndarray, onehot: jnp.ndarray, *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(T, D) cache with the row selected by the one-hot (T,) ``onehot``
+    replaced by the (D,) ``new`` row (all-zero selector → no-op).  The
+    pimsab lowering latches the selector into the PE mask and, as a
+    ``ResidentState`` updater, performs the scatter in place on reserved
+    CRAM wordlines."""
+    t, d = cache.shape
+    assert new.shape == (d,), (new.shape, d)
+    assert onehot.shape == (t,), (onehot.shape, t)
+    return pl.pallas_call(
+        _kv_append_kernel,
+        in_specs=[
+            pl.BlockSpec((t, d), lambda: (0, 0)),
+            pl.BlockSpec((1, d), lambda: (0, 0)),
+            pl.BlockSpec((t,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t, d), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), cache.dtype),
+        interpret=interpret,
+    )(cache, new.reshape(1, d), onehot)

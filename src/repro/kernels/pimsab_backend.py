@@ -52,6 +52,7 @@ carries per-kernel cycle segments and a cross-kernel DRAM-traffic breakdown
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import math
 import threading
@@ -63,7 +64,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import isa
-from repro.core.compiler.allocation import adaptive_precision
+from repro.core.compiler.allocation import (
+    SOFTMAX_F,
+    SOFTMAX_K,
+    adaptive_precision,
+    softmax_out_prec,
+)
 from repro.core.compiler.codegen import (
     CompiledGraph,
     CompiledProgram,
@@ -92,6 +98,7 @@ from repro.kernels import ref as kref
 # the lowerings attach to already-registered kernels: importing the kernel
 # modules here makes a direct `import repro.kernels.pimsab_backend` work the
 # same as the lazy registry bootstrap
+import repro.kernels.attention  # noqa: E402,F401
 import repro.kernels.bitslice_matmul  # noqa: E402,F401
 import repro.kernels.conv  # noqa: E402,F401
 import repro.kernels.ewise  # noqa: E402,F401
@@ -101,6 +108,8 @@ import repro.kernels.rglru_scan  # noqa: E402,F401
 __all__ = [
     "SimReport",
     "last_sim_report",
+    "sim_report_log",
+    "clear_sim_report_log",
     "last_verify_report",
     "functional_config",
     "profile_timelines",
@@ -111,6 +120,7 @@ __all__ = [
     "timing_report",
     "ValueMeta",
     "OpLowering",
+    "StateBinding",
     "CompiledTracedProgram",
     "compile_traced_program",
     "execute_traced_program",
@@ -142,6 +152,30 @@ def last_verify_report() -> Tuple[VerifyReport, ...]:
     functional + timing pair for a compiled traced program).  Empty when the
     last call ran with ``verify=False``."""
     return tuple(getattr(_tls, "verify_reports", ()))
+
+
+SIM_REPORT_LOG_SIZE = 64
+
+
+def _stash_report(rep: "SimReport") -> None:
+    _tls.report = rep
+    log = getattr(_tls, "report_log", None)
+    if log is None:
+        log = _tls.report_log = collections.deque(maxlen=SIM_REPORT_LOG_SIZE)
+    log.append(rep)
+
+
+def sim_report_log() -> Tuple["SimReport", ...]:
+    """Bounded ring of the most recent pimsab reports on this thread, oldest
+    first (capacity :data:`SIM_REPORT_LOG_SIZE`).  Multi-step drivers — the
+    serve scheduler aggregating per-decode-step tokens/sec — read the whole
+    window instead of racing :func:`last_sim_report` call by call."""
+    return tuple(getattr(_tls, "report_log", ()))
+
+
+def clear_sim_report_log() -> None:
+    """Empty this thread's report ring (test isolation between serve runs)."""
+    getattr(_tls, "report_log", collections.deque()).clear()
 
 
 @contextlib.contextmanager
@@ -294,7 +328,10 @@ class _DataPlane:
         else:
             self.n_chunks = 1
         self.counts: Dict[Tuple[str, int], int] = {}
-        if w.op == "scan_mac":
+        # ops whose output is (data, reduce)-shaped: one field per reduce
+        # index per lane, stored field-by-field (scan_mac's trajectory, a
+        # softmax row, a kv_append cache row)
+        if w.op in ("scan_mac", "softmax", "kv_append"):
             self.out = np.zeros((self.d, self.k), np.int64)
         else:
             self.out = np.zeros(self.d, np.int64)
@@ -348,7 +385,7 @@ class _DataPlane:
         step, kc = divmod(cnt, self.n_chunks)
         out_idx, valid = self._out_positions(tile, step, g)
         vals = self._data_vals(np.where(valid, out_idx, 0))
-        ref = self.w.ins[0] if ins.tag == "in_a" else self.w.ins[1]
+        ref = self.w.ins[{"in_a": 0, "in_b": 1, "in_c": 2}[ins.tag]]
         # all fields of the slab gather in one shot: reduce-loop index arrays
         # are (fields, lanes), data-loop ones stay (lanes,) and broadcast
         j = np.arange(ins.fields)[:, None]
@@ -366,7 +403,7 @@ class _DataPlane:
         key = ("out", tile)
         cnt = self.counts.get(key, 0)
         self.counts[key] = cnt + 1
-        if self.w.op == "scan_mac":
+        if self.w.op in ("scan_mac", "softmax", "kv_append"):
             step, t_idx = divmod(cnt, self.k)
         else:
             step, t_idx = cnt, None
@@ -484,7 +521,7 @@ def execute_workload(
     rep = timing_report(
         w, kernel=kernel, cfg=cfg_timing or TIMING_CFG, functional_instrs=sim.res.instrs
     )
-    _tls.report = rep
+    _stash_report(rep)
     return out, rep
 
 
@@ -959,6 +996,191 @@ def _global_avgpool_pimsab(x, **_) -> jnp.ndarray:
     wl = _avgpool_workload(f"global_avgpool_{n}x{c}_k{h * w}", n * c, h * w, pa, shift)
     out = _avgpool_execute("global_avgpool", wl, xv.reshape(n * c, h * w))
     return jnp.asarray(out.reshape(n, c).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# transformer-serving lowerings: attention, fixed-point softmax, KV cache
+# ---------------------------------------------------------------------------
+
+
+def _softmax_workload(name: str, r: int, t: int, pin: int, in_frac: int) -> Workload:
+    if in_frac < SOFTMAX_F - SOFTMAX_K:
+        raise NotImplementedError(
+            f"{name}: the fixed-point softmax range reduction reads the "
+            f"shifted accumulator window, which needs at least "
+            f"{SOFTMAX_F - SOFTMAX_K} input fraction bits (got {in_frac})"
+        )
+    return Workload(
+        name=name,
+        loops=(Loop("r", r, "data"), Loop("t", t, "reduce")),
+        out=Ref("p", ("r", "t"), prec=softmax_out_prec(), frac=SOFTMAX_F),
+        ins=(Ref("x", ("r", "t"), prec=pin, frac=in_frac),),
+        op="softmax",
+        acc_prec=softmax_out_prec(),
+    )
+
+
+def _kv_append_workload(name: str, t: int, d: int, prec: int) -> Workload:
+    return Workload(
+        name=name,
+        loops=(Loop("t", t, "data"), Loop("j", d, "reduce")),
+        out=Ref("out", ("t", "j"), prec=prec),
+        ins=(
+            Ref("cache", ("t", "j"), prec=prec),
+            Ref("new", ("j",), prec=prec),
+            Ref("onehot", ("t",), prec=2),
+        ),
+        op="kv_append",
+        acc_prec=prec,
+    )
+
+
+def _pv_workload(name: str, mm: int, nn: int, kk: int, pa: int, pb: int,
+                 shift: int) -> Workload:
+    sum_prec = min(adaptive_precision(pa, pb, kk, "mac"), 32)
+    return Workload(
+        name=name,
+        loops=(Loop("x", mm, "data"), Loop("y", nn, "data"), Loop("k", kk, "reduce")),
+        out=Ref("c", ("x", "y"), prec=max(2, sum_prec - shift)),
+        ins=(Ref("a", ("x", "k"), prec=pa), Ref("b", ("k", "y"), prec=pb)),
+        op="mac",
+        acc_prec=32,
+        div_shift=shift,
+    )
+
+
+def _check_onehot(name: str, ov: np.ndarray) -> None:
+    if not np.isin(ov, (0, 1)).all() or int(ov.sum()) > 1:
+        raise ValueError(
+            f"{name}: the row selector must be one-hot (or all-zero for a "
+            "no-op append); it latches the PE mask directly"
+        )
+
+
+@register_pimsab_impl("attention_qk")
+def _attention_qk_pimsab(
+    q, k, *, q_bits: Optional[int] = None, k_bits: Optional[int] = None, **_
+) -> jnp.ndarray:
+    """(M, D) × (T, D) → (M, T) raw-integer attention scores q·Kᵀ: the mac
+    gemm with the key cache as the shared operand — lane y holds key row y's
+    head-dim fields, which is exactly the layout ``kv_append`` leaves behind,
+    so in program mode the K cache chains CRAM-resident into this reduction."""
+    qv, kv = _require_concrete("attention_qk", q, k)
+    _require_int("attention_qk", qv, kv)
+    mm, dd = qv.shape
+    tt, dd2 = kv.shape
+    assert dd == dd2, (dd, dd2)
+    pa = _hint_bits(q_bits, qv)
+    pb = _hint_bits(k_bits, kv)
+    wl = _gemm_workload(f"attention_qk_{mm}x{tt}x{dd}", mm, tt, dd, pa, pb)
+    out, _ = execute_workload(
+        wl, {"a": qv.astype(np.int64), "b": kv.T.astype(np.int64)},
+        kernel="attention_qk",
+    )
+    return jnp.asarray(out.reshape(mm, tt).astype(np.int32))
+
+
+@register_pimsab_impl("softmax_fixedpoint")
+def _softmax_fixedpoint_pimsab(
+    x, *, in_frac: int, in_bits: Optional[int] = None, **_
+) -> jnp.ndarray:
+    """Row softmax in pure fixed point (§V-C bit-serial-aware): exact row max
+    via the CmpGE/mask tournament, exp via a squared-polynomial in the
+    ``2^-SOFTMAX_F`` domain with every ``>>`` a free shifted-window read, the
+    normalizer via restoring division against the RF constant path.  Inputs
+    are integers with ``in_frac`` fraction bits; outputs are integer
+    probabilities with ``SOFTMAX_F`` fraction bits (rows sum to ≈ ``2**F``)."""
+    (xv,) = _require_concrete("softmax_fixedpoint", x)
+    _require_int("softmax_fixedpoint", xv)
+    r, t = xv.shape
+    in_frac = int(in_frac)
+    pin = max(_hint_bits(in_bits, xv), in_frac + SOFTMAX_K)
+    wl = _softmax_workload(f"softmax_fixedpoint_{r}x{t}", r, t, pin, in_frac)
+    out, _ = execute_workload(
+        wl, {"x": xv.astype(np.int64)}, kernel="softmax_fixedpoint"
+    )
+    return jnp.asarray(out.reshape(r, t).astype(np.int32))
+
+
+@register_pimsab_impl("attention_pv")
+def _attention_pv_pimsab(
+    p, v, *, shift: int = SOFTMAX_F,
+    p_bits: Optional[int] = None, v_bits: Optional[int] = None, **_
+) -> jnp.ndarray:
+    """(M, T) × (T, Dv) → (M, Dv) probability-weighted value mix: a mac gemm
+    whose store reads the accumulator ``shift`` wordlines up — the free
+    arithmetic ``>>`` that renormalizes the ``SOFTMAX_F``-frac probabilities
+    back to the value scale (floor semantics, bit-exact)."""
+    pv_, vv = _require_concrete("attention_pv", p, v)
+    _require_int("attention_pv", pv_, vv)
+    mm, tt = pv_.shape
+    tt2, nn = vv.shape
+    assert tt == tt2, (tt, tt2)
+    pa = _hint_bits(p_bits, pv_)
+    pb = _hint_bits(v_bits, vv)
+    wl = _pv_workload(f"attention_pv_{mm}x{nn}x{tt}", mm, nn, tt, pa, pb, int(shift))
+    out, _ = execute_workload(
+        wl, {"a": pv_.astype(np.int64), "b": vv.astype(np.int64)},
+        kernel="attention_pv",
+    )
+    return jnp.asarray(out.reshape(mm, nn).astype(np.int32))
+
+
+@register_pimsab_impl("decode_gemv")
+def _decode_gemv_pimsab(
+    w, x, *, w_bits: Optional[int] = None, x_bits: Optional[int] = None, **_
+) -> jnp.ndarray:
+    """(M, K) × (K,) → (M,) single-token decode projection: the activation
+    vector is the *shared* operand, so instead of broadcasting it through the
+    NoC it rides the RF constant path — one ``RfLoad`` + ``MacConst`` per
+    reduction index, every lane multiplying its resident weight row (the
+    paper's constant-operand rows, §V-B)."""
+    wv, xv = _require_concrete("decode_gemv", w, x)
+    _require_int("decode_gemv", wv, xv)
+    mm, kk = wv.shape
+    (kk2,) = xv.shape
+    assert kk == kk2, (kk, kk2)
+    pa = _hint_bits(w_bits, wv)
+    pb = _hint_bits(x_bits, xv)
+    wl = Workload(
+        name=f"decode_gemv_{mm}x{kk}",
+        loops=(Loop("x", mm, "data"), Loop("k", kk, "reduce")),
+        out=Ref("y", ("x",), prec=32),
+        ins=(
+            Ref("a", ("x", "k"), prec=pa),
+            Ref("b", ("k",), prec=pb, is_const=True,
+                const_value=tuple(int(v) for v in xv)),
+        ),
+        op="mac",
+        acc_prec=32,
+    )
+    out, _ = execute_workload(wl, {"a": wv.astype(np.int64)}, kernel="decode_gemv")
+    return jnp.asarray(out.reshape(mm).astype(np.int32))
+
+
+@register_pimsab_impl("kv_append")
+def _kv_append_pimsab(cache, new, onehot, **_) -> jnp.ndarray:
+    """(T, D) cache with the row selected by the one-hot ``onehot`` replaced
+    by ``new`` — the relu/maxpool predication idiom turned into a scatter:
+    the selector latches the PE mask and the new row's fields overwrite only
+    the masked lane.  As a ``ResidentState`` updater in program mode, in_a
+    and out pin to the same reserved wordlines and the append never touches
+    DRAM."""
+    cv, nv, ov = _require_concrete("kv_append", cache, new, onehot)
+    _require_int("kv_append", cv, nv, ov)
+    _check_onehot("kv_append", ov)
+    t, d = cv.shape
+    assert nv.shape == (d,), (nv.shape, d)
+    assert ov.shape == (t,), (ov.shape, t)
+    prec = max(_int_bits(cv), _int_bits(nv))
+    wl = _kv_append_workload(f"kv_append_{t}x{d}", t, d, prec)
+    out, _ = execute_workload(
+        wl,
+        {"cache": cv.astype(np.int64), "new": nv.astype(np.int64),
+         "onehot": ov.astype(np.int64)},
+        kernel="kv_append",
+    )
+    return jnp.asarray(out.reshape(t, d).astype(np.asarray(cache).dtype))
 
 
 # ===========================================================================
@@ -1440,9 +1662,263 @@ def _pl_global_avgpool(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> 
     )
 
 
+def _pl_require_int(node: str, *descs: InDesc) -> None:
+    if not all(d.is_int for d in descs):
+        raise NotImplementedError(
+            f"{node}: the pimsab program lowering runs the raw-integer path; "
+            "quantize float operands first"
+        )
+
+
+@_program_lowering("attention_qk")
+def _pl_attention_qk(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    _pl_require_int(node, ins[0], ins[1])
+    mm, dd = ins[0].shape
+    tt, dd2 = ins[1].shape
+    assert dd == dd2, (dd, dd2)
+    pa = _pl_int_in_bits(ins[0], kwargs.get("q_bits"))
+    pb = _pl_int_in_bits(ins[1], kwargs.get("k_bits"))
+    out_prec = min(adaptive_precision(pa, pb, dd, "mac"), 32)
+    out_bits = kwargs.get("out_bits")
+    # `out_bits` is the caller's profiled score envelope (§V-C adaptive
+    # precision): it narrows what downstream lowerings (softmax's scratch
+    # layout) size against, not the accumulator itself
+    meta_prec = min(out_prec, _clamp_bits(out_bits)) if out_bits else out_prec
+
+    def bind(vals):
+        a = np.asarray(vals[0]).astype(np.int64)
+        # the DRAM path wants the shared operand as (k, y) = Kᵀ; the resident
+        # path (vals[1] is None) reads the kv_append layout in place, which
+        # already holds key row y's fields on lane y
+        b = None if vals[1] is None else np.asarray(vals[1]).astype(np.int64).T
+        return {"a": a, "b": b}, None, None
+
+    def finalize(raw, _state):
+        return raw.reshape(mm, tt).astype(np.int32)
+
+    return OpLowering(
+        workload=_gemm_workload(node, mm, tt, dd, pa, pb),
+        out_meta=ValueMeta((mm, tt), meta_prec, 0, "int", "int32"),
+        chainable=True,
+        chained={"in_b": 1} if ins[1].meta is not None else {},
+        bind=bind,
+        finalize=finalize,
+    )
+
+
+@_program_lowering("softmax_fixedpoint")
+def _pl_softmax_fixedpoint(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    _pl_require_int(node, ins[0])
+    if kwargs.get("in_frac") is None:
+        raise ValueError(f"{node}: softmax_fixedpoint needs the in_frac kwarg")
+    in_frac = int(kwargs["in_frac"])
+    r, t = ins[0].shape
+    pin = max(_pl_int_in_bits(ins[0], kwargs.get("in_bits")),
+              in_frac + SOFTMAX_K)
+    wl = _softmax_workload(node, r, t, pin, in_frac)
+
+    def bind(vals):
+        return {"x": np.asarray(vals[0]).astype(np.int64)}, None, None
+
+    def finalize(raw, _state):
+        return raw.reshape(r, t).astype(np.int32)
+
+    return OpLowering(
+        workload=wl,
+        out_meta=ValueMeta((r, t), softmax_out_prec(), 0, "int", "int32"),
+        chainable=True,
+        chained={},
+        bind=bind,
+        finalize=finalize,
+    )
+
+
+@_program_lowering("attention_pv")
+def _pl_attention_pv(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    _pl_require_int(node, ins[0], ins[1])
+    mm, tt = ins[0].shape
+    tt2, nn = ins[1].shape
+    assert tt == tt2, (tt, tt2)
+    shift = int(kwargs.get("shift", SOFTMAX_F))
+    pa = _pl_int_in_bits(ins[0], kwargs.get("p_bits"))
+    pb = _pl_int_in_bits(ins[1], kwargs.get("v_bits"))
+    wl = _pv_workload(node, mm, nn, tt, pa, pb, shift)
+
+    def bind(vals):
+        # the V cache is never chained: kv_append leaves lane t holding row
+        # t's head-dim fields, but this reduction wants lane y to hold column
+        # y's *time* fields — a transposed layout, so V always round-trips
+        # DRAM (the KV-residency contract documented in docs/serving.md)
+        return (
+            {"a": np.asarray(vals[0]).astype(np.int64),
+             "b": np.asarray(vals[1]).astype(np.int64)},
+            None, None,
+        )
+
+    def finalize(raw, _state):
+        return raw.reshape(mm, nn).astype(np.int32)
+
+    return OpLowering(
+        workload=wl,
+        out_meta=ValueMeta((mm, nn), wl.out.prec, 0, "int", "int32"),
+        chainable=True,
+        chained={},
+        bind=bind,
+        finalize=finalize,
+    )
+
+
+@_program_lowering("decode_gemv")
+def _pl_decode_gemv(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    _pl_require_int(node, ins[0], ins[1])
+    mm, kk = ins[0].shape
+    (kk2,) = ins[1].shape
+    assert kk == kk2, (kk, kk2)
+    pa = _pl_int_in_bits(ins[0], kwargs.get("w_bits"))
+    pb = _pl_int_in_bits(ins[1], kwargs.get("x_bits"))
+    out_prec = min(adaptive_precision(pa, pb, kk, "mac"), 32)
+    # the eager path bakes the activation into RF constants (its values are
+    # in hand); a compiled program replays with fresh activations, so the
+    # vector becomes the broadcast shared operand of a width-1 gemm instead
+    wl = _gemm_workload(node, mm, 1, kk, pa, pb)
+
+    def bind(vals):
+        return (
+            {"a": np.asarray(vals[0]).astype(np.int64),
+             "b": np.asarray(vals[1]).astype(np.int64).reshape(kk, 1)},
+            None, None,
+        )
+
+    def finalize(raw, _state):
+        return raw.reshape(mm).astype(np.int32)
+
+    return OpLowering(
+        workload=wl,
+        out_meta=ValueMeta((mm,), out_prec, 0, "int", "int32"),
+        chainable=True,
+        chained={},
+        bind=bind,
+        finalize=finalize,
+    )
+
+
+@_program_lowering("kv_append")
+def _pl_kv_append(node: str, ins: List[InDesc], kwargs: Dict[str, Any]) -> OpLowering:
+    _pl_require_int(node, ins[0], ins[1])
+    tt, dd = ins[0].shape
+    (dd2,) = ins[1].shape
+    (tt2,) = ins[2].shape
+    assert dd == dd2 and tt == tt2, (ins[0].shape, ins[1].shape, ins[2].shape)
+    prec = max(_pl_int_in_bits(ins[0], kwargs.get("bits")),
+               _pl_int_in_bits(ins[1], kwargs.get("bits")))
+    out_dtype = ins[0].aval[1]
+    wl = _kv_append_workload(node, tt, dd, prec)
+
+    def bind(vals):
+        # vals[0] is None when the cache is a CRAM-resident ResidentState:
+        # the executor seeded the reserved wordlines and in_a issues no loads
+        cache = None if vals[0] is None else np.asarray(vals[0]).astype(np.int64)
+        ov = np.asarray(vals[2]).astype(np.int64)
+        _check_onehot(node, ov)
+        return (
+            {"cache": cache, "new": np.asarray(vals[1]).astype(np.int64),
+             "onehot": ov},
+            None, None,
+        )
+
+    def finalize(raw, _state):
+        return raw.reshape(tt, dd).astype(np.dtype(out_dtype))
+
+    return OpLowering(
+        workload=wl,
+        out_meta=ValueMeta((tt, dd), prec, 0, "int", out_dtype),
+        chainable=True,
+        chained={},
+        bind=bind,
+        finalize=finalize,
+    )
+
+
 # ---------------------------------------------------------------------------
 # graph assembly, compilation, execution
 # ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StateBinding:
+    """One :class:`~repro.kernels.program.ResidentState` bound into a
+    compiled program: the slot that names it, the ``kv_append`` node that
+    updates it, and the reserved wordline region ``[start, end)`` its rows
+    occupy on the state tile (lane t holds the ``shape[1]`` fields of cache
+    row t at ``prec`` bits each)."""
+
+    slot: int
+    name: str
+    shape: Tuple[int, int]
+    prec: int
+    node: str
+    node_idx: int
+    start: int
+    end: int
+
+
+def _plan_states(program, node_names, lowerings, cram_rows: int,
+                 state_slots) -> Tuple[StateBinding, ...]:
+    """Derive the persistent-state layout of a program: one reserved region
+    per state, stacked down from the top of the wordline space, plus the
+    unique updater node whose in_a/out pin to it.  Structural errors (no
+    updater, a second reader, spec mismatch) raise — they are programming
+    errors in the traced function, not mapping declines."""
+    if not state_slots:
+        return ()
+    bindings: List[StateBinding] = []
+    base = cram_rows
+    for slot in sorted(state_slots):
+        name, shape, prec = state_slots[slot]
+        if len(shape) != 2:
+            raise ValueError(
+                f"ResidentState {name!r} must be 2-D (rows, fields), got {shape}"
+            )
+        updaters = [
+            i for i, op in enumerate(program.ops)
+            if op.inputs and op.inputs[0] == ("slot", slot)
+            and lowerings[i].workload.op == "kv_append"
+        ]
+        if len(updaters) != 1:
+            raise ValueError(
+                f"ResidentState {name!r} (slot {slot}) needs exactly one "
+                f"kv_append node reading it as the cache operand, found "
+                f"{len(updaters)}"
+            )
+        i = updaters[0]
+        others = [
+            node_names[j] for j, op in enumerate(program.ops)
+            if j != i and ("slot", slot) in op.inputs
+        ]
+        if others:
+            raise ValueError(
+                f"ResidentState {name!r} is also read by {others}: a CRAM-"
+                "resident state is only visible through its updater's output"
+            )
+        wl = lowerings[i].workload
+        got = (wl.total_out_elems(), wl.reduce_extent(), wl.out.prec)
+        if got != (shape[0], shape[1], prec):
+            raise ValueError(
+                f"ResidentState {name!r} spec (rows, fields, prec)="
+                f"{(shape[0], shape[1], prec)} does not match its updater's "
+                f"lowering {got}"
+            )
+        base -= shape[1] * prec
+        bindings.append(StateBinding(
+            slot=slot, name=name, shape=(shape[0], shape[1]), prec=prec,
+            node=node_names[i], node_idx=i, start=base, end=base + shape[1] * prec,
+        ))
+    if base < 0:
+        raise ValueError(
+            f"persistent-state regions need {cram_rows - base} wordlines, "
+            f"exceeding the {cram_rows}-row CRAM"
+        )
+    return tuple(bindings)
 
 
 @dataclass
@@ -1458,6 +1934,7 @@ class CompiledTracedProgram:
     report: SimReport
     cfg_fn: PimsabConfig
     verify_reports: Tuple[VerifyReport, ...] = ()  # (functional, timing) when verified
+    states: Tuple[StateBinding, ...] = ()  # ResidentState layout (may be declined)
 
 
 def _build_graph(program) -> Tuple[List[str], List[OpLowering], WorkloadGraph]:
@@ -1519,6 +1996,7 @@ def compile_traced_program(
     cfg_timing: Optional[PimsabConfig] = None,
     *,
     verify: bool = True,
+    state_slots=None,
 ) -> CompiledTracedProgram:
     """Lower a traced Program into one WorkloadGraph and compile it for the
     functional machine (execution) and the full-scale machine (report).
@@ -1528,19 +2006,40 @@ def compile_traced_program(
     raises :class:`~repro.core.compiler.verify.VerifierError` on any error;
     the pair of reports attaches as ``.verify_reports`` (also surfaced via
     :func:`last_verify_report`) so cache introspection can read the plan
-    notes (residency/double-buffer declines) of the compiled artifact."""
+    notes (residency/double-buffer declines) of the compiled artifact.
+
+    ``state_slots`` maps a slot index to a ``(name, (rows, fields), prec)``
+    ResidentState spec: the slot's ``kv_append`` updater is pinned to a
+    reserved wordline region so the cache append updates CRAM in place (the
+    mapping layer may still decline — cost- or capacity-gated — in which
+    case the state transparently falls back to a host-side round-trip)."""
     cfg_fn = cfg_fn or _functional_cfg()
     cfg_t = cfg_timing or TIMING_CFG
+    assert cfg_fn.cram_rows == cfg_t.cram_rows, "state layout needs equal CRAMs"
     node_names, lowerings, graph = _build_graph(program)
-    cg_fn = compile_graph(graph, cfg_fn)
-    cg_t = compile_graph(graph, cfg_t)
+    state_bindings = _plan_states(
+        program, node_names, lowerings, cfg_fn.cram_rows, state_slots
+    )
+    pins = {
+        b.node: {"in_a": [(b.start, b.end)], "out": [(b.start, b.end)]}
+        for b in state_bindings
+    }
+    cg_fn = compile_graph(graph, cfg_fn, state_pins=pins or None)
+    cg_t = compile_graph(graph, cfg_t, state_pins=pins or None)
     vreports: Tuple[VerifyReport, ...] = ()
     if verify:
         vreports = (verify_graph(cg_fn, cfg_fn), verify_graph(cg_t, cfg_t))
         _tls.verify_reports = vreports
         for vr in vreports:
             vr.raise_on_error()
-    report = _program_report(program, cg_t, cfg_t, functional_instrs=len(cg_fn.program))
+    state_edges = tuple(
+        edge for b in state_bindings if b.node in cg_t.gm.state_pins
+        for edge in (f"state:{b.name}->{b.node}", f"{b.node}->state:{b.name}")
+    )
+    report = _program_report(
+        program, cg_t, cfg_t,
+        functional_instrs=len(cg_fn.program), state_edges=state_edges,
+    )
     return CompiledTracedProgram(
         program=program,
         node_names=tuple(node_names),
@@ -1549,6 +2048,7 @@ def compile_traced_program(
         report=report,
         cfg_fn=cfg_fn,
         verify_reports=vreports,
+        states=state_bindings,
     )
 
 
@@ -1573,7 +2073,8 @@ def timing_program_report(
 
 
 def _program_report(
-    program, cg_t: CompiledGraph, cfg: PimsabConfig, functional_instrs: int
+    program, cg_t: CompiledGraph, cfg: PimsabConfig, functional_instrs: int,
+    state_edges: Tuple[str, ...] = (),
 ) -> SimReport:
     """Aggregated timing/energy over the fused stream, attributed per node
     via the codegen segments, with the cross-kernel DRAM-traffic breakdown.
@@ -1630,14 +2131,23 @@ def _program_report(
         per_kernel=tuple(per_kernel),
         dram_traffic=traffic,
         elided_dram_bits=gm.total_elided_bits,
-        resident_edges=tuple(f"{e.src}->{e.dst}" for e in gm.resident),
+        resident_edges=tuple(f"{e.src}->{e.dst}" for e in gm.resident) + state_edges,
     )
 
 
-def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> List[Any]:
+def execute_traced_program(
+    ctp: CompiledTracedProgram, leaves: List[Any], states=None
+) -> List[Any]:
     """Run the fused functional stream with fresh slot values; returns the
     program's output leaves (JAX arrays) and stashes the aggregated report
-    for :func:`last_sim_report`."""
+    for :func:`last_sim_report`.
+
+    ``states`` maps slot index → ResidentState handle, one per binding in
+    ``ctp.states``.  Handles of CRAM-resident (accepted) states are seeded
+    into the reserved wordlines before the stream and harvested back after
+    it — the slot's *leaf* value is ignored, the handle is the source of
+    truth.  Declined states fall back transparently: the handle's value
+    streams through DRAM and the updater's finalized output is written back."""
     import dataclasses
 
     program = ctp.program
@@ -1645,10 +2155,47 @@ def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> Lis
     cfg = ctp.cfg_fn
     idx_of = {n: i for i, n in enumerate(ctp.node_names)}
     planes: Dict[str, _DataPlane] = {}
-    states: Dict[int, Any] = {}
+    bind_states: Dict[int, Any] = {}
     values: Dict[int, np.ndarray] = {}
 
+    state_by_node: Dict[str, Tuple[StateBinding, Any]] = {}
+    state_by_slot: Dict[int, Tuple[StateBinding, Any]] = {}
+    for b in ctp.states:
+        h = (states or {}).get(b.slot)
+        if h is None:
+            raise ValueError(
+                f"program {program.name!r} was compiled with ResidentState "
+                f"{b.name!r} on slot {b.slot}, but no handle was bound for it"
+            )
+        if (h.name, tuple(h.shape), int(h.prec)) != (b.name, b.shape, b.prec):
+            raise ValueError(
+                f"state handle {h.name!r} {(tuple(h.shape), int(h.prec))} does "
+                f"not match the compiled spec {b.name!r} {(b.shape, b.prec)}"
+            )
+        state_by_node[b.node] = (b, h)
+        state_by_slot[b.slot] = (b, h)
+    # a state is CRAM-resident only if the mapping layer accepted its pins
+    accepted = {n: bh for n, bh in state_by_node.items() if n in gm.state_pins}
+
+    sim = Simulator(cfg, functional=True)
+
+    def _seed_state(b: StateBinding, h) -> None:
+        vals = np.asarray(h.value, np.int64)
+        for j in range(b.shape[1]):
+            _write_lanes(sim, 0, b.start + j * b.prec, vals[:, j], b.prec)
+
+    def _harvest_state(b: StateBinding) -> np.ndarray:
+        return np.stack(
+            [_read_lanes(sim, 0, b.start + j * b.prec, b.prec, b.shape[0])
+             for j in range(b.shape[1])],
+            axis=1,
+        )
+
     def slot_value(j: int) -> np.ndarray:
+        if j in state_by_slot:
+            # state-bound slot: the handle, never the leaf (the leaf is an
+            # aval-matching placeholder)
+            return state_by_slot[j][1].value
         v = static_value(leaves[j])
         if v is None:
             raise PimsabTracerError(
@@ -1660,13 +2207,21 @@ def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> Lis
     def node_value(j: int) -> np.ndarray:
         if j not in values:
             node = ctp.node_names[j]
+            if node in accepted:
+                # state updater with elided stores: the value lives in the
+                # reserved wordlines, not on the data plane
+                b, _h = accepted[node]
+                values[j] = ctp.lowerings[j].finalize(
+                    _harvest_state(b), bind_states.get(j)
+                )
+                return values[j]
             plane = planes.get(node)
             if plane is None:
                 raise RuntimeError(
                     f"value of {node} requested before its stores executed "
                     "(graph not topologically ordered?)"
                 )
-            values[j] = ctp.lowerings[j].finalize(plane.out, states.get(j))
+            values[j] = ctp.lowerings[j].finalize(plane.out, bind_states.get(j))
         return values[j]
 
     def resolve(ref) -> np.ndarray:
@@ -1683,12 +2238,14 @@ def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> Lis
         resident_pos = {
             pos for buf, pos in low.chained.items() if gm.is_resident(node, buf)
         }
+        if "in_a" in gm.state_elides(node):
+            resident_pos.add(0)  # the updater's cache input reads CRAM in place
         vals = [
             None if pos in resident_pos else resolve(ref)
             for pos, ref in enumerate(program.ops[i].inputs)
         ]
         arrays, h0, state = low.bind(vals)
-        states[i] = state
+        bind_states[i] = state
         plane = _DataPlane(low.workload, gm.mappings[node], cfg, arrays, h0=h0)
         planes[node] = plane
         return plane
@@ -1700,7 +2257,8 @@ def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> Lis
             plane = bind_node(idx_of[node])
         return plane, stream, idx_of[node]
 
-    sim = Simulator(cfg, functional=True)
+    for b, h in accepted.values():
+        _seed_state(b, h)
     for ins in ctp.cg_fn.program:
         if isinstance(ins, isa.DramLoad) and ins.tag:
             plane, stream, i = plane_for(ins.tag)
@@ -1719,6 +2277,14 @@ def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> Lis
                     stripped, t,
                     lambda addr, prec, _t=t: _read_lanes(sim, _t, addr, prec, m.lanes_used),
                 )
+    # write the post-step cache back into every handle: harvested from the
+    # reserved wordlines when resident, or the updater's finalized output
+    # when the mapping declined residency
+    for node, (b, h) in state_by_node.items():
+        if node in accepted:
+            h.value = _harvest_state(b)
+        else:
+            h.value = np.asarray(node_value(b.node_idx), np.int64).reshape(b.shape)
     out_leaves = []
     for (kind, j) in program.out_refs:
         if kind == "node":
@@ -1727,5 +2293,5 @@ def execute_traced_program(ctp: CompiledTracedProgram, leaves: List[Any]) -> Lis
             out_leaves.append(leaves[j])
         else:
             out_leaves.append(jnp.asarray(program.consts[j]))
-    _tls.report = ctp.report
+    _stash_report(ctp.report)
     return out_leaves

@@ -52,6 +52,7 @@ __all__ = [
     "Program",
     "TracedFunction",
     "trace",
+    "ResidentState",
     "Executor",
     "compile_program",
     "compile_cache_info",
@@ -335,6 +336,63 @@ def trace(fn: Callable[..., Any], *, name: Optional[str] = None) -> TracedFuncti
 # ---------------------------------------------------------------------------
 
 
+class ResidentState:
+    """A persistent integer tensor the pimsab backend keeps CRAM-resident
+    across program executions — the serve engine's KV cache.
+
+    The handle names a ``(rows, fields)`` array stored at ``prec`` bits per
+    field.  Bind it to a traced program's slot via
+    ``compile_program(prog, states={slot_index: handle})``: the compiler
+    reserves a wordline region for it, pins the slot's ``kv_append`` updater
+    to that region (in_a and out alias — the append updates CRAM in place,
+    zero DRAM traffic for the cache), and the executor seeds/harvests the
+    region around each run.  ``.value`` always mirrors the logical cache
+    after the most recent execution, so host-side swapping (the continuous-
+    batching scheduler parking an evicted request's cache) is just reading
+    and reassigning ``.value``.
+
+    The slot still takes an aval-matching argument at call time — pass
+    :meth:`placeholder`; its contents are ignored for state-bound slots.
+    When the mapping layer *declines* residency (capacity or cost-model
+    gated, see the compile's N-PLAN notes), execution transparently falls
+    back to streaming ``.value`` through DRAM — same results, no silent
+    wrong answers."""
+
+    def __init__(self, name: str, shape: Tuple[int, int], prec: int,
+                 dtype: str = "int8", init: Optional[np.ndarray] = None):
+        if len(shape) != 2:
+            raise ValueError(f"ResidentState {name!r} must be 2-D (rows, fields)")
+        self.name = str(name)
+        self.shape = (int(shape[0]), int(shape[1]))
+        self.prec = int(prec)
+        self.dtype = np.dtype(dtype)
+        self.value = (
+            np.zeros(self.shape, np.int64) if init is None
+            else np.asarray(init, np.int64).copy()
+        )
+        if self.value.shape != self.shape:
+            raise ValueError(
+                f"ResidentState {name!r} init shape {self.value.shape} != {self.shape}"
+            )
+
+    def spec(self) -> Tuple[str, Tuple[int, int], int]:
+        """The hashable compile-key identity: (name, shape, prec)."""
+        return (self.name, self.shape, self.prec)
+
+    def placeholder(self) -> np.ndarray:
+        """An aval-matching argument for the state's slot — the compiled
+        program reads the CRAM-resident value, never this array."""
+        return np.zeros(self.shape, self.dtype)
+
+    def to_array(self) -> np.ndarray:
+        """The logical cache at its declared dtype (a copy)."""
+        return self.value.astype(self.dtype)
+
+    def __repr__(self) -> str:
+        return (f"ResidentState({self.name!r}, shape={self.shape}, "
+                f"prec={self.prec})")
+
+
 @dataclass(frozen=True)
 class CacheInfo:
     """Compile-cache counters plus one metadata record per cached Executor.
@@ -366,6 +424,16 @@ class Executor:
         self._run = run
         self.report = report  # aggregated SimReport (pimsab), else None
         self.verify_reports = verify_reports  # VerifyReports (pimsab verify=True)
+        self.states: Optional[Dict[int, "ResidentState"]] = None
+
+    def bind_states(self, states: Dict[int, "ResidentState"]) -> None:
+        """Swap in the ResidentState handles the next calls seed/harvest.
+
+        The compiled artifact is keyed on state *specs*, not handles, so one
+        executor serves many requests: the continuous-batching scheduler
+        rebinds each request's caches before its decode step (spec-
+        compatible handles only — the executor validates at run time)."""
+        self.states = dict(states)
 
     def __call__(self, *args, **kwargs):
         leaves, in_tree = jax.tree_util.tree_flatten((args, kwargs))
@@ -502,7 +570,8 @@ def _executor_meta(ex: "Executor") -> Dict[str, Any]:
 
 
 def compile_program(program: Program, backend: Optional[str] = None, *,
-                    verify: bool = True) -> Executor:
+                    verify: bool = True,
+                    states: Optional[Dict[int, ResidentState]] = None) -> Executor:
     """Lower ``program`` for ``backend`` (default: the active backend) and
     return the Executor — cached on (signature, backend[, machine config,
     verify]), so an identical second compile is a pure cache hit.
@@ -513,7 +582,13 @@ def compile_program(program: Program, backend: Optional[str] = None, *,
     :class:`repro.core.compiler.verify.VerifierError` on any error; the
     verifier summary (including plan-decline notes) is recorded on the cache
     entry, visible via :func:`compile_cache_info`.  The flag is a no-op on
-    the jax-side backends."""
+    the jax-side backends.
+
+    ``states`` (pimsab only) maps slot index → :class:`ResidentState`: the
+    slot's KV cache stays CRAM-resident across calls.  The cache key carries
+    the state *specs*, so spec-identical handles share one executor — use
+    :meth:`Executor.bind_states` (done here automatically) to swap handles
+    between calls."""
     from repro.kernels import api
 
     backend = api._check_backend(backend or api.current_backend())
@@ -521,18 +596,38 @@ def compile_program(program: Program, backend: Optional[str] = None, *,
     if backend == "pimsab":
         from repro.kernels import pimsab_backend as pb
 
-        key = key + (pb._functional_cfg(), bool(verify))
+        state_specs = tuple(sorted(
+            (slot, st.spec()) for slot, st in (states or {}).items()
+        ))
+        key = key + (pb._functional_cfg(), bool(verify), state_specs)
 
         def build() -> Executor:
-            compiled = pb.compile_traced_program(program, verify=verify)
-            return Executor(
+            compiled = pb.compile_traced_program(
+                program, verify=verify,
+                state_slots={slot: st.spec() for slot, st in states.items()}
+                if states else None,
+            )
+            ex = Executor(
                 program, backend,
-                run=lambda leaves: pb.execute_traced_program(compiled, leaves),
+                run=None,  # set below: the closure reads ex.states per call
                 report=compiled.report,
                 verify_reports=compiled.verify_reports,
             )
+            ex._run = lambda leaves: pb.execute_traced_program(
+                compiled, leaves, states=ex.states
+            )
+            return ex
     else:
+        if states:
+            raise NotImplementedError(
+                "ResidentState is a pimsab-backend concept; the jax-side "
+                "backends replay the whole chain functionally"
+            )
+
         def build() -> Executor:
             return Executor(program, backend, run=_jax_run(program, backend))
 
-    return cached_executable(key, build, meta=_executor_meta)
+    ex = cached_executable(key, build, meta=_executor_meta)
+    if states is not None:
+        ex.bind_states(states)
+    return ex

@@ -271,3 +271,123 @@ def global_avgpool_ref(x: jnp.ndarray) -> jnp.ndarray:
         axis=-1,
     )
     return _pool_mean(s, h * w)
+
+
+# ---------------------------------------------------------------------------
+# transformer decode (attention + KV cache) — the serving subsystem's kernel
+# set.  All-integer: the pimsab lowering is bit-exact against these, so every
+# shift below is an *arithmetic* shift (floor), matching the machine's
+# shifted-wordline-window reads.
+# ---------------------------------------------------------------------------
+
+# Mirrors of repro.core.compiler.allocation's fixed-point softmax constants.
+# Duplicated (not imported) so the TPU oracle path never pulls in the DSL
+# compiler; tests assert the two stay equal.
+SOFTMAX_F = 6    # fraction bits of exponentials and output probabilities
+SOFTMAX_K = 3    # range-reduction squarings: exp(t) ≈ (quad(t/2^K))^(2^K)
+SOFTMAX_FI = 8   # extra fraction bits of the row-sum reciprocal
+
+
+def attention_qk_ref(
+    q: jnp.ndarray, k: jnp.ndarray, *,
+    q_bits: Optional[int] = None, k_bits: Optional[int] = None,
+    out_bits: Optional[int] = None,
+) -> jnp.ndarray:
+    """(M, D) query block × (T, D) key cache → (M, T) int32 scores q·Kᵀ.
+
+    ``q_bits``/``k_bits`` are static precision hints for the pimsab lowering.
+    ``out_bits`` is the *caller's promise* that every score fits that many
+    signed bits — in program mode it clamps the score field width so the
+    downstream fixed-point softmax scratch stays small; scores that overflow
+    it wrap on the machine (the oracle does not), so size it from your
+    quantizer's worst case.
+    """
+    del q_bits, k_bits, out_bits
+    return jax.lax.dot_general(
+        q.astype(jnp.int32), k.astype(jnp.int32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def softmax_fixedpoint_ref(
+    x: jnp.ndarray, *, in_frac: int, in_bits: Optional[int] = None
+) -> jnp.ndarray:
+    """Bit-exact fixed-point row softmax over the last axis of (R, T) ints.
+
+    Inputs carry ``in_frac`` fraction bits; outputs are integer probabilities
+    with ``SOFTMAX_F`` fraction bits (rows sum to ≈ ``2**SOFTMAX_F``).  The
+    recipe is exactly the machine's (§V-C bit-serial-aware), every ``>>``
+    arithmetic/floor:
+
+        t   = x - rowmax(x)                   # exact max via CmpGE tournament
+        tcl = max(t, -2^(F+σ));  u = tcl >> σ          σ = in_frac - F + K
+        w   = u + 2^F + (u² >> (F+1))         # quadratic seed of exp(u/2^F)
+        w   = (w² >> F)  (K times)            # undo the 2^K range reduction
+        q   = 2^(FI+F) // Σ_t w               # restoring division
+        p   = (w · q) >> FI
+
+    Requires ``in_frac >= SOFTMAX_F - SOFTMAX_K`` (the range reduction reads
+    the shifted accumulator window, which cannot shift left).
+    """
+    f, kk, fi = SOFTMAX_F, SOFTMAX_K, SOFTMAX_FI
+    in_frac = int(in_frac)
+    del in_bits
+    if in_frac < f - kk:
+        raise NotImplementedError(
+            f"softmax_fixedpoint needs in_frac >= {f - kk} (got {in_frac})"
+        )
+    sigma = in_frac - f + kk
+    xi = x.astype(jnp.int64)
+    t = xi - jnp.max(xi, axis=-1, keepdims=True)
+    tcl = jnp.maximum(t, -(1 << (f + sigma)))
+    u = jnp.right_shift(tcl, sigma)
+    w = u + (1 << f) + jnp.right_shift(u * u, f + 1)
+    for _ in range(kk):
+        w = jnp.right_shift(w * w, f)
+    s = jnp.sum(w, axis=-1, keepdims=True)
+    q = (1 << (fi + f)) // s
+    return jnp.right_shift(w * q, fi).astype(jnp.int32)
+
+
+def attention_pv_ref(
+    p: jnp.ndarray, v: jnp.ndarray, *, shift: int = SOFTMAX_F,
+    p_bits: Optional[int] = None, v_bits: Optional[int] = None,
+) -> jnp.ndarray:
+    """(M, T) probabilities × (T, Dv) value cache → (M, Dv) int32 mix.
+
+    The int32 accumulator is read ``shift`` wordlines up on the machine — a
+    free arithmetic ``>>`` (floor) that renormalizes ``SOFTMAX_F``-fraction
+    probabilities back to the value scale; the oracle floors identically.
+    """
+    del p_bits, v_bits
+    acc = jax.lax.dot_general(
+        p.astype(jnp.int32), v.astype(jnp.int32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return jnp.right_shift(acc, shift)
+
+
+def decode_gemv_ref(
+    w: jnp.ndarray, x: jnp.ndarray, *,
+    w_bits: Optional[int] = None, x_bits: Optional[int] = None,
+) -> jnp.ndarray:
+    """(M, K) weights × (K,) activation → (M,) int32 — the single-token
+    decode projection (on pimsab the activation rides the RF constant path
+    instead of the NoC broadcast)."""
+    del w_bits, x_bits
+    return jax.lax.dot_general(
+        w.astype(jnp.int32), x.astype(jnp.int32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def kv_append_ref(
+    cache: jnp.ndarray, new: jnp.ndarray, onehot: jnp.ndarray
+) -> jnp.ndarray:
+    """(T, D) cache with the row selected by the one-hot (T,) ``onehot``
+    replaced by the (D,) ``new`` row; an all-zero selector is a no-op.
+    Returns the updated cache in the cache's dtype (as a ``ResidentState``
+    updater the pimsab program performs this in place on reserved CRAM
+    wordlines)."""
+    sel = (onehot != 0)[:, None]
+    return jnp.where(sel, new[None, :].astype(cache.dtype), cache)

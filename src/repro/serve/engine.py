@@ -115,6 +115,13 @@ class ServeEngine:
         eos: int = -1,
         backend: Optional[str] = None,
     ):
+        """``eos`` is the token id that retires a request the moment it is
+        generated; the default ``-1`` is an explicit "never" sentinel (no
+        vocabulary id is negative, so decode only stops at
+        ``max_new_tokens``).  Retired lanes keep their batch slot — the
+        static shapes require it — but their token feed is masked to the pad
+        id so the cache never ingests post-eos garbage; for slot reclamation
+        see ``repro.serve.scheduler.ContinuousBatcher``."""
         self.cfg, self.flags, self.max_len, self.eos = cfg, flags, max_len, eos
         self.backend = backend
         self.params = maybe_quantize_tree(params, cfg) if flags.quant_serve else params
@@ -144,16 +151,20 @@ class ServeEngine:
             batch["enc_embeds"] = jnp.zeros((b, self.cfg.enc_seq_len, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
         cache, logits = self._prefill(self.params, batch)
         steps = max(r.max_new_tokens for r in requests)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        next_tok = np.array(jnp.argmax(logits, axis=-1), np.int32)
         for _ in range(steps):
             for i, r in enumerate(requests):
-                if not r.done and len(r.generated) < r.max_new_tokens:
+                if not r.done:
                     t = int(next_tok[i])
                     r.generated.append(t)
-                    if t == self.eos:
+                    if t == self.eos or len(r.generated) >= r.max_new_tokens:
                         r.done = True
-            if all(r.done or len(r.generated) >= r.max_new_tokens for r in requests):
+                if r.done:
+                    # retired lane: its stale argmax must not keep decoding —
+                    # feed the pad id so the lock-step cache stays clean
+                    next_tok[i] = 0
+            if all(r.done for r in requests):
                 break
-            cache, logits = self._decode(self.params, cache, next_tok[:, None])
-            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            cache, logits = self._decode(self.params, cache, jnp.asarray(next_tok)[:, None])
+            next_tok = np.array(jnp.argmax(logits, axis=-1), np.int32)
         return requests

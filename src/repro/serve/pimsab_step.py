@@ -1,0 +1,128 @@
+"""Single-head integer attention decode step for the pimsab backend.
+
+One decode step appends the new token's quantized K/V rows into the
+CRAM-resident cache, scores the query against every cached key (q·Kᵀ on the
+mac gemm, the K operand chained in place from the appended cache), runs the
+bit-exact fixed-point softmax, and mixes the values (p·V with the free
+``div_shift`` renormalization).  The whole step is ONE compiled program —
+five graph nodes, two :class:`~repro.kernels.program.ResidentState` slots —
+so per-step cost is one ISA stream with zero DRAM phases for the cache
+append (``SimReport.resident_edges`` lists both ``state:`` edges and the
+K-cache chain).
+
+Buckets: programs are compiled per ``(config, kv_capacity)``.  State names
+depend only on the bucket — not the request — so every request in a bucket
+shares one cached executor and the scheduler just rebinds its cache handles
+(:meth:`Executor.bind_states`) before each step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.kernels import api
+from repro.kernels.program import Executor, Program, ResidentState
+
+
+@dataclass(frozen=True)
+class AttnServeConfig:
+    """Static shape/precision envelope of the served attention head.
+
+    ``score_bits``/``score_frac`` are the caller's quantization contract:
+    every q·k score must fit ``score_bits`` signed bits and is interpreted
+    with ``score_frac`` fraction bits by the fixed-point softmax.  The
+    defaults hold whenever ``head_dim · 2^(q_bits-1) · 2^(kv_bits-1) <
+    2^(score_bits-1)`` — size them from the quantizer's worst case.
+    """
+
+    head_dim: int = 4      # D — K rows and queries
+    value_dim: int = 4     # Dv — V rows and the context output
+    kv_bits: int = 8       # cache precision (int8 quantized K/V)
+    q_bits: int = 4        # query magnitude envelope
+    score_bits: int = 10   # q·k score envelope (clamps the score field)
+    score_frac: int = 7    # fraction bits the softmax reads scores at
+
+    def state_rows(self) -> int:
+        """CRAM wordlines the two cache regions reserve on the state tile."""
+        return (self.head_dim + self.value_dim) * self.kv_bits
+
+
+def kv_states(cfg: AttnServeConfig, capacity: int,
+              ) -> Tuple[ResidentState, ResidentState]:
+    """Fresh per-request K/V cache handles for one bucket.
+
+    Names encode the bucket, not the request: spec-identical handles share
+    one compiled executor, and the scheduler swaps them per step."""
+    tag = f"{capacity}x{cfg.head_dim}v{cfg.value_dim}p{cfg.kv_bits}"
+    return (
+        ResidentState(f"kcache_{tag}", (capacity, cfg.head_dim), cfg.kv_bits),
+        ResidentState(f"vcache_{tag}", (capacity, cfg.value_dim), cfg.kv_bits),
+    )
+
+
+_program_cache: Dict[Tuple[AttnServeConfig, int], Program] = {}
+
+
+def decode_program(cfg: AttnServeConfig, capacity: int) -> Program:
+    """The traced decode-step Program of one bucket (cached per bucket).
+
+    Slot order: ``(kc, vc, q, k_new, v_new, onehot)`` — slots 0/1 are the
+    state slots :func:`decode_executor` binds."""
+    key = (cfg, int(capacity))
+    prog = _program_cache.get(key)
+    if prog is not None:
+        return prog
+
+    def step(kc, vc, q, k_new, v_new, onehot):
+        kc2 = api.kv_append(kc, k_new, onehot)
+        vc2 = api.kv_append(vc, v_new, onehot)
+        # q_bits caps the query field; the K operand's width flows from the
+        # cache meta (hinting it would break the resident chain's precision
+        # match).  out_bits keeps the softmax scratch inside one tile.
+        s = api.attention_qk(q, kc2, q_bits=cfg.q_bits, out_bits=cfg.score_bits)
+        p = api.softmax_fixedpoint(s, in_frac=cfg.score_frac)
+        return api.attention_pv(p, vc2)
+
+    kst, vst = kv_states(cfg, capacity)
+    traced = api.trace(step, name=f"decode_{capacity}x{cfg.head_dim}")
+    prog = traced.trace(
+        kst.placeholder(), vst.placeholder(),
+        np.zeros((1, cfg.head_dim), np.int8),
+        np.zeros(cfg.head_dim, np.int8),
+        np.zeros(cfg.value_dim, np.int8),
+        np.zeros(capacity, np.int8),
+    )
+    _program_cache[key] = prog
+    return prog
+
+
+def decode_executor(cfg: AttnServeConfig, capacity: int,
+                    k_state: ResidentState, v_state: ResidentState,
+                    backend: str = "pimsab") -> Executor:
+    """Compile (or cache-hit) the bucket's decode step and bind the given
+    request's cache handles.  Spec-identical handles hit the same cached
+    executor — see ``api.compile_cache_info()``."""
+    return api.compile(
+        decode_program(cfg, capacity), backend,
+        states={0: k_state, 1: v_state},
+    )
+
+
+def run_decode_step(ex: Executor, cfg: AttnServeConfig, capacity: int,
+                    q: np.ndarray, k_new: np.ndarray, v_new: np.ndarray,
+                    pos: int) -> np.ndarray:
+    """Execute one bound decode step: append at row ``pos``, return the
+    ``(1, Dv)`` context vector (int32)."""
+    onehot = np.zeros(capacity, np.int8)
+    onehot[pos] = 1
+    ph_k = np.zeros((capacity, cfg.head_dim), np.int8)
+    ph_v = np.zeros((capacity, cfg.value_dim), np.int8)
+    return np.asarray(ex(
+        ph_k, ph_v,
+        np.asarray(q, np.int8).reshape(1, cfg.head_dim),
+        np.asarray(k_new, np.int8),
+        np.asarray(v_new, np.int8),
+        onehot,
+    ))

@@ -237,6 +237,32 @@ def _case(name):
     if name == "global_avgpool":
         x = _int_tensor((2, 8, 16, 16), 8, seed=8)
         return lambda: api.global_avgpool(x), lambda: ref.global_avgpool_ref(x)
+    if name == "attention_qk":
+        q = _int_tensor((4, 16), 5, seed=9)
+        k = _int_tensor((8, 16), 5, seed=10)
+        return lambda: api.attention_qk(q, k), lambda: ref.attention_qk_ref(q, k)
+    if name == "softmax_fixedpoint":
+        x = _int_tensor((4, 8), 10, seed=11)
+        return (
+            lambda: api.softmax_fixedpoint(x, in_frac=7),
+            lambda: ref.softmax_fixedpoint_ref(x, in_frac=7),
+        )
+    if name == "attention_pv":
+        p = jnp.abs(_int_tensor((4, 8), 7, seed=12))
+        v = _int_tensor((8, 16), 5, seed=13)
+        return lambda: api.attention_pv(p, v), lambda: ref.attention_pv_ref(p, v)
+    if name == "decode_gemv":
+        w = _int_tensor((16, 32), 6, seed=14)
+        x = _int_tensor((32,), 6, seed=15)
+        return lambda: api.decode_gemv(w, x), lambda: ref.decode_gemv_ref(w, x)
+    if name == "kv_append":
+        cache = _int_tensor((8, 16), 8, seed=16)
+        new = _int_tensor((16,), 8, seed=17)
+        onehot = jnp.zeros(8, jnp.int8).at[3].set(1)
+        return (
+            lambda: api.kv_append(cache, new, onehot),
+            lambda: ref.kv_append_ref(cache, new, onehot),
+        )
     raise KeyError(f"registered kernel {name!r} has no test case — add one")
 
 

@@ -88,6 +88,46 @@ def _case(name):
     if name == "global_avgpool":
         x = _ints((2, 8, 4, 4), -500, 500, seed=26)
         return lambda: api.global_avgpool(x), lambda: ref.global_avgpool_ref(x), None
+    if name == "attention_qk":
+        q = _ints((2, 8), -10, 10, seed=27)
+        k = _ints((4, 8), -10, 10, seed=28)
+        return (
+            lambda: api.attention_qk(q, k),
+            lambda: ref.attention_qk_ref(q, k),
+            None,
+        )
+    if name == "softmax_fixedpoint":
+        x = _ints((4, 8), -400, 400, seed=29)
+        return (
+            lambda: api.softmax_fixedpoint(x, in_frac=7),
+            lambda: ref.softmax_fixedpoint_ref(x, in_frac=7),
+            None,
+        )
+    if name == "attention_pv":
+        p = _ints((2, 8), 0, 64, seed=30)
+        v = _ints((8, 4), -100, 100, seed=31)
+        return (
+            lambda: api.attention_pv(p, v),
+            lambda: ref.attention_pv_ref(p, v),
+            None,
+        )
+    if name == "decode_gemv":
+        w = _ints((8, 16), -50, 50, seed=32)
+        x = _ints((16,), -20, 20, seed=33)
+        return (
+            lambda: api.decode_gemv(w, x),
+            lambda: ref.decode_gemv_ref(w, x),
+            None,
+        )
+    if name == "kv_append":
+        cache = _ints((8, 4), -100, 100, seed=34)
+        new = _ints((4,), -100, 100, seed=35)
+        onehot = jnp.zeros(8, jnp.int32).at[5].set(1)
+        return (
+            lambda: api.kv_append(cache, new, onehot),
+            lambda: ref.kv_append_ref(cache, new, onehot),
+            None,
+        )
     raise KeyError(f"registered kernel {name!r} has no conformance case — add one")
 
 
