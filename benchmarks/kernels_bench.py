@@ -41,12 +41,24 @@ are machine-dependent and are not gated.  ``main(profile=True)`` (CLI:
 ``--profile``) additionally records per-instruction scheduling intervals and
 writes them to ``BENCH_kernels_timeline.json`` (uploaded by CI) — the
 per-phase timeline artifact.
+
+Every pinned modeled row is produced with the **mapping autotuner** on at a
+small fixed budget (``BENCH_TUNE``; per-section overrides in
+``e2e_resnet.DEFAULT_TUNE`` / ``serve_bench.DEFAULT_TUNE``): the timing
+stream takes the searched mapping, functional execution keeps the heuristic
+plan, so every bit-exactness sentinel is unaffected by construction.  Each
+row carries its search provenance under ``autotune`` (schema:
+``docs/benchmarks.md``).  ``main(autotune=True)`` (CLI: ``--autotune``)
+additionally writes ``BENCH_autotune.json`` — per-row candidate counts and
+provenance — and, combined with ``--check``, asserts tuned modeled cycles
+never regress the pinned baselines (``<=`` per row, not just within 5%).
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
 import json
+import re
 import time
 from pathlib import Path
 from typing import Callable, Dict, List, Optional
@@ -60,6 +72,17 @@ from repro.kernels import api, ref
 REPO_ROOT = Path(__file__).resolve().parent.parent
 OUT_PATH = REPO_ROOT / "BENCH_kernels.json"
 TIMELINE_PATH = REPO_ROOT / "BENCH_kernels_timeline.json"
+AUTOTUNE_PATH = REPO_ROOT / "BENCH_autotune.json"
+
+# The small fixed search budget every pinned kernel/large-shape/program row
+# is produced with (deterministic: enumeration order is seed-rotated, no
+# wall-clock anywhere in the loop).  The e2e and serve sections carry their
+# own budgets — see e2e_resnet.DEFAULT_TUNE / serve_bench.DEFAULT_TUNE.
+BENCH_TUNE = api.TuneConfig(budget=96, beam=4, seed=0)
+
+
+def _tuning_ctx(tune: Optional[api.TuneConfig]):
+    return api.tuning(tune) if tune is not None else contextlib.nullcontext()
 
 # Bench operand builders per registered kernel: (bench shape, reduced
 # validation shape).  A kernel registered without an entry here still fails
@@ -424,7 +447,7 @@ def _validate_rglru() -> bool:
     return bool(jnp.allclose(ref.rglru_scan_ref(a, b, h0), got, atol=1e-4))
 
 
-def run() -> List[Dict]:
+def run(tune: Optional[api.TuneConfig] = BENCH_TUNE) -> List[Dict]:
     cases = _cases()
     sim_cases = _pimsab_cases()
     rows = []
@@ -447,7 +470,8 @@ def run() -> List[Dict]:
                 f"kernel {name!r} has no pimsab bench case — "
                 "add one to benchmarks/kernels_bench.py"
             )
-        matches = sim_case()
+        with _tuning_ctx(tune):
+            matches = sim_case()
         rep = api.last_sim_report()
         row["pimsab"] = {
             "matches_oracle": matches,
@@ -462,6 +486,7 @@ def run() -> List[Dict]:
             "energy_j": rep.energy_j,
             "instrs": rep.instrs,
             "functional_instrs": rep.functional_instrs,
+            "autotune": dict(rep.autotune),
         }
         rows.append(row)
     return rows
@@ -502,7 +527,8 @@ def _large_shape_workloads():
     return [gemm, ewise, relu]
 
 
-def large_shapes(timelines: Optional[Dict] = None) -> List[Dict]:
+def large_shapes(timelines: Optional[Dict] = None,
+                 tune: Optional[api.TuneConfig] = BENCH_TUNE) -> List[Dict]:
     """Model the large shapes; when a ``timelines`` dict is passed (and
     profiling is active, see main), harvest each report's per-instruction
     scheduling intervals into it — same pass, no re-modeling."""
@@ -510,7 +536,8 @@ def large_shapes(timelines: Optional[Dict] = None) -> List[Dict]:
 
     rows = []
     for w in _large_shape_workloads():
-        rep = pb.timing_report(w, kernel=w.name)
+        rep = pb.timing_report(w, kernel=w.name,
+                               tune=tune if tune is not None else False)
         rows.append({
             "workload": w.name,
             "modeled_cycles": rep.total_cycles,
@@ -523,6 +550,7 @@ def large_shapes(timelines: Optional[Dict] = None) -> List[Dict]:
             "double_buffered": rep.mapping["double_buffered"],
             "serial_iters": rep.mapping["serial_iters"],
             "instrs": rep.instrs,
+            "autotune": dict(rep.autotune),
         })
         if timelines is not None and rep.timeline:
             timelines[w.name] = {
@@ -534,7 +562,8 @@ def large_shapes(timelines: Optional[Dict] = None) -> List[Dict]:
     return rows
 
 
-def program_mode(timelines: Optional[Dict] = None) -> Dict:
+def program_mode(timelines: Optional[Dict] = None,
+                 tune: Optional[api.TuneConfig] = BENCH_TUNE) -> Dict:
     """The traced `matmul → ewise_add → relu` chain on the pimsab backend:
     fused DRAM cycles vs the eager per-kernel sum, bit-exactness, and the
     compile-cache hit on the second identical compile.  ``timelines`` as in
@@ -553,7 +582,7 @@ def program_mode(timelines: Optional[Dict] = None) -> Dict:
         return api.relu(api.ewise_add(api.matmul(xs, ws), y))
 
     eager_reports = []
-    with api.use_backend("pimsab"):
+    with _tuning_ctx(tune), api.use_backend("pimsab"):
         acc = api.matmul(xs, ws)
         eager_reports.append(api.last_sim_report())
         s = api.ewise_add(acc, y)
@@ -565,7 +594,7 @@ def program_mode(timelines: Optional[Dict] = None) -> Dict:
 
     traced = api.trace(chain, name="bench_matmul_add_relu")
     before = api.compile_cache_info()
-    with api.use_backend("pimsab"):
+    with _tuning_ctx(tune), api.use_backend("pimsab"):
         got = traced(xs, ws, y)
         rep = api.last_sim_report()
         api.compile(traced.program_for(xs, ws, y))  # identical signature
@@ -594,6 +623,7 @@ def program_mode(timelines: Optional[Dict] = None) -> Dict:
         "per_kernel_cycles": {
             p["kernel"]: p["total_cycles"] for p in rep.per_kernel
         },
+        "autotune": dict(rep.autotune),
         "compile_cache": {
             "second_compile_was_hit": after.hits > before.hits,
             "misses_added": after.misses - before.misses,
@@ -742,7 +772,112 @@ def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> L
     return failures
 
 
-def main(check: bool = False, profile: bool = False) -> Dict:
+_SECTION_PREFIXES = {
+    "large": "large_shapes", "program": "program", "e2e": "e2e",
+    "serve": "serve", "simwall": "simwall",
+}
+
+
+def _failure_delta(f: str) -> Optional[float]:
+    m = re.search(r"\(([-+]\d+(?:\.\d+)?)%", f)
+    return float(m.group(1)) if m else None
+
+
+def failure_summary(failures: List[str]) -> List[str]:
+    """One line per failing section: how many rows failed, which row is
+    worst, and by what percent — so a red ``--check`` names the culprit
+    up front instead of burying it in the full diff dump."""
+    by_section: Dict[str, List[str]] = {}
+    for f in failures:
+        sec = _SECTION_PREFIXES.get(f.split(":", 1)[0], "kernels")
+        by_section.setdefault(sec, []).append(f)
+    lines = []
+    for sec in sorted(by_section):
+        fs = by_section[sec]
+        worst = max(fs, key=lambda f: _failure_delta(f) or float("-inf"))
+        row = worst.split(": ", 1)[0]
+        d = _failure_delta(worst)
+        delta = f"{d:+.1f}%" if d is not None else "correctness"
+        lines.append(
+            f"{sec}: {len(fs)} failing row(s); worst {row} ({delta})"
+        )
+    return lines
+
+
+def autotune_rows(result: Dict) -> List[Dict]:
+    """Flatten every pinned modeled row into the ``BENCH_autotune.json``
+    shape: section, row name, tuned modeled cycles, candidate counts
+    (``scored`` / ``verifier_rejected``) and the full search provenance."""
+    rows: List[Dict] = []
+
+    def add(section: str, name: str, cycles, prov) -> None:
+        prov = prov or {}
+        rows.append({
+            "section": section,
+            "row": name,
+            "modeled_cycles": cycles,
+            "candidates_scored": prov.get("scored", 0),
+            "verifier_rejected": prov.get("verifier_rejected", 0),
+            "improvement_pct": prov.get("improvement_pct", 0.0),
+            "provenance": dict(prov),
+        })
+
+    for r in result["kernels"]:
+        add("kernels", r["kernel"], r["pimsab"]["modeled_cycles"],
+            r["pimsab"].get("autotune"))
+    for r in result["large_shapes"]:
+        add("large_shapes", r["workload"], r["modeled_cycles"],
+            r.get("autotune"))
+    prog = result["program"]
+    add("program", "->".join(prog["chain"]), prog["modeled_cycles"],
+        prog.get("autotune"))
+    for net, sec in result["e2e"].items():
+        add("e2e", net, sec["modeled_cycles"], sec.get("autotune"))
+    for r in result["serve"]["batches"]:
+        add("serve", f"batch{r['batch']}", r["total_cycles"],
+            r.get("autotune"))
+    return rows
+
+
+def check_autotune(result: Dict, baseline: Dict) -> List[str]:
+    """The ``--autotune --check`` gate: tuned modeled cycles must never
+    exceed the pinned baselines — ``<=`` per row (tiny float slack), not the
+    5% regression band the plain gate allows."""
+    failures: List[str] = []
+
+    def gate(label: str, new, old) -> None:
+        if not old or new is None:
+            return
+        if new > old * (1 + 1e-9):
+            rel = (new - old) / old
+            failures.append(
+                f"{label}: tuned modeled cycles {old} -> {new} "
+                f"(+{rel:.2%} — autotune must never regress the baseline)"
+            )
+
+    base_rows = {r["kernel"]: r for r in baseline.get("kernels", [])}
+    for row in result["kernels"]:
+        gate(row["kernel"], row["pimsab"]["modeled_cycles"],
+             base_rows.get(row["kernel"], {}).get("pimsab", {}).get("modeled_cycles"))
+    base_large = {r["workload"]: r for r in baseline.get("large_shapes", [])}
+    for row in result["large_shapes"]:
+        gate(f"large:{row['workload']}", row["modeled_cycles"],
+             base_large.get(row["workload"], {}).get("modeled_cycles"))
+    gate("program:modeled", result["program"]["modeled_cycles"],
+         baseline.get("program", {}).get("modeled_cycles"))
+    for net in ("tiny", "resnet18"):
+        gate(f"e2e:{net}", result["e2e"][net]["modeled_cycles"],
+             baseline.get("e2e", {}).get(net, {}).get("modeled_cycles"))
+    base_serve = {r["batch"]: r for r in
+                  baseline.get("serve", {}).get("batches", [])}
+    for row in result["serve"]["batches"]:
+        gate(f"serve:batch{row['batch']}", row["total_cycles"],
+             base_serve.get(row["batch"], {}).get("total_cycles"))
+    return failures
+
+
+def main(check: bool = False, profile: bool = False,
+         autotune: bool = False) -> Dict:
     # per-phase timeline artifact: collected from the SAME modeling pass the
     # bench rows come from (no double compile) — the large shapes plus the
     # fused program chain
@@ -768,12 +903,31 @@ def main(check: bool = False, profile: bool = False) -> Dict:
             raise SystemExit(f"--check: no committed baseline at {OUT_PATH}")
         baseline = json.loads(OUT_PATH.read_text())
         failures = check_against_baseline(result, baseline)
+        if autotune:
+            failures.extend(check_autotune(result, baseline))
         if failures:
             print("kernels_bench --check: FAIL (modeled-cycle regression >5%)")
+            for line in failure_summary(failures):
+                print(" !", line)
             for f in failures:
                 print(" -", f)
             raise SystemExit(1)
         print("kernels_bench --check: OK (modeled cycles within 5% of baseline)")
+    if autotune:
+        artifact = {
+            "tune": {
+                "kernels": BENCH_TUNE.to_json(),
+                "e2e": e2e_resnet.DEFAULT_TUNE.to_json(),
+                "serve": serve_bench.DEFAULT_TUNE.to_json(),
+            },
+            "tune_cache": {
+                "hits": api.tune_cache_info().hits,
+                "misses": api.tune_cache_info().misses,
+            },
+            "rows": autotune_rows(result),
+        }
+        AUTOTUNE_PATH.write_text(json.dumps(artifact, indent=2) + "\n")
+        print(f"wrote {AUTOTUNE_PATH}")
     OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
     if profile:
         TIMELINE_PATH.write_text(json.dumps(timelines, indent=2) + "\n")
@@ -805,5 +959,11 @@ if __name__ == "__main__":
         help="also write BENCH_kernels_timeline.json: per-instruction "
         "scheduling intervals (the per-phase timeline artifact CI uploads)",
     )
+    ap.add_argument(
+        "--autotune", action="store_true",
+        help="also write BENCH_autotune.json (per-row candidate counts and "
+        "search provenance); with --check, additionally assert tuned "
+        "modeled cycles never exceed the pinned baselines",
+    )
     args = ap.parse_args()
-    main(check=args.check, profile=args.profile)
+    main(check=args.check, profile=args.profile, autotune=args.autotune)

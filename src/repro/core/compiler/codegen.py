@@ -808,27 +808,14 @@ def _data_movement_cycles(w: Workload, m: Mapping, cfg: PimsabConfig,
     return res.cycles["dram"] + res.cycles["noc"]
 
 
-def compile_graph(
-    g: WorkloadGraph, cfg: PimsabConfig,
-    *,
-    state_pins=None,
-) -> CompiledGraph:
-    """Lower a WorkloadGraph to ONE fused per-tile stream (compile-once).
-
-    Distribution, residency planning and live-range allocation run jointly
-    (:func:`distribute_graph`, with the simulator-backed data-movement cost
-    model gating each residency decision); each node then emits with the DRAM
-    instructions of its resident boundaries elided.  The consumer's elided
-    input needs no address fix-up: the live-range allocator pinned it to the
-    producer's accumulator wordlines, so the emitted compute reads the value
-    in place.  Segment boundaries are timeline barriers (wordline reuse
-    across nodes must not race the modeled overlap).
-    """
-    gm = distribute_graph(
-        g, cfg,
-        cost_fn=lambda w, m, elide: _data_movement_cycles(w, m, cfg, elide),
-        state_pins=state_pins,
-    )
+def emit_graph(
+    g: WorkloadGraph, cfg: PimsabConfig, gm,
+) -> Tuple[List[isa.Instr], Tuple[Tuple[str, int, int], ...]]:
+    """Emit the fused per-tile stream for an already-planned ``gm``
+    (:class:`GraphMapping`) — each node's segment with its resident
+    boundaries elided, first instruction of each segment a barrier.  Shared
+    by :func:`compile_graph` and the autotuner's candidate scoring (which
+    re-emits the same graph under substituted mappings)."""
     prog: List[isa.Instr] = []
     segments: List[Tuple[str, int, int]] = []
     for w in g.nodes:
@@ -848,4 +835,34 @@ def compile_graph(
             seg[0] = dataclasses.replace(seg[0], barrier=True)
         prog.extend(seg)
         segments.append((w.name, start, len(prog)))
-    return CompiledGraph(prog, g, gm, tuple(segments))
+    return prog, tuple(segments)
+
+
+def compile_graph(
+    g: WorkloadGraph, cfg: PimsabConfig,
+    *,
+    state_pins=None,
+    gm=None,
+) -> CompiledGraph:
+    """Lower a WorkloadGraph to ONE fused per-tile stream (compile-once).
+
+    Distribution, residency planning and live-range allocation run jointly
+    (:func:`distribute_graph`, with the simulator-backed data-movement cost
+    model gating each residency decision); each node then emits with the DRAM
+    instructions of its resident boundaries elided.  The consumer's elided
+    input needs no address fix-up: the live-range allocator pinned it to the
+    producer's accumulator wordlines, so the emitted compute reads the value
+    in place.  Segment boundaries are timeline barriers (wordline reuse
+    across nodes must not race the modeled overlap).
+
+    ``gm`` supplies a pre-planned :class:`GraphMapping` (the autotuner's
+    winner) and skips the heuristic planning entirely.
+    """
+    if gm is None:
+        gm = distribute_graph(
+            g, cfg,
+            cost_fn=lambda w, m, elide: _data_movement_cycles(w, m, cfg, elide),
+            state_pins=state_pins,
+        )
+    prog, segments = emit_graph(g, cfg, gm)
+    return CompiledGraph(prog, g, gm, segments)

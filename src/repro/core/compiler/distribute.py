@@ -31,6 +31,50 @@ from repro.core.compiler.allocation import (
     softmax_scratch_layout,
 )
 
+# ---------------------------------------------------------------------------
+# plan-note codes (the machine-readable channel)
+#
+# Every decline/decision note carries a stable ``N-PLAN-*`` code prefix so
+# the autotuner and tests can key on the *kind* of decision without matching
+# prose.  The verifier promotes the prefix into the Diagnostic code (see
+# ``verify.note_code``); un-coded legacy notes fall back to plain ``N-PLAN``.
+# ---------------------------------------------------------------------------
+NOTE_RS_SPLIT = "N-PLAN-RS-SPLIT"          # reduction lane-split chosen
+NOTE_DB_ON = "N-PLAN-DB-ON"                # double buffering engaged
+NOTE_DB_DECLINED = "N-PLAN-DB-DECLINED"    # alt chunk regions don't fit
+NOTE_DB_DROPPED = "N-PLAN-DB-DROPPED"      # joint allocator relief valve
+NOTE_WORDLINES = "N-PLAN-WL"               # naive->optimized wordline count
+NOTE_CHAIN_SHAPE = "N-PLAN-CHAIN-SHAPE"    # mac shared-operand shape mismatch
+NOTE_PROD_LAYOUT = "N-PLAN-PROD-LAYOUT"    # producer can't go lane-contiguous
+NOTE_CONS_LAYOUT = "N-PLAN-CONS-LAYOUT"    # consumer can't match producer tiling
+NOTE_RES_PIN = "N-PLAN-RES-PIN"            # producer re-pinned for residency
+NOTE_RES_COST = "N-PLAN-RES-COST"          # fused plan models no movement win
+NOTE_RES_DROPPED = "N-PLAN-RES-DROPPED"    # joint allocator dropped residency
+NOTE_STATE_TILE = "N-PLAN-STATE-TILE"      # updater pinned to one tile
+NOTE_STATE_LAYOUT = "N-PLAN-STATE-LAYOUT"  # updater layout not in-place capable
+NOTE_STATE_COST = "N-PLAN-STATE-COST"      # state pin models no movement win
+NOTE_STATE_ON = "N-PLAN-STATE-ON"          # persistent state CRAM-resident
+NOTE_STATE_DROPPED = "N-PLAN-STATE-DROPPED"  # allocator dropped the state pins
+NOTE_TUNED = "N-PLAN-TUNED"                # mapping replaced by the autotuner
+
+
+def _note(notes: List[str], code: str, text: str) -> None:
+    """Append ``"{code}: {text}"``, deduping exact repeats — retried
+    candidates (the tuner, the allocator relief valves) re-run the same
+    decline paths and must not multiply identical notes."""
+    n = f"{code}: {text}"
+    if n not in notes:
+        notes.append(n)
+
+
+def note_code(note: str) -> str:
+    """The stable machine-readable prefix of a plan note (``N-PLAN-*``),
+    or plain ``"N-PLAN"`` for un-coded legacy notes."""
+    head, sep, _ = note.partition(":")
+    if sep and head.startswith("N-PLAN-") and " " not in head:
+        return head
+    return "N-PLAN"
+
 
 @dataclass
 class Mapping:
@@ -275,64 +319,26 @@ def distribute(
     With ``strict=False`` an empty feasible set returns ``None`` instead of
     raising (constrained probes fall back).
     """
-    lanes = cfg.pes_per_tile  # 65536 bitlines per tile
-    d = w.total_out_elems()
     k = w.reduce_extent()
-    pa = w.ins[0].prec
-    pb = w.ins[1].prec if len(w.ins) > 1 else pa
 
     best: Optional[Mapping] = None
     # --- exhaustive exploration (small space, §V-B) -----------------------
     tile_options = [t for t in range(1, cfg.num_tiles + 1)]
     if tile_constraint is not None:
         tile_options = [tile_constraint]
-    # lane-splitting a reduction: none, a CRAM sub-group, a full CRAM, or all
-    # lanes of the tile (the last folds through the H-tree across CRAMs);
-    # sequential scans never split — the recurrence carries per lane
-    if w.op == "mac" and k > 1:
-        rs_options = sorted({1, 16, cfg.cram_cols, lanes})
-    else:
-        rs_options = [1]
-    if (w.op == "mac" and len(w.ins) > 1 and w.ins[1].is_const
-            and isinstance(w.ins[1].const_value, tuple)):
-        # per-row constants ride the RF path, which is shared per tile: each
-        # reduction index needs its own RfLoad, so the reduction stays whole
-        # per lane (decode_gemv's constant-operand rows)
-        rs_options = [1]
+    rs_options = _rs_options(w, cfg)
     if rs_constraint is not None:
         rs_options = [r for r in rs_options if r == rs_constraint] or []
     for tiles in tile_options:
-        per_tile = -(-d // tiles)
         for reduce_split in rs_options:
             if k % reduce_split:
                 continue
-            lanes_needed = per_tile * reduce_split
-            lanes_used = min(lanes, lanes_needed)
-            serial = -(-lanes_needed // lanes)
-            k_per_lane = k // reduce_split
-            kc_opts = _k_chunk_options(w, k_per_lane)
+            kc_opts = _k_chunk_options(w, k // reduce_split)
             if k_chunk_constraint is not None:
                 kc_opts = [kc for kc in kc_opts if kc == k_chunk_constraint]
             for k_chunk in kc_opts:
-                out_prec = adaptive_precision(pa, pb, k, w.op)
-                out_prec = min(out_prec, w.acc_prec)
-                reqs = _buffer_reqs(
-                    w, k_chunk, out_prec,
-                    reduce_split=reduce_split, cram_cols=cfg.cram_cols,
-                )
-                alloc = allocate(reqs, cfg.cram_rows)
-                if not alloc.feasible:
-                    continue
-                occ = (tiles * lanes_used) / (cfg.num_tiles * lanes)
-                dram = _dram_bits(w, cfg, tiles, bcast_b=True)
-                m = Mapping(
-                    workload=w, tiles_used=tiles, lanes_used=lanes_used,
-                    serial_iters=serial, k_chunk=k_chunk,
-                    reduce_split=reduce_split, out_prec=out_prec,
-                    allocation=alloc, dram_bits=sum(dram.values()),
-                    dram_split=dram, occupancy=occ,
-                )
-                if best is None or _better(m, best):
+                m = _mapping_at(w, cfg, tiles, reduce_split, k_chunk)
+                if m is not None and (best is None or _better(m, best)):
                     best = m
     if best is None:
         if not strict:
@@ -342,7 +348,8 @@ def distribute(
             "must supply a more conservative loop organization (§V-A feedback)"
         )
     if best.reduce_split > 1:
-        best.notes.append(f"reduction split {best.reduce_split}x across lanes, folded via intra-CRAM tree + H-tree")
+        _note(best.notes, NOTE_RS_SPLIT,
+              f"reduction split {best.reduce_split}x across lanes, folded via intra-CRAM tree + H-tree")
     # --- double-buffering upgrade (§III overlap): a multi-phase schedule
     # gets second A/B chunk regions when the CRAM capacity allows, letting
     # codegen prefetch the next chunk's operands during the current compute.
@@ -372,21 +379,137 @@ def distribute(
                 )
                 if kc < best.k_chunk:
                     note += f" (k_chunk {best.k_chunk}->{kc} to fit the alt regions)"
-                trial.notes.append(note)
+                _note(trial.notes, NOTE_DB_ON, note)
                 best = trial
                 break
         else:
-            best.notes.append(
-                "double buffering declined: alt chunk buffers exceed CRAM rows"
-            )
-    naive = sum(r.naive_wordlines for r in _buffer_reqs(
-        w, best.k_chunk, w.acc_prec, use_lifetime=False,
-        reduce_split=best.reduce_split, cram_cols=cfg.cram_cols))
-    opt = sum(r.wordlines for r in _buffer_reqs(
-        w, best.k_chunk, best.out_prec,
-        reduce_split=best.reduce_split, cram_cols=cfg.cram_cols))
-    best.notes.append(f"wordlines {naive}->{opt} after adaptive precision + bit-level lifetime")
+            _note(best.notes, NOTE_DB_DECLINED,
+                  "double buffering declined: alt chunk buffers exceed CRAM rows")
+    _note(best.notes, NOTE_WORDLINES, _wordlines_note(w, best, cfg))
     return best
+
+
+def _wordlines_note(w: Workload, m: Mapping, cfg: PimsabConfig) -> str:
+    naive = sum(r.naive_wordlines for r in _buffer_reqs(
+        w, m.k_chunk, w.acc_prec, use_lifetime=False,
+        reduce_split=m.reduce_split, cram_cols=cfg.cram_cols))
+    opt = sum(r.wordlines for r in _buffer_reqs(
+        w, m.k_chunk, m.out_prec,
+        reduce_split=m.reduce_split, cram_cols=cfg.cram_cols))
+    return f"wordlines {naive}->{opt} after adaptive precision + bit-level lifetime"
+
+
+def _rs_options(w: Workload, cfg: PimsabConfig) -> List[int]:
+    """Reduction lane-split choices: none, a CRAM sub-group, a full CRAM, or
+    all lanes of the tile (the last folds through the H-tree across CRAMs);
+    sequential scans never split — the recurrence carries per lane."""
+    k = w.reduce_extent()
+    if w.op == "mac" and k > 1:
+        opts = sorted({1, 16, cfg.cram_cols, cfg.pes_per_tile})
+    else:
+        opts = [1]
+    if (w.op == "mac" and len(w.ins) > 1 and w.ins[1].is_const
+            and isinstance(w.ins[1].const_value, tuple)):
+        # per-row constants ride the RF path, which is shared per tile: each
+        # reduction index needs its own RfLoad, so the reduction stays whole
+        # per lane (decode_gemv's constant-operand rows)
+        opts = [1]
+    return opts
+
+
+def _mapping_at(
+    w: Workload, cfg: PimsabConfig, tiles: int, reduce_split: int,
+    k_chunk: int, *, double_buffered: bool = False,
+    out_prec: Optional[int] = None,
+) -> Optional[Mapping]:
+    """One exploration point of the §V-B space, or ``None`` when the CRAM
+    capacity constraint rejects it.  ``out_prec=None`` takes the adaptive-
+    precision accumulator; a wider explicit value models the non-bit-serial-
+    aware layout (a tuner axis — strictly more compute passes, but a valid
+    verified schedule)."""
+    lanes = cfg.pes_per_tile
+    d = w.total_out_elems()
+    k = w.reduce_extent()
+    pa = w.ins[0].prec
+    pb = w.ins[1].prec if len(w.ins) > 1 else pa
+    if k % reduce_split:
+        return None
+    per_tile = -(-d // tiles)
+    lanes_needed = per_tile * reduce_split
+    lanes_used = min(lanes, lanes_needed)
+    serial = -(-lanes_needed // lanes)
+    if out_prec is None:
+        out_prec = min(adaptive_precision(pa, pb, k, w.op), w.acc_prec)
+    m = Mapping(
+        workload=w, tiles_used=tiles, lanes_used=lanes_used,
+        serial_iters=serial, k_chunk=k_chunk,
+        reduce_split=reduce_split, out_prec=out_prec,
+        double_buffered=double_buffered,
+    )
+    alloc = allocate(mapping_buffer_reqs(w, m, cfg), cfg.cram_rows)
+    if not alloc.feasible:
+        return None
+    m.allocation = alloc
+    m.occupancy = (tiles * lanes_used) / (cfg.num_tiles * lanes)
+    dram = _dram_bits(w, cfg, tiles, bcast_b=True)
+    m.dram_split = dram
+    m.dram_bits = sum(dram.values())
+    return m
+
+
+def mapping_candidates(
+    w: Workload,
+    cfg: PimsabConfig,
+    *,
+    tile_constraint: Optional[int] = None,
+    rs_constraint: Optional[int] = None,
+    k_chunk_constraint: Optional[int] = None,
+    db_constraint: Optional[bool] = None,
+) -> List[Mapping]:
+    """Every feasible mapping of ``w`` over the full search space — the
+    candidate generator behind :mod:`repro.core.compiler.autotune`.
+
+    Axes: tile count × reduction lane-split × ``k_chunk`` × double-buffering
+    × accumulator width (adaptive-precision narrow vs full ``acc_prec`` —
+    the bit-serial-aware vs wider per-pass layouts).  The constraints mirror
+    :func:`distribute`'s (graph residency pins them); ``db_constraint``
+    additionally pins the double-buffering axis.  Feasibility is the same
+    CRAM-capacity check ``distribute`` applies; scoring is the caller's job.
+    """
+    k = w.reduce_extent()
+    pa = w.ins[0].prec
+    pb = w.ins[1].prec if len(w.ins) > 1 else pa
+    tile_options = (
+        list(range(1, cfg.num_tiles + 1))
+        if tile_constraint is None else [tile_constraint]
+    )
+    rs_options = _rs_options(w, cfg)
+    if rs_constraint is not None:
+        rs_options = [r for r in rs_options if r == rs_constraint]
+    db_options = (False, True) if _DB_BUFFERS.get(w.op) else (False,)
+    if db_constraint is not None:
+        db_options = tuple(d for d in db_options if d == db_constraint)
+    prec_options = sorted({
+        min(adaptive_precision(pa, pb, k, w.op), w.acc_prec), w.acc_prec,
+    })
+    out: List[Mapping] = []
+    for tiles in tile_options:
+        for rs in rs_options:
+            if k % rs:
+                continue
+            kc_opts = _k_chunk_options(w, k // rs)
+            if k_chunk_constraint is not None:
+                kc_opts = [kc for kc in kc_opts if kc == k_chunk_constraint]
+            for kc in kc_opts:
+                for db in db_options:
+                    for op in prec_options:
+                        m = _mapping_at(
+                            w, cfg, tiles, rs, kc,
+                            double_buffered=db, out_prec=op,
+                        )
+                        if m is not None:
+                            out.append(m)
+    return out
 
 
 def _k_chunk_options(w: Workload, k_per_lane: int) -> List[int]:
@@ -614,11 +737,10 @@ def distribute_graph(
                     and e.dst_input == "in_b"
                     and not _mac_chain_shape_ok(w, g.node(e.src))
                 ):
-                    notes.append(
-                        f"{e.src}->{e.dst}: producer field layout does not "
-                        "match the mac's shared-operand shape, DRAM "
-                        "round-trip kept"
-                    )
+                    _note(notes, NOTE_CHAIN_SHAPE,
+                          f"{e.src}->{e.dst}: producer field layout does not "
+                          "match the mac's shared-operand shape, DRAM "
+                          "round-trip kept")
                     continue
                 if not _producer_layout_ok(mp):
                     repinned = distribute(
@@ -627,15 +749,13 @@ def distribute_graph(
                         strict=False,
                     )
                     if repinned is None or not _producer_layout_ok(repinned):
-                        notes.append(
-                            f"{e.src}->{e.dst}: producer cannot take the "
-                            "lane-contiguous layout, DRAM round-trip kept"
-                        )
+                        _note(notes, NOTE_PROD_LAYOUT,
+                              f"{e.src}->{e.dst}: producer cannot take the "
+                              "lane-contiguous layout, DRAM round-trip kept")
                         continue
-                    repinned.notes.append(
-                        "reduce_split pinned to 1: output stays CRAM-resident "
-                        f"for {e.dst}"
-                    )
+                    _note(repinned.notes, NOTE_RES_PIN,
+                          "reduce_split pinned to 1: output stays "
+                          f"CRAM-resident for {e.dst}")
                     repins[e.src] = repinned
                 ok.append(e)
             # all resident producers of this node must share a tiling
@@ -671,11 +791,11 @@ def distribute_graph(
                         eager += cost_fn(w_src, mappings[src], frozenset())
                     if fused >= eager:
                         accept = False
-                        notes.append(
-                            f"{w.name}: residency declined — fused plan models "
-                            f"{fused:.0f} data-movement cycles vs {eager:.0f} "
-                            "eager (re-pinned reduction adds DRAM phases)"
-                        )
+                        _note(notes, NOTE_RES_COST,
+                              f"{w.name}: residency declined — fused plan "
+                              f"models {fused:.0f} data-movement cycles vs "
+                              f"{eager:.0f} eager (re-pinned reduction adds "
+                              "DRAM phases)")
                 if accept:
                     m = m_try
                     taken = ok
@@ -683,10 +803,9 @@ def distribute_graph(
                 elif m_try is None or not all(
                     _consumer_layout_ok(m_try, pmap(e)) for e in ok
                 ):
-                    notes.append(
-                        f"{w.name}: consumer layout incompatible with "
-                        "producer tiling, DRAM round-trip kept"
-                    )
+                    _note(notes, NOTE_CONS_LAYOUT,
+                          f"{w.name}: consumer layout incompatible with "
+                          "producer tiling, DRAM round-trip kept")
         if m is None and state_pins and w.name in state_pins:
             # a persistent-state updater must mutate its reserved wordlines
             # in place: one tile, one serial step, no reduce split.  Ask for
@@ -697,9 +816,8 @@ def distribute_graph(
             if m is not None and (m.serial_iters != 1 or m.tiles_used != 1):
                 m = None
             if m is not None:
-                m.notes.append(
-                    "tile pinned to 1: in-place persistent-state update"
-                )
+                _note(m.notes, NOTE_STATE_TILE,
+                      "tile pinned to 1: in-place persistent-state update")
         if m is None:
             m = m_free if m_free is not None else distribute(w, cfg)
         mappings[w.name] = m
@@ -713,26 +831,23 @@ def distribute_graph(
             raise KeyError(f"state pin on unknown node {name!r}")
         m = mappings[name]
         if m.serial_iters != 1 or m.tiles_used != 1:
-            notes.append(
-                f"{name}: state residency declined — the update layout is "
-                f"not a single-step single-tile in-place pass "
-                f"(serial_iters={m.serial_iters}, tiles={m.tiles_used})"
-            )
+            _note(notes, NOTE_STATE_LAYOUT,
+                  f"{name}: state residency declined — the update layout is "
+                  f"not a single-step single-tile in-place pass "
+                  f"(serial_iters={m.serial_iters}, tiles={m.tiles_used})")
             continue
         if cost_fn is not None:
             elide = frozenset(set(pins) & {"in_a", "in_b", "out"})
             fused = cost_fn(g.node(name), m, elide)
             eager = cost_fn(g.node(name), m, frozenset())
             if fused >= eager:
-                notes.append(
-                    f"{name}: state residency declined — fused plan models "
-                    f"{fused:.0f} data-movement cycles vs {eager:.0f} eager"
-                )
+                _note(notes, NOTE_STATE_COST,
+                      f"{name}: state residency declined — fused plan models "
+                      f"{fused:.0f} data-movement cycles vs {eager:.0f} eager")
                 continue
-        notes.append(
-            f"{name}: persistent state CRAM-resident — the append updates "
-            "the reserved wordlines in place, no DRAM round-trip"
-        )
+        _note(notes, NOTE_STATE_ON,
+              f"{name}: persistent state CRAM-resident — the append updates "
+              "the reserved wordlines in place, no DRAM round-trip")
         accepted[name] = {b: [tuple(r) for r in rr] for b, rr in pins.items()}
 
     declined_updaters = {n for n in (state_pins or {}) if n not in accepted}
@@ -778,10 +893,9 @@ def _allocate_graph_mappings(gm: GraphMapping, cfg: PimsabConfig) -> None:
         if db_bad:
             for n in db_bad:
                 gm.mappings[n].double_buffered = False
-            gm.notes.append(
-                f"double buffering dropped on {db_bad}: alt chunk buffers "
-                "don't fit around the live intermediates"
-            )
+            _note(gm.notes, NOTE_DB_DROPPED,
+                  f"double buffering dropped on {db_bad}: alt chunk buffers "
+                  "don't fit around the live intermediates")
             continue
         # drop every resident edge whose live intermediate squeezes a failing
         # node — including edges that merely *span* it (A→C reserving rows
@@ -796,10 +910,9 @@ def _allocate_graph_mappings(gm: GraphMapping, cfg: PimsabConfig) -> None:
             # last relief valve: give up the persistent-state reservations
             # (the states fall back to host-side round-trips per step)
             if gm.state_pins:
-                gm.notes.append(
-                    f"state residency dropped around {bad}: reserved state "
-                    "rows squeeze the node's own buffers out of CRAM"
-                )
+                _note(gm.notes, NOTE_STATE_DROPPED,
+                      f"state residency dropped around {bad}: reserved state "
+                      "rows squeeze the node's own buffers out of CRAM")
                 # the updaters now stream: their stores must reach DRAM so
                 # the host-side state mirrors can harvest the new cache
                 gm.must_store |= set(gm.state_pins)
@@ -810,9 +923,9 @@ def _allocate_graph_mappings(gm: GraphMapping, cfg: PimsabConfig) -> None:
                 "without residency — per-op distribute() admitted a mapping "
                 "the joint allocator rejects"
             )
-        gm.notes.append(
-            f"residency around {bad} dropped: live intermediates exceed CRAM rows"
-        )
+        _note(gm.notes, NOTE_RES_DROPPED,
+              f"residency around {bad} dropped: live intermediates exceed "
+              "CRAM rows")
         gm.resident = dropped
 
 

@@ -58,8 +58,11 @@ E-PREC-OVERFLOW    error     worst-case accumulator bits exceed the written
                              width, which is below the planned out_prec
 E-NO-EFFECT        error     an Instr subclass lacks an effect signature
 W-PREC-CLAMP       warning   wrap at the planned width — clamp is load-bearing
-N-PLAN             note      distribute/distribute_graph plan notes (declined
-                             residency, dropped double buffering, savings)
+N-PLAN-*           note      distribute/distribute_graph plan notes (declined
+                             residency, dropped double buffering, savings);
+                             the suffix is the note's stable machine-readable
+                             code (e.g. N-PLAN-RES-COST, N-PLAN-DB-DECLINED),
+                             un-coded legacy notes stay plain N-PLAN
 =================  ========  ====================================================
 """
 from __future__ import annotations
@@ -70,7 +73,7 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 from repro.core import isa
 from repro.core.compiler.allocation import signed_bits as _signed_bits
-from repro.core.compiler.distribute import GraphMapping, Mapping
+from repro.core.compiler.distribute import GraphMapping, Mapping, note_code
 from repro.core.compiler.tensor_dsl import out_buffer
 from repro.core.machine import PimsabConfig
 
@@ -804,9 +807,12 @@ def _graph_structure_diags(cg, capacity: int) -> List[Diagnostic]:
 def _plan_notes(plan) -> List[Diagnostic]:
     """Re-emit ``Mapping``/``GraphMapping`` plan notes (declined residency,
     dropped double buffering, fragmentation savings) as N-PLAN diagnostics —
-    the structured channel ``compile_cache_info`` entries record."""
+    the structured channel ``compile_cache_info`` entries record.  Each
+    note's machine-readable prefix (``N-PLAN-RES-COST: ...``) becomes the
+    diagnostic code, so tooling keys on the decision kind, not the prose;
+    un-coded legacy notes stay plain ``N-PLAN``."""
     return [
-        Diagnostic("N-PLAN", "note", note, node=node)
+        Diagnostic(note_code(note), "note", note, node=node)
         for node, note in plan.plan_notes()
     ]
 

@@ -104,6 +104,11 @@ __all__ = [
     "compile_cache_info",
     "clear_compile_cache",
     "PimsabTracerError",
+    # Mapping autotuner (re-exported from repro.core.compiler.autotune)
+    "TuneConfig",
+    "tuning",
+    "tune_cache_info",
+    "clear_tune_cache",
     # Static verifier (re-exported from repro.core.compiler.verify)
     "VerifierError",
     "VerifierWarning",
@@ -926,4 +931,15 @@ from repro.core.compiler.verify import (  # noqa: E402
     VerifierError,
     VerifierWarning,
     VerifyReport,
+)
+
+# Mapping autotuner (``api.compile(..., tune=True | TuneConfig(...))``, or
+# scope-wide via ``with api.tuning(...):``).  Tuned winners are cached like
+# compiled executables; inspect hits/misses/provenance via
+# ``api.tune_cache_info()``.
+from repro.core.compiler.autotune import (  # noqa: E402
+    TuneConfig,
+    clear_tune_cache,
+    tune_cache_info,
+    tuning,
 )

@@ -70,6 +70,7 @@ from repro.core.compiler.allocation import (
     adaptive_precision,
     softmax_out_prec,
 )
+from repro.core.compiler import autotune
 from repro.core.compiler.codegen import (
     CompiledGraph,
     CompiledProgram,
@@ -243,6 +244,8 @@ class SimReport:
     dram_traffic: Dict[str, Any] = field(default_factory=dict)  # node -> stream bits
     elided_dram_bits: float = 0.0
     resident_edges: Tuple[str, ...] = ()        # "src->dst" elided boundaries
+    # --- autotuner provenance (empty when the compile was not tuned) ------
+    autotune: Dict[str, Any] = field(default_factory=dict)
 
     def to_json(self) -> Dict[str, Any]:
         out = {
@@ -271,6 +274,8 @@ class SimReport:
             out["dram_traffic"] = {k: dict(v) for k, v in self.dram_traffic.items()}
             out["elided_dram_bits"] = self.elided_dram_bits
             out["resident_edges"] = list(self.resident_edges)
+        if self.autotune:
+            out["autotune"] = dict(self.autotune)
         return out
 
 
@@ -532,14 +537,28 @@ def timing_report(
     cfg: PimsabConfig = TIMING_CFG,
     functional_instrs: int = 0,
     verify: bool = False,
+    tune: Any = None,
 ) -> SimReport:
     """Compile ``w`` for the full-scale machine and run the analytic model.
 
     ``verify=True`` additionally runs the static verifier over the
     full-scale stream (raising on errors) — opt-in here because eager
     dispatch already verifies the functional stream of the same workload.
+
+    ``tune`` (``True`` or a :class:`~repro.core.compiler.autotune.TuneConfig`)
+    runs the mapping autotuner over the *timing* stream and reports the
+    winner; ``None`` inherits an enclosing :func:`autotune.tuning` scope
+    (how eager kernel dispatch opts in).  Functional execution is never
+    tuned, so results are unchanged — only the modeled schedule is.
     """
-    cp = compile_workload(w, cfg)
+    tc = autotune.resolve(tune) if tune is not None else autotune.active()
+    mapping = None
+    tuned_prov: Dict[str, Any] = {}
+    if tc is not None:
+        tw = autotune.tune_workload(w, cfg, tc)
+        mapping = tw.mapping
+        tuned_prov = tw.provenance
+    cp = compile_workload(w, cfg, mapping=mapping)
     if verify:
         verify_compiled(cp, cfg).raise_on_error()
     res = Simulator(cfg, record_timeline=_profiling()).run(cp.program)
@@ -561,6 +580,7 @@ def timing_report(
         critical_path=dict(res.critical_path),
         utilization=res.utilization(),
         timeline=tuple(res.timeline) if res.timeline else (),
+        autotune=tuned_prov,
     )
 
 
@@ -1997,6 +2017,7 @@ def compile_traced_program(
     *,
     verify: bool = True,
     state_slots=None,
+    tune: Any = None,
 ) -> CompiledTracedProgram:
     """Lower a traced Program into one WorkloadGraph and compile it for the
     functional machine (execution) and the full-scale machine (report).
@@ -2012,7 +2033,14 @@ def compile_traced_program(
     ResidentState spec: the slot's ``kv_append`` updater is pinned to a
     reserved wordline region so the cache append updates CRAM in place (the
     mapping layer may still decline — cost- or capacity-gated — in which
-    case the state transparently falls back to a host-side round-trip)."""
+    case the state transparently falls back to a host-side round-trip).
+
+    ``tune`` (``True`` or a :class:`~repro.core.compiler.autotune.TuneConfig`;
+    ``None`` inherits an enclosing :func:`autotune.tuning` scope) runs the
+    graph-level mapping autotuner over the **timing** lowering only: the
+    functional stream keeps the heuristic plan, so execution stays
+    bit-exact while the modeled schedule takes the searched winner.  The
+    search provenance lands in ``report.autotune``."""
     cfg_fn = cfg_fn or _functional_cfg()
     cfg_t = cfg_timing or TIMING_CFG
     assert cfg_fn.cram_rows == cfg_t.cram_rows, "state layout needs equal CRAMs"
@@ -2025,7 +2053,14 @@ def compile_traced_program(
         for b in state_bindings
     }
     cg_fn = compile_graph(graph, cfg_fn, state_pins=pins or None)
-    cg_t = compile_graph(graph, cfg_t, state_pins=pins or None)
+    tc = autotune.resolve(tune) if tune is not None else autotune.active()
+    tuned_prov: Dict[str, Any] = {}
+    if tc is not None:
+        tg = autotune.tune_graph(graph, cfg_t, tc, state_pins=pins or None)
+        cg_t = compile_graph(graph, cfg_t, gm=tg.gm)
+        tuned_prov = tg.provenance
+    else:
+        cg_t = compile_graph(graph, cfg_t, state_pins=pins or None)
     vreports: Tuple[VerifyReport, ...] = ()
     if verify:
         vreports = (verify_graph(cg_fn, cfg_fn), verify_graph(cg_t, cfg_t))
@@ -2039,6 +2074,7 @@ def compile_traced_program(
     report = _program_report(
         program, cg_t, cfg_t,
         functional_instrs=len(cg_fn.program), state_edges=state_edges,
+        tuned_prov=tuned_prov,
     )
     return CompiledTracedProgram(
         program=program,
@@ -2053,7 +2089,8 @@ def compile_traced_program(
 
 
 def timing_program_report(
-    program, cfg_timing: Optional[PimsabConfig] = None, *, verify: bool = True
+    program, cfg_timing: Optional[PimsabConfig] = None, *, verify: bool = True,
+    tune: Any = None,
 ) -> SimReport:
     """Timing-only program lowering: compile the fused WorkloadGraph for the
     full-scale machine and run the analytic model, skipping the functional
@@ -2061,20 +2098,30 @@ def timing_program_report(
     functional simulation (the paper-shaped ResNet18 config) still get their
     modeled end-to-end cycles/energy and per-layer breakdown.  ``verify=True``
     (the default) statically verifies the full-scale stream first and raises
-    on any error."""
+    on any error.  ``tune`` opts the graph plan into the mapping autotuner
+    (``None`` inherits an enclosing :func:`autotune.tuning` scope)."""
     cfg_t = cfg_timing or TIMING_CFG
     _, _, graph = _build_graph(program)
-    cg_t = compile_graph(graph, cfg_t)
+    tc = autotune.resolve(tune) if tune is not None else autotune.active()
+    tuned_prov: Dict[str, Any] = {}
+    if tc is not None:
+        tg = autotune.tune_graph(graph, cfg_t, tc)
+        cg_t = compile_graph(graph, cfg_t, gm=tg.gm)
+        tuned_prov = tg.provenance
+    else:
+        cg_t = compile_graph(graph, cfg_t)
     if verify:
         vrep = verify_graph(cg_t, cfg_t)
         _tls.verify_reports = (vrep,)
         vrep.raise_on_error()
-    return _program_report(program, cg_t, cfg_t, functional_instrs=0)
+    return _program_report(program, cg_t, cfg_t, functional_instrs=0,
+                           tuned_prov=tuned_prov)
 
 
 def _program_report(
     program, cg_t: CompiledGraph, cfg: PimsabConfig, functional_instrs: int,
     state_edges: Tuple[str, ...] = (),
+    tuned_prov: Optional[Dict[str, Any]] = None,
 ) -> SimReport:
     """Aggregated timing/energy over the fused stream, attributed per node
     via the codegen segments, with the cross-kernel DRAM-traffic breakdown.
@@ -2132,6 +2179,7 @@ def _program_report(
         dram_traffic=traffic,
         elided_dram_bits=gm.total_elided_bits,
         resident_edges=tuple(f"{e.src}->{e.dst}" for e in gm.resident) + state_edges,
+        autotune=dict(tuned_prov or {}),
     )
 
 

@@ -566,12 +566,15 @@ def _executor_meta(ex: "Executor") -> Dict[str, Any]:
                 for r in ex.verify_reports for d in r.notes
             }),
         }
+    if ex.report is not None and getattr(ex.report, "autotune", None):
+        entry["autotune"] = dict(ex.report.autotune)
     return entry
 
 
 def compile_program(program: Program, backend: Optional[str] = None, *,
                     verify: bool = True,
-                    states: Optional[Dict[int, ResidentState]] = None) -> Executor:
+                    states: Optional[Dict[int, ResidentState]] = None,
+                    tune: Any = None) -> Executor:
     """Lower ``program`` for ``backend`` (default: the active backend) and
     return the Executor — cached on (signature, backend[, machine config,
     verify]), so an identical second compile is a pure cache hit.
@@ -588,24 +591,36 @@ def compile_program(program: Program, backend: Optional[str] = None, *,
     slot's KV cache stays CRAM-resident across calls.  The cache key carries
     the state *specs*, so spec-identical handles share one executor — use
     :meth:`Executor.bind_states` (done here automatically) to swap handles
-    between calls."""
+    between calls.
+
+    ``tune`` (pimsab only) opts the timing-side lowering into the mapping
+    autotuner: ``True`` uses the default :class:`~repro.core.compiler.
+    autotune.TuneConfig`, an explicit ``TuneConfig`` pins the search budget
+    and seed, ``False`` forces it off, and ``None`` (the default) inherits
+    an enclosing :func:`repro.kernels.api.tuning` scope.  The effective
+    config joins the cache key, so tuned and untuned executors for the same
+    program coexist, and the winning search provenance is recorded on the
+    cache entry (``compile_cache_info().entries[...]["autotune"]``)."""
     from repro.kernels import api
 
     backend = api._check_backend(backend or api.current_backend())
     key: Tuple = ("program", program.signature(), backend)
     if backend == "pimsab":
+        from repro.core.compiler import autotune
         from repro.kernels import pimsab_backend as pb
 
+        tc = autotune.resolve(tune) if tune is not None else autotune.active()
         state_specs = tuple(sorted(
             (slot, st.spec()) for slot, st in (states or {}).items()
         ))
-        key = key + (pb._functional_cfg(), bool(verify), state_specs)
+        key = key + (pb._functional_cfg(), bool(verify), state_specs, tc)
 
         def build() -> Executor:
             compiled = pb.compile_traced_program(
                 program, verify=verify,
                 state_slots={slot: st.spec() for slot, st in states.items()}
                 if states else None,
+                tune=tc if tc is not None else False,
             )
             ex = Executor(
                 program, backend,

@@ -18,7 +18,7 @@ shares one cached executor and the scheduler just rebinds its cache handles
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Any, Dict, Tuple
 
 import numpy as np
 
@@ -100,13 +100,18 @@ def decode_program(cfg: AttnServeConfig, capacity: int) -> Program:
 
 def decode_executor(cfg: AttnServeConfig, capacity: int,
                     k_state: ResidentState, v_state: ResidentState,
-                    backend: str = "pimsab") -> Executor:
+                    backend: str = "pimsab", tune: Any = None) -> Executor:
     """Compile (or cache-hit) the bucket's decode step and bind the given
     request's cache handles.  Spec-identical handles hit the same cached
-    executor — see ``api.compile_cache_info()``."""
+    executor — see ``api.compile_cache_info()``.
+
+    ``tune`` opts the bucket's timing plan into the mapping autotuner (per
+    :func:`api.compile`): the search runs once per (cfg, capacity) bucket
+    and every request decoding in that bucket replays the tuned schedule."""
     return api.compile(
         decode_program(cfg, capacity), backend,
         states={0: k_state, 1: v_state},
+        tune=tune,
     )
 
 

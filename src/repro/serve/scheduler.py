@@ -29,7 +29,7 @@ from __future__ import annotations
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -139,11 +139,13 @@ class ContinuousBatcher:
         max_active: int = 4,
         backend: str = "pimsab",
         model: Optional[ToyTokenModel] = None,
+        tune: Any = None,
     ):
         self.cfg = cfg or AttnServeConfig()
         self.buckets = tuple(sorted(int(b) for b in buckets))
         self.max_active = int(max_active)
         self.backend = backend
+        self.tune = tune
         self.model = model or ToyTokenModel(self.cfg)
         self.pending: Deque[ServeRequest] = deque()
         self.active: List[ServeRequest] = []
@@ -227,7 +229,7 @@ class ContinuousBatcher:
         # compile-cache hit for every request after the bucket's first;
         # the call also rebinds this request's cache handles
         ex = decode_executor(self.cfg, r.capacity, r.k_state, r.v_state,
-                             backend=self.backend)
+                             backend=self.backend, tune=self.tune)
         ctx = run_decode_step(ex, self.cfg, r.capacity, q, k_new, v_new, r.pos)
         r.pos += 1
         rep = api.last_sim_report()

@@ -1,0 +1,203 @@
+"""Mapping-autotuner invariants (tentpole of the autotune PR).
+
+Four families:
+
+1. **Determinism**: the search loop contains no wall-clock or RNG state —
+   the same ``TuneConfig(seed, budget)`` on the same workload/program
+   signature selects an identical mapping, and the second compile is a pure
+   tune-cache (and compile-cache) hit.
+2. **Safety**: the winner never models more cycles than the heuristic
+   incumbent, always passes the static verifier, and execution stays
+   bit-exact (tuning touches the timing stream only).
+3. **Surface**: ``api.compile(..., tune=)`` / ``api.tuning`` scope / cache
+   keying — tuned and untuned executors coexist, provenance lands in
+   ``SimReport.autotune`` and ``compile_cache_info().entries``.
+4. The satellite note-code regressions: every plan note carries a stable
+   ``N-PLAN-*`` machine-readable prefix and retried candidates never
+   duplicate a note.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from benchmarks import workloads
+import importlib
+
+# the compiler package re-exports the distribute *function*; go through
+# importlib to get the module (where the NOTE_* code constants live)
+distribute = importlib.import_module("repro.core.compiler.distribute")
+from repro.core.compiler import autotune  # noqa: E402
+from repro.core.compiler.codegen import compile_workload
+from repro.core.compiler.distribute import note_code
+from repro.core.compiler.verify import verify_compiled
+from repro.core.machine import PIMSAB
+from repro.core.simulator import Simulator
+from repro.kernels import api
+
+
+TC = autotune.TuneConfig(budget=64, beam=4, seed=0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    autotune.clear_tune_cache()
+    api.clear_compile_cache()
+    yield
+    autotune.clear_tune_cache()
+    api.clear_compile_cache()
+
+
+def _small_gemm():
+    return workloads.gemm(m=32, n=32, k=64, prec=8, acc=32)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+def test_same_config_selects_identical_mapping():
+    w = _small_gemm()
+    tw1 = autotune.tune_workload(w, PIMSAB, TC)
+    autotune.clear_tune_cache()  # force a genuine re-search, not a cache hit
+    tw2 = autotune.tune_workload(w, PIMSAB, TC)
+    assert tw1.mapping.to_json() == tw2.mapping.to_json()
+    assert tw1.cycles == tw2.cycles
+    assert tw1.provenance == tw2.provenance
+
+
+def test_second_tune_hits_tune_cache():
+    w = _small_gemm()
+    tw1 = autotune.tune_workload(w, PIMSAB, TC)
+    before = autotune.tune_cache_info()
+    tw2 = autotune.tune_workload(w, PIMSAB, TC)
+    after = autotune.tune_cache_info()
+    assert after.hits == before.hits + 1
+    assert after.misses == before.misses
+    assert tw2 is tw1
+
+
+def test_different_seed_or_budget_is_a_different_cache_entry():
+    w = _small_gemm()
+    autotune.tune_workload(w, PIMSAB, TC)
+    autotune.tune_workload(w, PIMSAB, autotune.TuneConfig(budget=64, beam=4, seed=1))
+    autotune.tune_workload(w, PIMSAB, autotune.TuneConfig(budget=32, beam=4, seed=0))
+    assert autotune.tune_cache_info().size == 3
+
+
+# ---------------------------------------------------------------------------
+# safety
+# ---------------------------------------------------------------------------
+
+
+def test_winner_never_worse_than_heuristic_and_verifier_clean():
+    for make in (lambda: _small_gemm(),
+                 lambda: workloads.gemm(m=16, n=8, k=32, prec=8, acc=32),
+                 lambda: workloads.relu(4096)):
+        w = make()
+        tw = autotune.tune_workload(w, PIMSAB, TC)
+        assert tw.cycles <= tw.baseline_cycles
+        cp = compile_workload(w, PIMSAB, mapping=tw.mapping)
+        rep = verify_compiled(cp, PIMSAB)
+        assert rep.ok, [d.message for d in rep.errors]
+        # the modeled makespan of the winner is what tune_workload reported
+        res = Simulator(PIMSAB).run(cp.program)
+        assert res.total_cycles == tw.cycles
+
+
+def test_tuned_winner_carries_tuned_note():
+    w = _small_gemm()
+    tw = autotune.tune_workload(w, PIMSAB, TC)
+    if tw.provenance["improvement_pct"] > 0:
+        assert any(n.startswith(distribute.NOTE_TUNED) for n in tw.mapping.notes)
+
+
+# ---------------------------------------------------------------------------
+# public surface: api.compile(tune=), scopes, caches, bit-exactness
+# ---------------------------------------------------------------------------
+
+
+def _chain_program():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-100, 100, (16, 32)), jnp.int32)
+    w = jnp.asarray(rng.integers(-100, 100, (32, 8)), jnp.int32)
+
+    def f(x, w):
+        return api.relu(api.int_matmul(x, w, x_bits=8, w_bits=8))
+
+    with api.use_backend("pimsab"):
+        traced = api.trace(f, name="autotune_test_chain")
+        prog = traced.program_for(x, w)
+    return prog, x, w
+
+
+def test_compile_tune_is_cached_and_bit_exact():
+    prog, x, w = _chain_program()
+    with api.use_backend("pimsab"):
+        ex_base = api.compile(prog)
+        base = ex_base(x, w)
+        ex1 = api.compile(prog, tune=TC)
+        got = ex1(x, w)
+        ex2 = api.compile(prog, tune=TC)
+    # tuned and untuned executors coexist under distinct cache keys
+    assert ex1 is not ex_base
+    assert ex2 is ex1  # identical (signature, tune) -> compile-cache hit
+    # tuning may only change the modeled schedule, never the results
+    assert np.array_equal(np.asarray(got[0]), np.asarray(base[0]))
+    assert ex1.report.total_cycles <= ex_base.report.total_cycles
+    assert ex1.report.autotune["mode"] == "graph"
+    assert ex1.report.autotune["budget"] == TC.budget
+    # provenance is visible on the cache entry
+    entries = [e for e in api.compile_cache_info().entries if "autotune" in e]
+    assert entries and entries[-1]["autotune"]["mode"] == "graph"
+
+
+def test_tuning_scope_matches_explicit_argument():
+    prog, _, _ = _chain_program()
+    with api.use_backend("pimsab"):
+        ex_explicit = api.compile(prog, tune=TC)
+        with api.tuning(TC):
+            ex_scoped = api.compile(prog)
+        ex_off = api.compile(prog, tune=False)
+    assert ex_scoped is ex_explicit  # same effective TuneConfig -> same key
+    assert ex_off is not ex_explicit
+
+
+def test_second_program_compile_hits_tune_cache():
+    prog, _, _ = _chain_program()
+    with api.use_backend("pimsab"):
+        api.compile(prog, tune=TC)
+        api.clear_compile_cache()  # force a recompile; the tune survives
+        before = autotune.tune_cache_info()
+        api.compile(prog, tune=TC)
+        after = autotune.tune_cache_info()
+    assert after.hits == before.hits + 1
+    assert after.misses == before.misses
+
+
+# ---------------------------------------------------------------------------
+# note codes (satellite): stable machine-readable prefixes, deduped
+# ---------------------------------------------------------------------------
+
+
+def test_all_plan_notes_carry_machine_readable_codes():
+    w = workloads.gemm(m=64, n=64, k=256, prec=8, acc=32)
+    m = distribute.distribute(w, PIMSAB)
+    assert m.notes, "expected at least one plan note on this shape"
+    for n in m.notes:
+        code = note_code(n)
+        assert code.startswith("N-PLAN"), n
+        assert n.startswith(code + ":"), n
+
+
+def test_note_code_parses_prefix_and_tolerates_prose():
+    assert note_code(f"{distribute.NOTE_DB_DECLINED}: double buffering "
+                     "declined: rows").startswith("N-PLAN-")
+    assert note_code("free-form prose with: a colon") == "N-PLAN"
+
+
+def test_candidate_retries_do_not_duplicate_notes():
+    cands = autotune.mapping_candidates(_small_gemm(), PIMSAB)
+    assert cands
+    for m in cands:
+        assert len(m.notes) == len(set(m.notes)), m.notes
