@@ -693,6 +693,118 @@ def simwall() -> Dict:
     }
 
 
+SCALING_CHIPS = (1, 2, 4, 8)
+
+
+def _scaling_rows(prog, workload: str) -> Dict:
+    """Strong- and weak-scaling curves for one traced program, untuned (the
+    plan search already compiles dozens of candidate segments; the pinned
+    numbers stay deterministic without an autotune budget riding along)."""
+    from repro.kernels import multichip as mc
+
+    strong, weak = [], []
+    base = None
+    for chips in SCALING_CHIPS:
+        rep = mc.cluster_timing_report(prog, chips=chips)
+        if base is None:
+            base = rep.total_cycles
+        strong.append({
+            "chips": chips,
+            "mesh": list(rep.mesh),
+            "plan": rep.plan,
+            "total_cycles": rep.total_cycles,
+            "serial_cycles": rep.serial_cycles,
+            "serialized_cycles": rep.serialized_cycles,
+            "overlapped_cycles": rep.overlapped_cycles,
+            "link_bits": rep.link_bits,
+            "speedup": round(base / rep.total_cycles, 3),
+            "notes": sorted({n.split(":", 1)[0] for n in rep.notes}),
+        })
+        if chips > 1:
+            wrep = mc.weak_scaling_report(prog, chips=chips)
+            weak.append({
+                "chips": chips,
+                "total_cycles": wrep.total_cycles,
+                "throughput_x": round(
+                    chips * base / wrep.total_cycles, 3),
+            })
+    return {"workload": workload, "strong": strong, "weak": weak}
+
+
+def scaling() -> Dict:
+    """Multi-chip scale-out curves (docs/benchmarks.md "scaling" schema).
+
+    The paper-shaped RESNET18 and one transformer decode layer, each planned
+    on 1/2/4/8-chip clusters by the simulator-backed cost model
+    (``repro.kernels.multichip``).  The ``--check`` gate pins three
+    invariants on top of the 5% cycle gate: strong scaling is monotone
+    (N-chip never loses to 1-chip — the replicated candidate guarantees it),
+    the overlapped makespan never exceeds the serialized schedule, and on
+    each workload at least one multi-chip point hides link traffic behind
+    compute strictly (``total_cycles < serial_cycles``)."""
+    from repro.models import resnet
+    from repro.serve.pimsab_step import decode_layer_program
+
+    cfg = resnet.RESNET18
+    params = resnet.init_params(cfg, seed=0)
+    x = resnet.make_input(cfg, batch=1, seed=1)
+    traced = api.trace(lambda p, v: resnet.forward(cfg, p, v),
+                       name="resnet18_scaling")
+    rows = [
+        _scaling_rows(traced.trace(params, x), "resnet18"),
+        _scaling_rows(decode_layer_program(), "decode_layer"),
+    ]
+    return {"chips": list(SCALING_CHIPS), "workloads": rows}
+
+
+def check_scaling(section: Optional[Dict], baseline: Dict,
+                  tol: float = 0.05) -> List[str]:
+    """The scaling-section gates (see :func:`scaling`)."""
+    failures: List[str] = []
+    if section is None:
+        failures.append("scaling: multi-chip section missing from run")
+        return failures
+    base_wl = {w["workload"]: w
+               for w in baseline.get("scaling", {}).get("workloads", [])}
+    for wl in section["workloads"]:
+        name = wl["workload"]
+        strong = wl["strong"]
+        one_chip = strong[0]["total_cycles"]
+        if strong[0]["chips"] != 1:
+            failures.append(f"scaling:{name}: strong curve must start at 1 chip")
+            continue
+        overlapped_somewhere = False
+        for row in strong:
+            label = f"scaling:{name}@{row['chips']}"
+            if row["total_cycles"] > one_chip * (1 + 1e-9):
+                failures.append(
+                    f"{label}: strong scaling not monotone "
+                    f"({row['total_cycles']} > 1-chip {one_chip})")
+            if row["total_cycles"] > row["serial_cycles"] * (1 + 1e-9):
+                failures.append(
+                    f"{label}: overlapped makespan {row['total_cycles']} "
+                    f"exceeds serialized {row['serial_cycles']}")
+            if row["chips"] > 1 and row["total_cycles"] < row["serial_cycles"]:
+                overlapped_somewhere = True
+            old_rows = {r["chips"]: r
+                        for r in base_wl.get(name, {}).get("strong", [])}
+            old = old_rows.get(row["chips"], {}).get("total_cycles")
+            if old and (row["total_cycles"] - old) / old > tol:
+                failures.append(
+                    f"{label}: modeled cycles {old} -> {row['total_cycles']} "
+                    f"(+{(row['total_cycles'] - old) / old:.1%} > {tol:.0%})")
+        if not overlapped_somewhere:
+            failures.append(
+                f"scaling:{name}: no multi-chip point overlaps communication "
+                "with compute (total_cycles == serial_cycles everywhere)")
+        for row in wl["weak"]:
+            if abs(row["total_cycles"] - one_chip) > 1e-6 * max(one_chip, 1):
+                failures.append(
+                    f"scaling:{name}@{row['chips']}(weak): per-chip makespan "
+                    f"{row['total_cycles']} drifted from 1-chip {one_chip}")
+    return failures
+
+
 def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> List[str]:
     """Correctness flags must hold and modeled cycles must not regress by
     more than ``tol`` vs the committed baseline (wall-clock fields are
@@ -769,12 +881,14 @@ def check_against_baseline(result: Dict, baseline: Dict, tol: float = 0.05) -> L
         failures.append("serve: serving section missing from run")
     else:
         failures.extend(serve_bench.check_serve(serve, baseline, tol=tol))
+    # multi-chip scaling gates: 5% cycles + monotonicity + overlap sentinels
+    failures.extend(check_scaling(result.get("scaling"), baseline, tol=tol))
     return failures
 
 
 _SECTION_PREFIXES = {
     "large": "large_shapes", "program": "program", "e2e": "e2e",
-    "serve": "serve", "simwall": "simwall",
+    "serve": "serve", "simwall": "simwall", "scaling": "scaling",
 }
 
 
@@ -897,6 +1011,7 @@ def main(check: bool = False, profile: bool = False,
             "e2e": e2e_resnet.collect(),
             "simwall": simwall(),
             "serve": serve_bench.collect(),
+            "scaling": scaling(),
         }
     if check:
         if not OUT_PATH.exists():
@@ -943,6 +1058,9 @@ def main(check: bool = False, profile: bool = False,
     print("simwall:", result["simwall"])
     for row in result["serve"]["batches"]:
         print("serve:", row)
+    for wl in result["scaling"]["workloads"]:
+        for row in wl["strong"]:
+            print(f"scaling:{wl['workload']}:", row)
     print(f"wrote {OUT_PATH}")
     return result
 

@@ -45,6 +45,7 @@ PUBLIC_MODULES = [
     "repro.kernels.ewise",
     "repro.kernels.conv",
     "repro.kernels.pimsab_backend",
+    "repro.kernels.multichip",
     "repro.dist.sharding",
     "repro.dist.collectives",
     "repro.models.common",
@@ -108,6 +109,14 @@ API_SYMBOLS = [
     "VerifierError",
     "VerifierWarning",
     "Diagnostic",
+    # multi-chip scale-out
+    "ChipCluster",
+    "ChipLink",
+    "ClusterExecutor",
+    "ClusterReport",
+    "compile_cluster",
+    "cluster_timing_report",
+    "weak_scaling_report",
 ]
 
 
@@ -297,9 +306,44 @@ def check_verifier_surface() -> list[str]:
     return errors
 
 
+def check_multichip_surface() -> list[str]:
+    """Gate 6: the multi-chip scale-out surface is complete.  ``api.compile``
+    accepts ``chips``/``cluster``/``plan``; the cluster classes re-exported
+    from the api module are the multichip module's own; and the link-phase
+    opcodes (ChipSend/ChipRecv) exist with a ``link`` resource effect so the
+    static verifier orders them."""
+    errors = []
+    try:
+        api = importlib.import_module("repro.kernels.api")
+        mc = importlib.import_module("repro.kernels.multichip")
+        sig = inspect.signature(api.compile)
+        for kw in ("chips", "cluster", "plan"):
+            if kw not in sig.parameters:
+                errors.append(f"api.compile has no {kw!r} kwarg (multi-chip)")
+        for sym in ("ChipCluster", "ChipLink", "ClusterExecutor",
+                    "ClusterReport", "compile_cluster",
+                    "cluster_timing_report", "weak_scaling_report"):
+            if getattr(api, sym, None) is not getattr(mc, sym, None) and \
+                    sym not in ("ChipCluster", "ChipLink"):
+                errors.append(f"api.{sym} is not multichip.{sym}")
+        isa = importlib.import_module("repro.core.isa")
+        for name in ("ChipSend", "ChipRecv"):
+            cls = getattr(isa, name, None)
+            if cls is None:
+                errors.append(f"isa.{name} missing (inter-chip link phases)")
+            elif "link" not in cls().effect().resources:
+                errors.append(f"isa.{name}.effect() does not claim the link "
+                              "timeline resource")
+    except Exception:
+        errors.append(f"multichip surface introspection failed:\n"
+                      f"{traceback.format_exc()}")
+    return errors
+
+
 def main() -> int:
     errors = (check_imports() + check_no_impl_kwarg() + check_no_ops_import()
-              + check_public_docstrings() + check_verifier_surface())
+              + check_public_docstrings() + check_verifier_surface()
+              + check_multichip_surface())
     if errors:
         print("check_api: FAIL")
         for e in errors:

@@ -2,7 +2,7 @@
 """ISA verification gate: every compiled pimsab program must pass the static
 verifier (``repro.core.compiler.verify``) with zero errors.
 
-Four sections, mirroring every lowering path the repo ships:
+Five sections, mirroring every lowering path the repo ships:
 
 1. **microbench** — each ``benchmarks.workloads.MICROBENCHES`` workload is
    compiled standalone at the full-chip config and verified
@@ -14,11 +14,15 @@ Four sections, mirroring every lowering path the repo ships:
 3. **program** — a traced matmul→ewise_add→relu chain is compiled through
    ``api.compile`` (both the functional and the timing stream are verified);
 4. **resnet** — the TINY preset is traced and compiled (functional + timing
-   streams) and the paper-shaped RESNET18 preset is verified timing-only.
+   streams) and the paper-shaped RESNET18 preset is verified timing-only;
+5. **multichip** — RESNET18 sharded across a 2-chip cluster: each chip's
+   scheduled stream (segment bodies plus the ChipSend/ChipRecv collective
+   phases the cluster timeline interleaves) is re-verified per chip.
 
 The full diagnostics (including warnings and residency N-PLAN notes) are
-written to ``ISA_verify_report.json``, which CI uploads as an artifact next
-to the bench report.  Exit code 0 when every section is clean, 1 otherwise.
+written to ``build/ISA_verify_report.json``, which CI uploads as an artifact
+next to the bench report.  Exit code 0 when every section is clean, 1
+otherwise.
 
 Run from the repo root:  ``PYTHONPATH=src python scripts/check_isa.py``
 """
@@ -43,7 +47,7 @@ from repro.kernels import api  # noqa: E402
 from repro.kernels import pimsab_backend as pb  # noqa: E402
 from repro.models import resnet  # noqa: E402
 
-REPORT_PATH = REPO / "ISA_verify_report.json"
+REPORT_PATH = REPO / "build" / "ISA_verify_report.json"
 
 
 def _conformance_cases():
@@ -161,12 +165,43 @@ def check_resnet() -> List[Dict[str, Any]]:
             _entry("resnet18_timing", run_resnet18)]
 
 
+def check_multichip() -> List[Dict[str, Any]]:
+    print("[multichip] sharded RESNET18, per-chip scheduled streams (2 chips)")
+
+    def run():
+        from repro.core.compiler.verify import verify_stream
+        from repro.kernels import multichip as mc
+
+        cfg = resnet.RESNET18
+        params = resnet.init_params(cfg, seed=0)
+        x = resnet.make_input(cfg, batch=1, seed=1)
+        traced = api.trace(lambda p, v: resnet.forward(cfg, p, v),
+                           name="check_isa_resnet18_mc")
+        prog = traced.trace(params, x)
+        streams = mc.cluster_chip_streams(prog, chips=2)
+        tcfg = mc.resolve_cluster(2, None).timing_cfg(pb.TIMING_CFG)
+        reports = []
+        for c, stream in enumerate(streams):
+            if not any(type(i).__name__ in ("ChipSend", "ChipRecv")
+                       for i in stream):
+                raise AssertionError(
+                    f"chip {c} stream carries no inter-chip phases — the "
+                    "sharded plan degenerated; the gate must cover the link ISA")
+            reports.append(
+                verify_stream(stream, tcfg,
+                              name=f"resnet18_2chip_c{c}").to_json())
+        return reports
+
+    return [_entry("resnet18_sharded_2chip", run)]
+
+
 def main() -> int:
     sections = {
         "microbench": check_microbenches(),
         "registry_eager": check_registry_eager(),
         "program": check_program_chain(),
         "resnet": check_resnet(),
+        "multichip": check_multichip(),
     }
     entries = [e for sec in sections.values() for e in sec]
     failed = [e["name"] for e in entries if not e["ok"]]
@@ -179,6 +214,7 @@ def main() -> int:
         "notes": sum(len(r.get("notes", []))
                      for e in entries for r in e["reports"]),
     }
+    REPORT_PATH.parent.mkdir(parents=True, exist_ok=True)
     REPORT_PATH.write_text(
         json.dumps({"summary": summary, "sections": sections}, indent=1) + "\n")
     print(f"\n{len(entries)} targets, {len(failed)} failed, "

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Regenerate tests/golden/interchip_allreduce_timeline.json.
+
+The golden pins the core-level contract of one butterfly allreduce on a 2x2
+ChipCluster: each chip streams a Mac window, publishes its ``x:``-token
+ChipSend, and a synchronizing ChipRecv joins the collective after all four
+send tokens.  The numbers lock the link cost model (stream occupancy +
+pipelined hop latency), the shared-token rendezvous, and the charge-stall
+accounting that keeps ``makespan <= serialized_cycles`` true per chip.
+
+Anyone who consciously moves the link model must rerun:
+
+    PYTHONPATH=src python scripts/make_golden_interchip.py
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import isa
+from repro.core.machine import PIMSAB
+from repro.core.noc import ChipCluster
+from repro.core.simulator import Simulator
+
+GOLDEN = Path(__file__).resolve().parents[1] / "tests" / "golden" / \
+    "interchip_allreduce_timeline.json"
+
+PAYLOAD_BITS = 64 * 1024  # a 2048-element int32 partial — mid-size activation
+
+
+def build_timeline(payload_bits: int = PAYLOAD_BITS):
+    """The canonical allreduce schedule (what _tp_timeline emits per round),
+    built from core primitives only so the golden pins the simulator/NoC
+    layer, not the compiler above it."""
+    cluster = ChipCluster(mesh=(2, 2))
+    cfg = cluster.timing_cfg(PIMSAB)
+    C = cluster.chips
+    port = cluster.allreduce_port_bits(payload_bits)
+    shared = {}
+    sims = [Simulator(cfg, shared_tokens=shared) for _ in range(C)]
+    send_toks = tuple(f"x:ar0:c{c}" for c in range(C))
+    for c, sim in enumerate(sims):
+        # a compute window before the collective: chips reach the exchange
+        # at the same (deterministic) local time
+        sim.step(isa.Mac(dst=64, prec_dst=24, src1=0, prec1=8,
+                         src2=32, prec2=8, phase="mm"))
+        sim.step(isa.ChipSend(chip=c, peer=-1, bits=port, rounds=1,
+                              phase=send_toks[c], tag="ar0"))
+        sim.step(isa.ChipRecv(chip=c, peer=-1, bits=port,
+                              rounds=cluster.allreduce_rounds(), sync=True,
+                              phase="ar0.done", after=send_toks, tag="ar0"))
+    return cluster, port, sims
+
+
+def timeline_json() -> dict:
+    cluster, port, sims = build_timeline()
+    return {
+        "mesh": list(cluster.mesh),
+        "payload_bits": PAYLOAD_BITS,
+        "port_bits": port,
+        "allreduce_rounds": cluster.allreduce_rounds(),
+        "allreduce_cycles": cluster.allreduce_cycles(PAYLOAD_BITS),
+        "link_bw_bits": cluster.link.bw_bits,
+        "link_latency_cycles": cluster.link.latency_cycles,
+        "per_chip": [
+            {
+                "chip": c,
+                "makespan": sim.res.makespan,
+                "serialized_cycles": sim.res.serialized_cycles,
+                "cycles": dict(sorted(sim.res.cycles.items())),
+                "busy": dict(sorted(sim.res.busy.items())),
+                "link_energy_pj": sim.res.energy.pj.get("link", 0.0),
+            }
+            for c, sim in enumerate(sims)
+        ],
+    }
+
+
+if __name__ == "__main__":
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(json.dumps(timeline_json(), indent=2) + "\n")
+    print(f"wrote {GOLDEN}")

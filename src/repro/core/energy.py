@@ -19,6 +19,7 @@ E_DRAM_BIT = 10.0        # per bit to/from HBM
 E_CTRL_INSTR = 5.0       # instruction controller decode/issue
 E_RF_ACCESS = 1.0        # register-file access
 E_XPOSE_BIT = 0.05       # transpose unit per bit
+E_LINK_BIT = 2.0         # inter-chip SerDes per bit (multi-chip scale-out)
 
 
 @dataclass
@@ -45,6 +46,10 @@ class EnergyLedger:
 
     def rf(self, accesses: float) -> None:
         self.pj["rf"] += E_RF_ACCESS * accesses
+
+    def link(self, bits: float) -> None:
+        # lazy key: single-chip ledgers keep the original breakdown shape
+        self.pj["link"] = self.pj.get("link", 0.0) + E_LINK_BIT * bits
 
     @property
     def total_j(self) -> float:

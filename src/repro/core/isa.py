@@ -393,6 +393,44 @@ class CramCopy(Instr):
         return Effect(resources=("htree",))
 
 
+@dataclass(frozen=True)
+class ChipSend(Instr):
+    """Push `bits` out of this chip's SerDes link port toward chip `peer`.
+
+    One ChipSend models a whole half of a collective round-trip: `bits` is
+    the total port occupancy (e.g. the (N-1)/N·payload a butterfly allreduce
+    streams out) and `rounds` the serial link-hop depth charged latency.
+    Paired with a ChipRecv on the peer via a shared `x:`-prefixed phase
+    token (cross-chip tokens live in the cluster-shared namespace)."""
+    chip: int = 0
+    peer: int = -1             # -1: collective (all peers)
+    bits: int = 0
+    rounds: int = 1            # serial link hops (latency fills, bw pipelines)
+    tag: str = ""
+
+    def effect(self) -> Effect:
+        # link payloads are not wordline-addressed in this ISA: opaque ranges
+        return Effect(resources=("link",))
+
+
+@dataclass(frozen=True)
+class ChipRecv(Instr):
+    """Pull `bits` in from the link port; completes the matching ChipSend's
+    collective (its `after` carries the senders' `x:` tokens).  With
+    `sync=True` the receive joins the chip's on-chip frontier — downstream
+    work serializes behind it (pipeline-stage boundaries, declined-overlap
+    fallback); otherwise only phase-gated consumers wait."""
+    chip: int = 0
+    peer: int = -1
+    bits: int = 0
+    rounds: int = 1
+    sync: bool = False
+    tag: str = ""
+
+    def effect(self) -> Effect:
+        return Effect(resources=("link",))
+
+
 # --- sync -----------------------------------------------------------------
 
 

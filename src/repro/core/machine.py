@@ -25,6 +25,13 @@ class PimsabConfig:
     rf_regs: int = 32
     rf_bits: int = 32
     dram_latency_cycles: int = 100
+    # inter-chip link interface (multi-chip scale-out): each chip exposes one
+    # full-duplex SerDes port onto the cluster interconnect.  1024 bits/clock
+    # at 1.5 GHz is 192 GB/s (NVLink-class); the latency covers SerDes +
+    # protocol + wire per link hop.  Single-chip programs never issue
+    # ChipSend/ChipRecv, so these fields are inert outside a ChipCluster run.
+    link_bw_bits: int = 1024
+    link_latency_cycles: int = 64
 
     @property
     def num_tiles(self) -> int:

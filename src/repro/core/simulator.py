@@ -128,6 +128,8 @@ class Simulator:
         exact_bits: bool = False,
         serialize: bool = False,
         record_timeline: bool = False,
+        shared_tokens: Optional[Dict[str, float]] = None,
+        record_stream: bool = False,
     ):
         from repro.core.machine import PIMSAB
 
@@ -152,6 +154,19 @@ class Simulator:
         self._free: Dict[str, float] = {}    # resource -> channel-free time
         self._tokens: Dict[str, float] = {}  # phase token -> completion time
         self._floor: float = 0.0             # last barrier's completion
+        # multi-chip: per-chip Simulators share wall-clock t=0 and publish
+        # tokens whose phase starts with "x:" into this cluster-wide dict, so
+        # a ChipRecv's `after` can wait on peers' ChipSend completions.  The
+        # on-chip frontier tracks everything *except* in-flight link
+        # transfers — barriers serialize behind local work but not behind
+        # link streaming, which is how cross-chip collectives genuinely
+        # overlap compute (single-chip: _onchip == makespan, so behavior is
+        # unchanged).
+        self._shared_tokens = shared_tokens
+        self._onchip: float = 0.0            # frontier excluding pure-link work
+        # opt-in: keep the exact instruction sequence stepped through this
+        # simulator (the ISA gate re-verifies per-chip cluster streams)
+        self.stream: Optional[list] = [] if record_stream else None
 
     # -- functional state access (tests drive these) -----------------------
     def cram(self, tile: int = 0, idx: int = 0) -> Cram:
@@ -180,6 +195,17 @@ class Simulator:
         return idxs
 
     # -- the timeline scheduler --------------------------------------------
+    def _token_get(self, tok: str) -> float:
+        at = self._tokens.get(tok, 0.0)
+        if self._shared_tokens is not None and tok.startswith("x:"):
+            at = max(at, self._shared_tokens.get(tok, 0.0))
+        return at
+
+    def _token_put(self, tok: str, at: float) -> None:
+        self._tokens[tok] = max(self._tokens.get(tok, 0.0), at)
+        if self._shared_tokens is not None and tok.startswith("x:"):
+            self._shared_tokens[tok] = max(self._shared_tokens.get(tok, 0.0), at)
+
     def _schedule(
         self,
         ins: isa.Instr,
@@ -187,6 +213,8 @@ class Simulator:
         charge: Dict[str, float],
         latency: float = 0.0,
         early_token: bool = False,
+        floor_onchip: bool = False,
+        charge_stall: bool = False,
     ) -> None:
         """Place ``ins`` on the timeline.
 
@@ -197,6 +225,13 @@ class Simulator:
         accounting.  ``early_token`` publishes the completion token at
         occupancy end instead (a DramStore's WAR hazard on its source buffer
         ends when the CRAM read finishes, not when DRAM acknowledges).
+        ``floor_onchip`` floors the start at the on-chip frontier even for
+        phase-tagged instructions (a ChipSend cannot stream a payload the
+        chip hasn't finished computing).  ``charge_stall`` books the idle
+        wait before ``start`` into the ``sync`` bucket — a synchronizing
+        cross-chip receive stalls the whole chip on another chip's clock,
+        time no local bucket would otherwise account for (keeps the
+        ``makespan <= serialized_cycles`` invariant true per chip).
         """
         res = self.res
         for k, v in charge.items():
@@ -206,24 +241,36 @@ class Simulator:
             self.serialize or ins.barrier or (ins.phase is None and not ins.after)
         )
         if is_barrier:
-            start = res.makespan  # after *everything* issued so far
+            # after all *on-chip* work issued so far (== makespan when no
+            # link transfers are in flight) + any cross-chip tokens it names
+            start = self._onchip
+            for tok in ins.after:
+                start = max(start, self._token_get(tok))
+            for r in stages:
+                start = max(start, self._free.get(r, 0.0))
         else:
             start = self._floor
             for tok in ins.after:
-                start = max(start, self._tokens.get(tok, 0.0))
+                start = max(start, self._token_get(tok))
             for r in stages:
                 start = max(start, self._free.get(r, 0.0))
+            if floor_onchip:
+                start = max(start, self._onchip)
+        if charge_stall:
+            stall = max(0.0, start - self._onchip)
+            res.cycles["sync"] = res.cycles.get("sync", 0.0) + stall
         for r, v in stages.items():
             self._free[r] = start + v
             res.busy[r] = res.busy.get(r, 0.0) + v
         done = start + dur + latency
         if not self.serialize and ins.phase is not None:
             token_at = start + dur if early_token else done
-            self._tokens[ins.phase] = max(
-                self._tokens.get(ins.phase, 0.0), token_at
-            )
+            self._token_put(ins.phase, token_at)
         if is_barrier:
             self._floor = done
+        pure_link = bool(stages) and all(r == "link" for r in stages)
+        if not pure_link or getattr(ins, "sync", False) or is_barrier:
+            self._onchip = max(self._onchip, done)
         if done > res.makespan:
             primary = _category(max(stages, key=stages.__getitem__)) if stages else "sync"
             res.critical_path[primary] = (
@@ -281,6 +328,8 @@ class Simulator:
 
     def step(self, ins: isa.Instr) -> None:
         cfg, res = self.cfg, self.res
+        if self.stream is not None:
+            self.stream.append(ins)
         res.instrs += 1
         tiles = self._tiles(ins)
         res.energy.controller(1, len(tiles))
@@ -509,6 +558,19 @@ class Simulator:
             self._schedule(ins, {"htree": c}, {"htree": c})
         elif isinstance(ins, (isa.Signal, isa.Wait)):
             self._schedule(ins, {"sync": 2.0}, {"sync": 2.0})
+        elif isinstance(ins, (isa.ChipSend, isa.ChipRecv)):
+            # inter-chip link: the port streams `bits` (occupancy); the
+            # serial hop latency (`rounds` deep) delays completion only —
+            # back-to-back collective rounds pipeline, like DRAM bursts.
+            stream = timing.cycles_link_stream(cfg, ins.bits)
+            lat = cfg.link_latency_cycles * max(1, ins.rounds)
+            res.energy.link(ins.bits)
+            self._schedule(
+                ins, {"link": float(stream)}, {"link": float(stream + lat)},
+                latency=float(lat),
+                floor_onchip=isinstance(ins, isa.ChipSend),
+                charge_stall=bool(getattr(ins, "sync", False)),
+            )
         else:
             raise ValueError(f"unhandled instruction {ins}")
 

@@ -115,5 +115,19 @@ def cycles_noc_naive_bcast(cfg: PimsabConfig, bits: int, hops_list) -> int:
     return sum(h + math.ceil(bits / cfg.t2t_bw_bits) for h in hops_list)
 
 
+def cycles_link_stream(cfg: PimsabConfig, bits: int) -> int:
+    """Inter-chip link occupancy of a transfer: streaming time alone.
+
+    Mirrors :func:`cycles_dram_stream`: the per-hop latency
+    (``link_latency_cycles``) delays *completion* but does not hold the
+    port — back-to-back rounds of a collective pipeline."""
+    return math.ceil(bits / cfg.link_bw_bits)
+
+
+def cycles_link(cfg: PimsabConfig, bits: int, hops: int = 1) -> int:
+    """Serialized inter-chip transfer cost: stream + per-hop latency fill."""
+    return cycles_link_stream(cfg, bits) + cfg.link_latency_cycles * max(1, hops)
+
+
 def seconds(cfg: PimsabConfig, cycles: float) -> float:
     return cycles / (cfg.clock_ghz * 1e9)

@@ -114,6 +114,14 @@ __all__ = [
     "VerifierWarning",
     "VerifyReport",
     "Diagnostic",
+    # Multi-chip scale-out (re-exported from repro.kernels.multichip)
+    "ChipCluster",
+    "ChipLink",
+    "ClusterExecutor",
+    "ClusterReport",
+    "compile_cluster",
+    "cluster_timing_report",
+    "weak_scaling_report",
 ]
 
 
@@ -942,4 +950,16 @@ from repro.core.compiler.autotune import (  # noqa: E402
     clear_tune_cache,
     tune_cache_info,
     tuning,
+)
+
+# Multi-chip scale-out (``api.compile(program, chips=N)`` or the explicit
+# cluster/report entry points) — sharded bit-exact execution over an
+# inter-chip link model; see repro.kernels.multichip and docs/architecture.md.
+from repro.core.noc import ChipCluster, ChipLink  # noqa: E402
+from repro.kernels.multichip import (  # noqa: E402
+    ClusterExecutor,
+    ClusterReport,
+    cluster_timing_report,
+    compile_cluster,
+    weak_scaling_report,
 )

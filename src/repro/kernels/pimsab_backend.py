@@ -1955,6 +1955,8 @@ class CompiledTracedProgram:
     cfg_fn: PimsabConfig
     verify_reports: Tuple[VerifyReport, ...] = ()  # (functional, timing) when verified
     states: Tuple[StateBinding, ...] = ()  # ResidentState layout (may be declined)
+    cg_t: Optional[CompiledGraph] = None  # timing stream (multi-chip re-steps it)
+    cfg_t: Optional[PimsabConfig] = None
 
 
 def _build_graph(program) -> Tuple[List[str], List[OpLowering], WorkloadGraph]:
@@ -2085,6 +2087,8 @@ def compile_traced_program(
         cfg_fn=cfg_fn,
         verify_reports=vreports,
         states=state_bindings,
+        cg_t=cg_t,
+        cfg_t=cfg_t,
     )
 
 
@@ -2100,6 +2104,18 @@ def timing_program_report(
     (the default) statically verifies the full-scale stream first and raises
     on any error.  ``tune`` opts the graph plan into the mapping autotuner
     (``None`` inherits an enclosing :func:`autotune.tuning` scope)."""
+    _, report = compile_timing_program(
+        program, cfg_timing, verify=verify, tune=tune
+    )
+    return report
+
+
+def compile_timing_program(
+    program, cfg_timing: Optional[PimsabConfig] = None, *, verify: bool = True,
+    tune: Any = None,
+) -> Tuple[CompiledGraph, SimReport]:
+    """:func:`timing_program_report` that also returns the compiled stream —
+    the multi-chip layer re-steps per-chip copies of it on a shared clock."""
     cfg_t = cfg_timing or TIMING_CFG
     _, _, graph = _build_graph(program)
     tc = autotune.resolve(tune) if tune is not None else autotune.active()
@@ -2114,8 +2130,9 @@ def timing_program_report(
         vrep = verify_graph(cg_t, cfg_t)
         _tls.verify_reports = (vrep,)
         vrep.raise_on_error()
-    return _program_report(program, cg_t, cfg_t, functional_instrs=0,
-                           tuned_prov=tuned_prov)
+    report = _program_report(program, cg_t, cfg_t, functional_instrs=0,
+                             tuned_prov=tuned_prov)
+    return cg_t, report
 
 
 def _program_report(

@@ -574,7 +574,10 @@ def _executor_meta(ex: "Executor") -> Dict[str, Any]:
 def compile_program(program: Program, backend: Optional[str] = None, *,
                     verify: bool = True,
                     states: Optional[Dict[int, ResidentState]] = None,
-                    tune: Any = None) -> Executor:
+                    tune: Any = None,
+                    chips: Optional[int] = None,
+                    cluster: Any = None,
+                    plan: str = "auto") -> Executor:
     """Lower ``program`` for ``backend`` (default: the active backend) and
     return the Executor — cached on (signature, backend[, machine config,
     verify]), so an identical second compile is a pure cache hit.
@@ -600,10 +603,35 @@ def compile_program(program: Program, backend: Optional[str] = None, *,
     an enclosing :func:`repro.kernels.api.tuning` scope.  The effective
     config joins the cache key, so tuned and untuned executors for the same
     program coexist, and the winning search provenance is recorded on the
-    cache entry (``compile_cache_info().entries[...]["autotune"]``)."""
+    cache entry (``compile_cache_info().entries[...]["autotune"]``).
+
+    ``chips``/``cluster`` (pimsab only) compile the program for a multi-chip
+    :class:`~repro.core.noc.ChipCluster` instead of one chip: the returned
+    :class:`~repro.kernels.multichip.ClusterExecutor` runs the sharded plan
+    bit-exactly against the 1-chip result.  ``plan`` forces ``"tp"``/``"pp"``
+    or leaves the cost model to choose (``"auto"``, the default)."""
     from repro.kernels import api
 
     backend = api._check_backend(backend or api.current_backend())
+    if cluster is not None or (chips is not None and int(chips) != 1):
+        # Multi-chip scale-out: shard the program across a ChipCluster and
+        # return the bit-exact ClusterExecutor (repro.kernels.multichip).
+        if backend != "pimsab":
+            raise NotImplementedError(
+                "chips/cluster sharding is a pimsab-backend concept; the "
+                "jax-side backends replay the whole program on one device"
+            )
+        if states:
+            raise NotImplementedError(
+                "ResidentState stays CRAM-resident on one chip and does not "
+                "shard across a ChipCluster; serve on chips=1"
+            )
+        from repro.kernels import multichip
+
+        return multichip.compile_cluster(
+            program, chips=chips, cluster=cluster,
+            plan=plan, verify=verify, tune=tune,
+        )
     key: Tuple = ("program", program.signature(), backend)
     if backend == "pimsab":
         from repro.core.compiler import autotune

@@ -98,6 +98,49 @@ def decode_program(cfg: AttnServeConfig, capacity: int) -> Program:
     return prog
 
 
+def decode_layer_program(model_dim: int = 256, head_dim: int = 16,
+                         ff_dim: int = 512, capacity: int = 8, *,
+                         q_bits: int = 3, kv_bits: int = 3,
+                         score_bits: int = 10, score_frac: int = 7,
+                         w_bits: int = 4) -> Program:
+    """One full transformer decode layer as a *stateless* traced Program —
+    the multi-chip scaling suite's second workload (RESNET18 being the
+    first).
+
+    Attention (q·Kᵀ → fixed-point softmax → p·V) followed by the output
+    projection and a two-layer ReLU FFN, all on the integer gemm path.  The
+    K/V cache enters as plain slots rather than ResidentState so the same
+    program can shard across a ChipCluster (cross-chip resident state is
+    out of scope; serving keeps the 1-chip CRAM-resident path).  The gemm
+    reduction dims (``head_dim``, ``model_dim``, ``ff_dim``) are the
+    tensor-parallel shard axes — keep them divisible by the chip count.
+    ``capacity`` stays small (like the serve buckets): the fixed-point
+    softmax keeps the whole score row resident per lane, so the context
+    length is bounded by the CRAM wordline budget.
+
+    ``score_bits`` must hold the worst-case q·k dot:
+    ``head_dim · 2^(q_bits-1) · 2^(kv_bits-1) < 2^(score_bits-1)``."""
+
+    def layer(kc, vc, q, wo, w1, w2):
+        s = api.attention_qk(q, kc, q_bits=q_bits, k_bits=kv_bits,
+                             out_bits=score_bits)
+        p = api.softmax_fixedpoint(s, in_frac=score_frac)
+        ctx = api.attention_pv(p, vc)
+        h = api.int_matmul(ctx, wo, w_bits=w_bits)
+        f = api.relu(api.int_matmul(h, w1, w_bits=w_bits))
+        return api.int_matmul(f, w2, w_bits=w_bits)
+
+    traced = api.trace(layer, name=f"decode_layer_{capacity}x{model_dim}")
+    return traced.trace(
+        np.zeros((capacity, head_dim), np.int8),
+        np.zeros((capacity, head_dim), np.int8),
+        np.zeros((1, head_dim), np.int8),
+        np.zeros((head_dim, model_dim), np.int8),
+        np.zeros((model_dim, ff_dim), np.int8),
+        np.zeros((ff_dim, model_dim), np.int8),
+    )
+
+
 def decode_executor(cfg: AttnServeConfig, capacity: int,
                     k_state: ResidentState, v_state: ResidentState,
                     backend: str = "pimsab", tune: Any = None) -> Executor:

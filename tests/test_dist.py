@@ -66,6 +66,77 @@ def test_batch_axis_fallbacks():
     assert rules.batch_axes(1) is None  # long_500k: replicate batch
 
 
+# ---------------------------------------------------------------------------
+# collective property tests (hypothesis-stub) against the inter-chip link
+# cost model — the same ChipCluster closed forms the multi-chip plan chooser
+# scores before committing to a sharding
+# ---------------------------------------------------------------------------
+
+from repro.core import isa  # noqa: E402
+from repro.core.machine import PIMSAB  # noqa: E402
+from repro.core.noc import ChipCluster  # noqa: E402
+from repro.core.simulator import Simulator  # noqa: E402
+from repro.kernels.multichip import _wrap_int32, resolve_cluster  # noqa: E402
+from tests._hypothesis_stub import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=30)
+@given(st.sampled_from((2, 3, 4, 6, 8)), st.integers(32, 2**20))
+def test_link_cost_model_properties(chips: int, bits: int):
+    cluster = resolve_cluster(chips, None)
+    assert cluster.chips == chips
+    port = cluster.allreduce_port_bits(bits)
+    # each port moves the classic (N-1)/N of the payload, twice (RS + AG)
+    assert 0 < port < bits
+    assert port >= bits // chips
+    ar = cluster.allreduce_cycles(bits)
+    assert ar >= 2 * cluster.link.stream_cycles(port)
+    # monotone in payload: the plan chooser may safely binary-search sizes
+    assert cluster.allreduce_cycles(2 * bits) >= ar
+    # latency pipelines but never disappears
+    assert cluster.allreduce_rounds() >= 1
+    assert ar >= cluster.link.latency_cycles * (cluster.allreduce_rounds() + 1)
+    # p2p monotone in both distance and payload
+    far = cluster.chips - 1
+    assert cluster.p2p_cycles(0, far, bits) >= cluster.p2p_cycles(0, 0, bits)
+    assert cluster.p2p_cycles(0, far, 2 * bits) >= cluster.p2p_cycles(0, far, bits)
+
+
+@settings(max_examples=20)
+@given(st.sampled_from((2, 4, 8)), st.integers(0, 2**31 - 1))
+def test_host_wrap_allreduce_matches_int32_oracle(chips: int, seed: int):
+    """The cluster executor's host allreduce (int64 partial sum + mod-2^32
+    wrap) must equal both the sequential int32 wrap accumulation a single
+    chip performs and the jnp int32 oracle — addition mod 2^32 is
+    associative, which is the whole bit-exactness argument for K-sharding."""
+    rng = np.random.default_rng(seed)
+    parts = rng.integers(-2**31, 2**31, (chips, 6, 5), dtype=np.int64)
+    host = _wrap_int32(parts.sum(axis=0))
+    acc = np.zeros((6, 5), np.int32)
+    for p in parts:
+        acc = _wrap_int32(acc.astype(np.int64) + p)
+    assert np.array_equal(host, acc)
+    oracle = np.asarray(
+        jax.numpy.sum(jax.numpy.asarray(parts.astype(np.int32)), axis=0))
+    assert np.array_equal(host, oracle)
+
+
+def test_allreduce_closed_form_matches_scheduled_timeline():
+    """The plan chooser's closed-form allreduce cost is exactly what the
+    simulator schedules when the same rounds run as ChipSend/ChipRecv."""
+    for chips, bits in ((2, 4096), (4, 65536), (8, 1 << 18)):
+        cluster = resolve_cluster(chips, None)
+        cfg = cluster.timing_cfg(PIMSAB)
+        port = cluster.allreduce_port_bits(bits)
+        sim = Simulator(cfg)
+        sim.step(isa.ChipSend(chip=0, peer=-1, bits=port, rounds=1,
+                              phase="x:ar:c0", tag="ar"))
+        sim.step(isa.ChipRecv(chip=0, peer=-1, bits=port,
+                              rounds=cluster.allreduce_rounds(), sync=True,
+                              phase="ar.done", after=("x:ar:c0",), tag="ar"))
+        assert sim.res.makespan == pytest.approx(cluster.allreduce_cycles(bits))
+
+
 MULTIDEV_SCRIPT = textwrap.dedent(
     """
     import os
@@ -93,6 +164,19 @@ MULTIDEV_SCRIPT = textwrap.dedent(
     # replicated input: mean-reduce returns ~the same vector, error bounded
     assert np.allclose(np.asarray(red), np.asarray(g), atol=0.05), "compressed psum"
     assert float(jnp.abs(new_err).max()) <= float(jnp.abs(g).max()) / 127 + 1e-6
+
+    # shuffle (all-to-all) vs the single-device block-transpose oracle
+    z = jnp.arange(8 * 8 * 3, dtype=jnp.int32).reshape(8 * 8, 3)
+    sh = shuffle(z, mesh, "model", split_dim=0)
+    want_sh = np.asarray(z).reshape(8, 8, 1, 3).transpose(1, 0, 2, 3).reshape(8 * 8, 3)
+    assert np.array_equal(np.asarray(sh), want_sh), "shuffle"
+
+    # int32 htree allreduce wraps exactly like the single-device wrap-sum
+    rng = np.random.default_rng(3)
+    xi = jnp.asarray(rng.integers(-2**31, 2**31, (8, 4), dtype=np.int64).astype(np.int32))
+    oi = htree_allreduce(xi, mesh, "model")
+    want_i = ((np.asarray(xi).astype(np.int64).sum(0) + 2**31) % 2**32 - 2**31).astype(np.int32)
+    assert np.array_equal(np.asarray(oi), np.tile(want_i, (8, 1))), "int32 htree"
     print("MULTIDEV_OK")
     """
 )

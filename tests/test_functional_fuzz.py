@@ -51,6 +51,8 @@ class _StreamGen:
         self.defined = np.zeros(ROWS, bool)
         self.rf: Set[int] = set()
         self.mask_set = False
+        self._pending_send: Optional[str] = None  # x: token awaiting its recv
+        self._link_seq = 0
         # the preamble is a pure definition (xor-self zero idiom); the
         # harness overwrites the window with random bits after stepping it
         self.prog: List[isa.Instr] = [
@@ -332,6 +334,28 @@ class _StreamGen:
             return isa.Signal(phase=None)
         return isa.Wait()
 
+    def _op_chiplink(self) -> Optional[isa.Instr]:
+        """Cross-chip transfer phases (multi-chip scale-out).  Send/recv
+        pairs share an ``x:``-prefixed token exactly like the allreduce the
+        cluster scheduler emits; the recv only ever waits on a token already
+        published earlier in the stream, so a single-chip replay never
+        deadlocks.  Functionally a no-op — the differential contract pins
+        their link-timeline cycles and SerDes energy instead."""
+        r = self.rng
+        bits = int(r.integers(1, 9)) * 512
+        rounds = int(r.integers(1, 4))
+        if self._pending_send is None:
+            k = self._link_seq
+            self._link_seq += 1
+            self._pending_send = f"x:fz{k}"
+            return isa.ChipSend(chip=0, peer=-1, bits=bits, rounds=1,
+                                tag=f"fz{k}", phase=self._pending_send)
+        tok = self._pending_send
+        self._pending_send = None
+        return isa.ChipRecv(chip=0, peer=-1, bits=bits, rounds=rounds,
+                            sync=bool(r.random() < 0.5), tag=tok[2:],
+                            after=(tok,), phase=f"{tok[2:]}.done")
+
     def build(self, n_ops: int) -> List[isa.Instr]:
         menu = (
             (self._op_add_sub, 5), (self._op_mul, 2), (self._op_mac, 3),
@@ -339,6 +363,7 @@ class _StreamGen:
             (self._op_setmask, 1), (self._op_reduce_intra, 2),
             (self._op_reduce_htree, 2), (self._op_shift, 2),
             (self._op_rf_load, 2), (self._op_const, 3), (self._op_transfer, 1),
+            (self._op_chiplink, 1),
         )
         ops = [f for f, w in menu for _ in range(w)]
         while len(self.prog) - 1 < n_ops:
@@ -401,6 +426,14 @@ def run_differential_stream(seed: int, n_ops: int) -> int:
         for sim in sims:
             sim.step(ins)
     _assert_state_equal(sims, keys)
+    # per-chip timeline invariants (the same ones the cluster scheduler's
+    # ClusterReport.per_chip pins): no resource busier than the makespan,
+    # and overlap never makes the schedule "faster" than its busy time
+    for sim in sims:
+        res = sim.res
+        busy = max(res.busy.values()) if res.busy else 0.0
+        assert busy <= res.makespan + 1e-9
+        assert res.makespan <= res.serialized_cycles + 1e-9
     return len(prog)
 
 
@@ -437,9 +470,13 @@ def test_fuzz_streams_exercise_the_isa():
     names = {type(i).__name__ for i in prog}
     assert {"Add", "Sub", "Mul", "Mac", "Logical", "Copy", "CmpGE", "SetMask",
             "ReduceIntra", "ReduceHTree", "Shift", "RfLoad", "MacConst",
-            "MulConst"} <= names, names
+            "MulConst", "ChipSend", "ChipRecv"} <= names, names
     assert any(getattr(i, "pred", None) is isa.Pred.MASK for i in prog)
     assert any(getattr(i, "pred", None) is isa.Pred.CARRY for i in prog)
     assert any(getattr(i, "cen", False) for i in prog)
     assert any(i.tiles for i in prog)
     assert any(getattr(i, "prec_dst", 0) == 32 for i in prog)  # int32 wrap
+    # cross-chip transfers appear in both flavors: fire-and-forget sends and
+    # synchronizing receives (the ones that charge their stall to "sync")
+    assert any(isinstance(i, isa.ChipRecv) and i.sync for i in prog)
+    assert any(isinstance(i, isa.ChipRecv) and not i.sync for i in prog)

@@ -1,0 +1,331 @@
+"""Multi-chip scale-out: sharded Program execution on a ChipCluster.
+
+Satellite of the scaling suite (docs/benchmarks.md "scaling" section): every
+mesh shape the suite pins — 1×2, 2×2, 2×4 — must execute a matmul chain, a
+conv block and an attention decode step *bit-identically* to the 1-chip
+reference, under both the auto plan and a forced tensor-parallel plan, and
+the declined-plan fallback (replicated) must stay bit-exact too.  Timeline
+invariants (``max(busy) ≤ makespan ≤ serialized`` per chip, overlap sentinel)
+pin the cluster schedule the same way ``tests/test_timeline.py`` pins the
+single-chip one.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.kernels import api
+from repro.kernels import multichip as mc
+from repro.serve.pimsab_step import decode_layer_program
+
+MESHES = [(1, 2), (2, 2), (2, 4)]
+
+
+# ---------------------------------------------------------------------------
+# workloads (cached: the traced Program and its concrete operands)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _matmul_chain():
+    """Two chained int matmuls + relu; K dims (16, 16) divide every mesh."""
+    def f(x, w1, w2):
+        h = api.relu(api.int_matmul(x, w1, x_bits=4, w_bits=4))
+        return api.int_matmul(h, w2, w_bits=4)
+
+    prog = api.trace(f, name="mc_matmul_chain").trace(
+        np.zeros((4, 16), np.int8), np.zeros((16, 16), np.int8),
+        np.zeros((16, 8), np.int8))
+    rng = np.random.default_rng(11)
+    args = (rng.integers(-4, 5, (4, 16), dtype=np.int8),
+            rng.integers(-4, 5, (16, 16), dtype=np.int8),
+            rng.integers(-4, 5, (16, 8), dtype=np.int8))
+    return prog, args
+
+
+@functools.lru_cache(maxsize=None)
+def _conv_block():
+    """conv → relu → conv; the input-channel reduction (C=8) is the TP axis."""
+    def f(x, w1, w2):
+        h = api.relu(api.conv2d(x, w1, padding=1, x_bits=3, w_bits=3))
+        return api.conv2d(h, w2, padding=1, w_bits=3)
+
+    prog = api.trace(f, name="mc_conv_block").trace(
+        np.zeros((1, 8, 6, 6), np.int8), np.zeros((8, 8, 3, 3), np.int8),
+        np.zeros((8, 8, 3, 3), np.int8))
+    rng = np.random.default_rng(12)
+    args = (rng.integers(-3, 4, (1, 8, 6, 6), dtype=np.int8),
+            rng.integers(-3, 4, (8, 8, 3, 3), dtype=np.int8),
+            rng.integers(-3, 4, (8, 8, 3, 3), dtype=np.int8))
+    return prog, args
+
+
+@functools.lru_cache(maxsize=None)
+def _attn_decode():
+    """One attention decode step (qk → fixed-point softmax → pv), stateless.
+
+    head_dim=16 with 3-bit q/k keeps every score inside the 10-bit envelope
+    (16·4·4 = 256 < 2^9) so the sharded partial sums wrap identically."""
+    def f(q, kc, vc):
+        s = api.attention_qk(q, kc, q_bits=3, k_bits=3, out_bits=10)
+        p = api.softmax_fixedpoint(s, in_frac=7)
+        return api.attention_pv(p, vc)
+
+    prog = api.trace(f, name="mc_attn_decode").trace(
+        np.zeros((1, 16), np.int8), np.zeros((8, 16), np.int8),
+        np.zeros((8, 16), np.int8))
+    rng = np.random.default_rng(13)
+    args = (rng.integers(-3, 4, (1, 16), dtype=np.int8),
+            rng.integers(-3, 4, (8, 16), dtype=np.int8),
+            rng.integers(-3, 4, (8, 16), dtype=np.int8))
+    return prog, args
+
+
+WORKLOADS = {
+    "matmul_chain": _matmul_chain,
+    "conv_block": _conv_block,
+    "attn_decode": _attn_decode,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _reference(name):
+    prog, args = WORKLOADS[name]()
+    return np.asarray(api.compile(prog, "pimsab")(*args))
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: parametrized sharded bit-exactness across meshes and plans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh", MESHES, ids=lambda m: f"{m[0]}x{m[1]}")
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_sharded_bit_exact_auto(name, mesh):
+    prog, args = WORKLOADS[name]()
+    cluster = api.ChipCluster(mesh=mesh)
+    ex = api.compile_cluster(prog, cluster=cluster)
+    assert isinstance(ex, api.ClusterExecutor)
+    assert ex.plan in ("tp", "pp", "replicated")
+    out = np.asarray(ex(*args))
+    assert np.array_equal(_reference(name), out), (
+        f"{name} on {mesh} plan={ex.plan} diverged from the 1-chip result")
+    # every report carries the machine-readable plan decision
+    assert any(n.startswith("N-PLAN-CHIP") for n in ex.notes)
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=lambda m: f"{m[0]}x{m[1]}")
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_sharded_bit_exact_forced_tp(name, mesh):
+    # forced TP still falls back to replicated when the cost model declines
+    # every shard — either way the result must match bit-for-bit
+    prog, args = WORKLOADS[name]()
+    ex = api.compile_cluster(prog, cluster=api.ChipCluster(mesh=mesh),
+                             plan="tp")
+    assert ex.plan in ("tp", "replicated")
+    assert np.array_equal(_reference(name), np.asarray(ex(*args)))
+
+
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_sharded_bit_exact_forced_pp(name):
+    # every workload has 3 ops — enough for 2 pipeline stages on a 1x2 mesh;
+    # execution stages the segments across chips and must stay bit-exact
+    prog, args = WORKLOADS[name]()
+    ex = api.compile_cluster(prog, cluster=api.ChipCluster(mesh=(1, 2)),
+                             plan="pp")
+    assert ex.plan == "pp"
+    assert any(mc.NOTE_CHIP_PP in n for n in ex.notes)
+    assert np.array_equal(_reference(name), np.asarray(ex(*args)))
+
+
+def test_decode_layer_forced_pp_2x2_bit_exact():
+    # the 6-op decode layer fills 4 pipeline stages on the 2x2 mesh
+    prog = decode_layer_program()
+    rng = np.random.default_rng(7)
+    D = 16
+    args = (rng.integers(-3, 4, (8, D), dtype=np.int8),
+            rng.integers(-3, 4, (8, D), dtype=np.int8),
+            rng.integers(-3, 4, (1, D), dtype=np.int8),
+            rng.integers(-7, 8, (D, 256), dtype=np.int8),
+            rng.integers(-7, 8, (256, 512), dtype=np.int8),
+            rng.integers(-7, 8, (512, 256), dtype=np.int8))
+    ref = np.asarray(api.compile(prog, "pimsab")(*args))
+    ex = api.compile_cluster(prog, cluster=api.ChipCluster(mesh=(2, 2)),
+                             plan="pp")
+    assert ex.plan == "pp"
+    assert np.array_equal(ref, np.asarray(ex(*args)))
+
+
+def test_forced_pp_declined_raises():
+    # 3 ops cannot fill 8 pipeline stages: a *forced* pp plan is an error
+    prog, _ = _matmul_chain()
+    with pytest.raises(ValueError, match="pipeline plan"):
+        api.compile_cluster(prog, cluster=api.ChipCluster(mesh=(2, 4)),
+                            plan="pp")
+
+
+def test_declined_tp_falls_back_replicated_bit_exact():
+    # a K=8 matmul cannot shard 16 ways (divisibility): forced TP declines
+    # every op and the replicated fallback carries the decline note
+    def f(x, w):
+        return api.int_matmul(x, w, x_bits=3, w_bits=3)
+
+    prog = api.trace(f, name="mc_tiny_mm").trace(
+        np.zeros((2, 8), np.int8), np.zeros((8, 4), np.int8))
+    rng = np.random.default_rng(5)
+    a = rng.integers(-3, 4, (2, 8), dtype=np.int8)
+    b = rng.integers(-3, 4, (8, 4), dtype=np.int8)
+    ex = api.compile_cluster(prog, cluster=api.ChipCluster(mesh=(4, 4)),
+                             plan="tp")
+    assert ex.plan == "replicated"
+    assert any(n.startswith(mc.NOTE_CHIP_REPL) for n in ex.notes)
+    ref = np.asarray(api.compile(prog, "pimsab")(a, b))
+    assert np.array_equal(ref, np.asarray(ex(a, b)))
+
+
+def test_chips_one_passthrough():
+    # chips=1 (or a 1x1 cluster) is the ordinary single-chip Executor
+    prog, args = _matmul_chain()
+    ex = api.compile_cluster(prog, chips=1)
+    assert isinstance(ex, api.Executor)
+    assert np.array_equal(_reference("matmul_chain"), np.asarray(ex(*args)))
+    ex2 = api.compile(prog, "pimsab", chips=1)
+    assert isinstance(ex2, api.Executor)
+
+
+def test_compile_chips_kwarg_routes_to_cluster():
+    prog, args = _matmul_chain()
+    ex = api.compile(prog, "pimsab", chips=2)
+    assert isinstance(ex, api.ClusterExecutor)
+    assert ex.cluster.chips == 2
+    assert np.array_equal(_reference("matmul_chain"), np.asarray(ex(*args)))
+
+
+def test_compile_chips_rejects_states_and_other_backends():
+    prog, _ = _matmul_chain()
+    with pytest.raises(NotImplementedError, match="pimsab"):
+        api.compile(prog, "xla", chips=2)
+    st = api.ResidentState("mc_state", (8, 16), 3)
+    with pytest.raises(NotImplementedError, match="ResidentState"):
+        api.compile(prog, "pimsab", chips=2, states={1: st})
+
+
+# ---------------------------------------------------------------------------
+# decode layer: the scaling suite's transformer workload, bit-exact + monotone
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chips", [2, 4, 8])
+def test_decode_layer_sharded_bit_exact(chips):
+    prog = decode_layer_program()
+    rng = np.random.default_rng(7)
+    D = 16
+    args = (rng.integers(-3, 4, (8, D), dtype=np.int8),
+            rng.integers(-3, 4, (8, D), dtype=np.int8),
+            rng.integers(-3, 4, (1, D), dtype=np.int8),
+            rng.integers(-7, 8, (D, 256), dtype=np.int8),
+            rng.integers(-7, 8, (256, 512), dtype=np.int8),
+            rng.integers(-7, 8, (512, 256), dtype=np.int8))
+    ref = np.asarray(api.compile(prog, "pimsab")(*args))
+    ex = api.compile_cluster(prog, chips=chips)
+    assert ex.plan == "tp"  # the gemm reduction dims all divide `chips`
+    assert np.array_equal(ref, np.asarray(ex(*args)))
+
+
+def test_decode_layer_strong_scaling_monotone():
+    prog = decode_layer_program()
+    base = api.cluster_timing_report(prog, chips=1)
+    assert base.plan == "single"
+    prev = base.total_cycles
+    for chips in (2, 4, 8):
+        rep = api.cluster_timing_report(prog, chips=chips)
+        # the replicated candidate guarantees N-chip never loses to 1-chip
+        assert rep.total_cycles <= base.total_cycles
+        assert rep.total_cycles <= prev + 1e-9
+        prev = rep.total_cycles
+
+
+# ---------------------------------------------------------------------------
+# timeline invariants (per chip) and the overlap sentinel
+# ---------------------------------------------------------------------------
+
+def _check_per_chip(rep):
+    assert len(rep.per_chip) == rep.chips
+    for p in rep.per_chip:
+        busy = max(p["busy"].values()) if p["busy"] else 0.0
+        assert busy <= p["makespan"] + 1e-9
+        assert p["makespan"] <= p["serialized_cycles"] + 1e-9
+    assert rep.total_cycles == pytest.approx(
+        max(p["makespan"] for p in rep.per_chip))
+
+
+@pytest.mark.parametrize("chips", [2, 4, 8])
+def test_cluster_timeline_invariants(chips):
+    rep = api.cluster_timing_report(decode_layer_program(), chips=chips)
+    _check_per_chip(rep)
+    # overlap sentinel: the scheduled makespan never exceeds the
+    # serialized (no-overlap) schedule, and link traffic is accounted
+    assert rep.total_cycles <= rep.serial_cycles + 1e-9
+    if rep.plan == "tp":
+        assert rep.link_bits > 0
+        assert rep.energy_pj.get("link", 0.0) > 0.0
+
+
+def test_decode_layer_overlap_is_real():
+    # at 4 chips the prefetch pass hides DRAM loads behind the allreduce:
+    # the overlapped makespan lands strictly below the serialized schedule
+    rep = api.cluster_timing_report(decode_layer_program(), chips=4)
+    assert rep.plan == "tp"
+    assert rep.overlapped_cycles > 0
+    assert rep.total_cycles < rep.serial_cycles
+
+
+def test_weak_scaling_flat():
+    prog, _ = _matmul_chain()
+    base = api.cluster_timing_report(prog, chips=1).total_cycles
+    for chips in (2, 4, 8):
+        rep = api.weak_scaling_report(prog, chips=chips)
+        assert rep.plan == "dp"
+        assert rep.total_cycles == pytest.approx(base)
+        assert rep.link_bits == 0
+        _check_per_chip(rep)
+
+
+def test_report_json_roundtrip():
+    import json
+
+    rep = api.cluster_timing_report(_matmul_chain()[0], chips=2)
+    d = json.loads(json.dumps(rep.to_json()))
+    assert d["chips"] == 2
+    assert d["total_cycles"] == pytest.approx(rep.total_cycles)
+    assert len(d["per_chip"]) == 2
+
+
+def test_golden_interchip_allreduce_timeline():
+    """Golden regression on the inter-chip allreduce schedule (2x2 mesh).
+
+    Pins the link cost model, the shared ``x:`` token rendezvous, and the
+    sync-stall accounting; regenerate consciously with
+    ``PYTHONPATH=src python scripts/make_golden_interchip.py``."""
+    import json
+    from pathlib import Path
+
+    from scripts.make_golden_interchip import timeline_json
+
+    golden_path = (Path(__file__).parent / "golden" /
+                   "interchip_allreduce_timeline.json")
+    golden = json.loads(golden_path.read_text())
+    now = timeline_json()
+    assert now == golden, (
+        "inter-chip allreduce timeline moved; if intentional, rerun "
+        "scripts/make_golden_interchip.py")
+    for p in now["per_chip"]:
+        busy = max(p["busy"].values())
+        assert busy <= p["makespan"] <= p["serialized_cycles"]
+
+
+def test_cluster_executor_caching():
+    prog, _ = _matmul_chain()
+    api.compile_cluster(prog, chips=2)
+    info0 = api.compile_cache_info()
+    ex = api.compile_cluster(prog, chips=2)
+    info1 = api.compile_cache_info()
+    assert isinstance(ex, api.ClusterExecutor)
+    assert info1.hits > info0.hits
